@@ -1,0 +1,41 @@
+"""Fig. 13: throughput vs existing systems (EDDL, PipeDream, Dapple, HetPipe)
+on Env B and Env C.
+
+Paper: Asteroid gains 1.6x-6.9x over EDDL, 1.3x-2.1x over PipeDream,
+1.2x-1.8x over Dapple, 1.2x-1.9x over HetPipe."""
+
+from __future__ import annotations
+
+from repro.core.hardware import env_b, env_c
+from repro.core.planner import (auto_microbatch, plan_dp, plan_hetpipe_hdp,
+                                plan_homogeneous_hpp)
+from repro.core.profiler import Profile
+from repro.configs.paper_models import PAPER_BATCH, PAPER_MODELS
+
+from .common import row
+
+ENVS = [("B", env_b), ("C", env_c)]
+
+
+def run(models=("efficientnet-b1", "mobilenetv2", "resnet50", "bert-small")) -> list[str]:
+    rows = []
+    for model in models:
+        B = PAPER_BATCH[model]
+        for env_name, mk in ENVS:
+            cluster = mk().sorted_by_memory()
+            prof = Profile.analytic(PAPER_MODELS[model](), cluster, max_batch=64)
+            ours = auto_microbatch(prof, B, arch=model)
+            mb = ours.micro_batch
+            eddl = plan_dp(prof, B, mb, heterogeneous=True)
+            pipedream = plan_homogeneous_hpp(prof, B, mb, name="pipedream")
+            dapple = plan_homogeneous_hpp(prof, B, mb, include_allreduce=True,
+                                          name="dapple")
+            het_lat, _ = plan_hetpipe_hdp(prof, B, mb, n_groups=2)
+            rows.append(row(
+                f"fig13/{model}/env{env_name}", ours.latency,
+                tput=f"{ours.throughput:.1f}",
+                vs_eddl=f"{eddl.latency / ours.latency:.1f}x",
+                vs_pipedream=f"{pipedream.latency / ours.latency:.1f}x",
+                vs_dapple=f"{dapple.latency / ours.latency:.1f}x",
+                vs_hetpipe=f"{het_lat / ours.latency:.1f}x"))
+    return rows

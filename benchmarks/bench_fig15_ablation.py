@@ -1,0 +1,49 @@
+"""Fig. 15: ablations.
+
+(a) planning: naive (homogeneous, no memory/bandwidth awareness) ->
+    + inter-stage planning -> + intra-stage planning (full Asteroid).
+(b) 1F1B micro-batch scheduling: per-stage peak memory and throughput for
+    K_p policies a / b / c / ours / gpipe — ours must have the smallest
+    peak memory at comparable throughput."""
+
+from __future__ import annotations
+
+from repro.core.hardware import env_c
+from repro.core.planner import auto_microbatch, plan_homogeneous_hpp, plan_hpp
+from repro.core.profiler import Profile
+from repro.core.simulator import simulate
+from repro.core.hardware import JETSON_TX2, Cluster
+from repro.configs.paper_models import PAPER_MODELS
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    # --- (a) planning ablation on Env C ---------------------------------
+    for model in ("efficientnet-b1", "mobilenetv2"):
+        prof = Profile.analytic(PAPER_MODELS[model](),
+                                env_c().sorted_by_memory(), max_batch=64)
+        B = 2048
+        naive = plan_homogeneous_hpp(prof, B, 32, name="naive")
+        inter = plan_hpp(prof, B, 32, intra_opt=False)
+        full = plan_hpp(prof, B, 32, intra_opt=True)
+        rows.append(row(
+            f"fig15a/{model}", full.latency,
+            naive_tput=f"{naive.throughput:.1f}",
+            inter_tput=f"{inter.throughput:.1f}",
+            full_tput=f"{full.throughput:.1f}",
+            gain_vs_naive=f"{naive.latency / full.latency:.2f}x"))
+
+    # --- (b) K_p policy comparison (3x TX2, EfficientNet-B1) --------------
+    prof = Profile.analytic(PAPER_MODELS["efficientnet-b1"](),
+                            Cluster((JETSON_TX2,) * 3).sorted_by_memory(),
+                            max_batch=64)
+    plan = plan_hpp(prof, 512, 16, max_stages=3)
+    for policy in ("ours", "a", "b", "c", "gpipe"):
+        res = simulate(plan, prof, policy=policy)
+        rows.append(row(
+            f"fig15b/kp_{policy}", res.makespan,
+            peak_mem_mb=f"{res.max_peak_mem / 1e6:.0f}",
+            tput=f"{plan.global_batch / res.makespan:.1f}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Fig. 18: scalability on 1-8 homogeneous Jetson Nanos, micro-batch 32 per
+device (global batch 32*N), 100 Mbps.
+
+Paper: Asteroid reaches 1.3x-2.2x over DP on EfficientNet-B1 and near-linear
+scaling on MobileNetV2, while GPipe PP degrades with more stages and OOMs at
+6+ devices."""
+
+from __future__ import annotations
+
+from repro.core.allocation import AllocationError
+from repro.core.hardware import JETSON_NANO, Cluster
+from repro.core.planner import auto_microbatch, plan_dp, plan_gpipe
+from repro.core.profiler import Profile
+from repro.configs.paper_models import PAPER_MODELS
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    for model in ("efficientnet-b1", "mobilenetv2"):
+        table = PAPER_MODELS[model]()
+        for n in (1, 2, 4, 8):
+            cluster = Cluster((JETSON_NANO,) * n)
+            prof = Profile.analytic(table, cluster, max_batch=64)
+            B = 32 * n
+            ours = auto_microbatch(prof, B, arch=model)
+            dp = plan_dp(prof, B, ours.micro_batch)
+
+            def safe_pp():
+                try:
+                    p = plan_gpipe(prof, B, 32)
+                    mems = p.memory_per_device(prof)
+                    if any(m > JETSON_NANO.mem_bytes for m in mems.values()):
+                        return "OOM"
+                    return f"{p.throughput:.1f}"
+                except AllocationError:
+                    return "OOM"
+
+            rows.append(row(
+                f"fig18/{model}/n{n}", ours.latency,
+                tput=f"{ours.throughput:.1f}",
+                dp_tput=f"{dp.throughput:.1f}",
+                pp_tput=safe_pp(),
+                vs_dp=f"{dp.latency / ours.latency:.2f}x"))
+    return rows

@@ -1,0 +1,48 @@
+"""Roofline table from dry-run artifacts (§Roofline deliverable).
+
+Reads artifacts/dryrun/*.json and reports, per (arch × shape × mesh):
+compute / memory / collective roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs, and the MFU bound."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import Roofline, from_record, table
+
+from .common import row
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_rooflines() -> list[Roofline]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or rec.get("tag"):
+            continue
+        out.append(from_record(rec))
+    return out
+
+
+def run() -> list[str]:
+    rows = []
+    for r in load_rooflines():
+        rows.append(row(
+            f"roofline/{r.arch}/{r.shape}/{r.mesh}", r.bound_s,
+            compute_s=f"{r.compute_s:.4f}",
+            memory_s=f"{r.memory_s:.4f}",
+            collective_s=f"{r.collective_s:.4f}",
+            dominant=r.dominant,
+            useful=f"{r.useful_ratio:.2f}",
+            mfu_bound=f"{r.mfu_bound:.3f}"))
+    if not rows:
+        rows.append(row("roofline/NO_ARTIFACTS", 0.0,
+                        hint="run python -m repro.launch.dryrun --all first"))
+    return rows
+
+
+def print_table():
+    print(table(load_rooflines()))

@@ -1,0 +1,36 @@
+"""Table 1: single-device training epoch time across device classes.
+
+Validates the device cost model: the paper reports ~160x (Nano) and ~67x
+(TX2) slowdowns vs an A100 on MobileNetV2."""
+
+from __future__ import annotations
+
+from repro.core.hardware import A100, JETSON_NANO, JETSON_TX2, Cluster
+from repro.core.profiler import Profile
+from repro.configs.paper_models import PAPER_MODELS
+
+from .common import row
+
+EPOCH_SAMPLES = {"efficientnet-b1": 50000, "mobilenetv2": 50000,
+                 "resnet50": 38400}
+BATCH = {"efficientnet-b1": 64, "mobilenetv2": 64, "resnet50": 32}
+
+
+def run() -> list[str]:
+    rows = []
+    for model in ("efficientnet-b1", "mobilenetv2", "resnet50"):
+        times = {}
+        for dev in (A100, JETSON_TX2, JETSON_NANO):
+            prof = Profile.analytic(PAPER_MODELS[model](), Cluster((dev,)),
+                                    max_batch=BATCH[model])
+            b = BATCH[model]
+            step = prof.t_both(0, b, 0, prof.table.L)
+            times[dev.name] = step * (EPOCH_SAMPLES[model] / b)
+        rows.append(row(
+            f"table1/{model}", times["nano"],
+            epoch_a100_s=f"{times['a100']:.1f}",
+            epoch_tx2_min=f"{times['tx2'] / 60:.1f}",
+            epoch_nano_min=f"{times['nano'] / 60:.1f}",
+            slowdown_nano=f"{times['nano'] / times['a100']:.0f}x",
+            slowdown_tx2=f"{times['tx2'] / times['a100']:.0f}x"))
+    return rows

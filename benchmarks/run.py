@@ -1,0 +1,56 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--only table4 fig13 ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_fig13_systems, bench_fig14_convergence,
+               bench_fig15_ablation, bench_fig16_17_fault,
+               bench_fig18_scalability, bench_roofline, bench_table1_ondevice,
+               bench_table2_comm_volume, bench_table4_throughput,
+               bench_table7_overhead)
+
+SUITES = {
+    "table1": bench_table1_ondevice.run,
+    "table2": bench_table2_comm_volume.run,
+    "table4": bench_table4_throughput.run,
+    "fig13": bench_fig13_systems.run,
+    "fig14": bench_fig14_convergence.run,
+    "fig15": bench_fig15_ablation.run,
+    "fig16": bench_fig16_17_fault.run,
+    "fig18": bench_fig18_scalability.run,
+    "table7": bench_table7_overhead.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    names = args.only or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            for line in SUITES[name]():
+                print(line)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suite(s) failed")
+
+
+if __name__ == "__main__":
+    main()

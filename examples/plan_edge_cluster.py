@@ -1,0 +1,30 @@
+"""Reproduce the paper's planning configurations (Fig. 12 style): show the
+HPP plan Asteroid picks for each model x edge environment, illustrating the
+paper's qualitative claims — CNNs get DP on early (parameter-light,
+activation-heavy) layers and PP on late layers; BERT gets a straight
+pipeline.
+
+    PYTHONPATH=src python examples/plan_edge_cluster.py
+"""
+
+from repro.configs.paper_models import PAPER_BATCH, PAPER_MODELS
+from repro.core.hardware import ENVS, MBPS_1000, env_b
+from repro.core.planner import auto_microbatch
+from repro.core.profiler import Profile
+
+SETTINGS = [("A", "100Mbps", lambda: ENVS["A"]()),
+            ("B", "100Mbps", lambda: ENVS["B"]()),
+            ("B", "1000Mbps", lambda: env_b(MBPS_1000))]
+
+for model in ("efficientnet-b1", "mobilenetv2", "resnet50", "bert-small"):
+    print(f"\n=== {model} (global batch {PAPER_BATCH[model]}) ===")
+    for env_name, bw, mk in SETTINGS:
+        cluster = mk().sorted_by_memory()
+        prof = Profile.analytic(PAPER_MODELS[model](), cluster, max_batch=64)
+        plan = auto_microbatch(prof, PAPER_BATCH[model], arch=model)
+        desc = " | ".join(
+            f"L{st.layers[0]}-{st.layers[1]}:" +
+            "+".join(cluster.devices[d].name[0].upper() for d in st.group)
+            for st in plan.stages)
+        print(f"  Env {env_name} ({bw}): {len(plan.stages)} stages "
+              f"[{desc}] tput={plan.throughput:.0f}/s")

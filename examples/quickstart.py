@@ -1,0 +1,38 @@
+"""Quickstart: plan an Asteroid HPP configuration for a heterogeneous edge
+cluster and compare it against DP / PP — the paper's core result in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core.hardware import env_c
+from repro.core.planner import auto_microbatch, plan_dp, plan_gpipe
+from repro.core.profiler import Profile
+from repro.core.simulator import simulate
+
+# 1. Profile the model on the cluster (1x NX + 2x TX2 + 3x Nano, 100 Mbps).
+table = PAPER_MODELS["efficientnet-b1"]()
+cluster = env_c().sorted_by_memory()
+profile = Profile.analytic(table, cluster, max_batch=64)
+
+# 2. Run the Asteroid planner (Algorithm 2 + Algorithm 1 inside).
+plan = auto_microbatch(profile, global_batch=2048, arch="efficientnet-b1")
+print(f"Asteroid plan: {len(plan.stages)} stages, micro-batch "
+      f"{plan.micro_batch} x {plan.n_micro}")
+for p, st in enumerate(plan.stages):
+    devs = [cluster.devices[d].name for d in st.group]
+    print(f"  stage {p}: layers {st.layers} on {devs}, samples {st.alloc}, "
+          f"K_p={st.k_p}")
+
+# 3. Validate the dominant-step estimate with the event-accurate simulator.
+sim = simulate(plan, profile, policy="ours")
+print(f"predicted round latency {plan.latency:.2f}s, simulated "
+      f"{sim.makespan:.2f}s, peak device memory "
+      f"{sim.max_peak_mem / 1e9:.2f} GB")
+
+# 4. Compare with the conventional baselines.
+dp = plan_dp(profile, 2048, plan.micro_batch)
+pp = plan_gpipe(profile, 2048, plan.micro_batch)
+print(f"throughput: Asteroid {plan.throughput:.0f} samples/s | "
+      f"DP {dp.throughput:.0f} ({dp.latency / plan.latency:.1f}x slower) | "
+      f"PP {pp.throughput:.0f} ({pp.latency / plan.latency:.1f}x slower)")

@@ -1,0 +1,75 @@
+"""HLO analysis: collective-communication byte accounting.
+
+``cost_analysis()`` has no collective term, so we parse the compiled (or
+lowered stablehlo) module text and sum operand bytes of every collective op:
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Bytes counted are the *per-device* payload of each op (operand size), which
+is what crosses that device's links in a ring/bidirectional implementation
+up to a small constant; the roofline divides by per-link bandwidth.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128]' -> bytes."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    size = DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * size
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes per collective op kind (per device)."""
+    out: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result-shape = opname(...): e.g.  %ag = bf16[4,128]{...} all-gather(
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[\w\[\],\s]+\)?)\{?[\d,]*\}?\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", stripped)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        total = 0
+        if shapes_str.startswith("("):
+            for part in shapes_str.strip("() ").split("),"):
+                for sub in part.split(","):
+                    if "[" in sub:
+                        total += _shape_bytes(sub + ("]" if "]" not in sub else ""))
+            # fall back to regex-all on the tuple
+            total = sum(_shape_bytes(s.group(0))
+                        for s in _SHAPE_RE.finditer(shapes_str))
+        else:
+            total = _shape_bytes(shapes_str)
+        out[op] += total
+        counts[op + "_count"] += 1
+    out.update(counts)
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    d = collective_bytes(hlo_text)
+    return sum(v for k, v in d.items() if not k.endswith("_count"))

@@ -1,0 +1,114 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch, shape, mesh), all in seconds:
+
+  compute   = HLO_FLOPs_per_device / peak_FLOP/s
+  memory    = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` reports per-partition numbers (verified empirically), so
+no division by chip count is needed.  MODEL_FLOPS uses 6·N·D with N =
+active params (MoE) — the useful-work yardstick against compiled FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_device: float
+    hlo_flops_per_device: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/padding/redundancy."""
+        if self.hlo_flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.hlo_flops_per_device
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization if execution hit the dominant roofline."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.model_flops_per_device / PEAK_FLOPS / self.bound_s
+
+
+def model_flops(active_params: float, tokens: float, training: bool) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference."""
+    return (6.0 if training else 2.0) * active_params * tokens
+
+
+def from_record(rec: dict) -> Roofline:
+    """Build from a dry-run artifact record (see launch/dryrun.py).
+
+    Prefers the loop-aware jaxpr cost (``jcost``) over XLA's
+    ``cost_analysis`` — the latter counts scan bodies once, under-reporting
+    layer-scanned models by ~depth×.  The jcost byte count is the *unfused*
+    upper bound on HBM traffic (see analysis/jaxpr_cost.py)."""
+    if "jcost" in rec:
+        flops = rec["jcost"]["flops"]
+        bytes_acc = rec["jcost"]["bytes"]
+        coll = rec["jcost"]["collective_bytes"]
+    else:
+        flops = rec["cost"].get("flops", 0.0)
+        bytes_acc = rec["cost"].get("bytes accessed", 0.0)
+        coll = rec.get("collective_bytes_total", 0)
+    chips = rec["n_devices"]
+    tokens_global = rec["tokens_global"]
+    mf = model_flops(rec["active_params"], tokens_global / chips,
+                     rec["kind"] == "train")
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_acc / HBM_BW,
+        collective_s=coll / ICI_BW,
+        model_flops_per_device=mf,
+        hlo_flops_per_device=flops,
+    )
+
+
+def load_records(path: str) -> list[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    return recs
+
+
+def table(rooflines: list[Roofline]) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':9s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+           f"{'useful':>7s} {'MFUbound':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rooflines:
+        lines.append(
+            f"{r.arch:26s} {r.shape:12s} {r.mesh:9s} {r.compute_s:10.4f} "
+            f"{r.memory_s:10.4f} {r.collective_s:10.4f} {r.dominant:>10s} "
+            f"{r.useful_ratio:7.2f} {r.mfu_bound:8.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,114 @@
+"""Checkpointing: npz-sharded pytree save/restore + stage-backup helpers.
+
+Layout: <dir>/<name>.meta.json (treedef + shapes) and <name>.<i>.npz shards.
+Also provides the in-memory stage replication used by the fault-tolerance
+runtime (topology-driven backups, §3.4)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import ml_dtypes
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+SHARD_BYTES = 1 << 30
+
+# numpy cannot serialize ml_dtypes (bfloat16, fp8): store raw bits + dtype
+_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_numpy(leaf):
+    arr = np.asarray(jax.device_get(leaf))
+    name = arr.dtype.name
+    if name in _BITCAST:
+        return arr.view(_BITCAST[name]), name
+    return arr, name
+
+
+def _from_numpy(arr, dtype_name):
+    if dtype_name in _BITCAST:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, name: str, tree) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "shards": [],
+            "dtypes": []}
+    shard, size, idx = {}, 0, 0
+    for i, leaf in enumerate(leaves):
+        arr, dtype_name = _to_numpy(leaf)
+        meta["dtypes"].append(dtype_name)
+        shard[f"leaf_{i}"] = arr
+        size += arr.nbytes
+        if size >= SHARD_BYTES:
+            np.savez(os.path.join(path, f"{name}.{idx}.npz"), **shard)
+            meta["shards"].append(idx)
+            shard, size, idx = {}, 0, idx + 1
+    if shard:
+        np.savez(os.path.join(path, f"{name}.{idx}.npz"), **shard)
+        meta["shards"].append(idx)
+    with open(os.path.join(path, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, name: str, like):
+    """Restore into the structure (and shardings) of ``like``."""
+    with open(os.path.join(path, f"{name}.meta.json")) as f:
+        meta = json.load(f)
+    arrays = {}
+    for idx in meta["shards"]:
+        with np.load(os.path.join(path, f"{name}.{idx}.npz")) as z:
+            arrays.update({k: z[k] for k in z.files})
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves_like) == meta["n_leaves"], "checkpoint/tree mismatch"
+    new_leaves = []
+    dtypes = meta.get("dtypes") or [None] * len(leaves_like)
+    for i, ref in enumerate(leaves_like):
+        arr = arrays[f"leaf_{i}"]
+        if dtypes[i]:
+            arr = _from_numpy(arr, dtypes[i])
+        assert arr.shape == ref.shape, (i, arr.shape, ref.shape)
+        if hasattr(ref, "sharding"):
+            new_leaves.append(jax.device_put(jnp.asarray(arr, ref.dtype), ref.sharding))
+        else:
+            new_leaves.append(jnp.asarray(arr, ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# Stage replication (fault tolerance)
+# ---------------------------------------------------------------------------
+
+
+class StageBackupStore:
+    """In-memory topology-driven replica store: stage -> snapshot on the
+    backup node (here: host memory standing in for the next-stage device)."""
+
+    def __init__(self):
+        self._store: dict[int, object] = {}
+        self.bytes_transferred = 0
+
+    def backup(self, stage: int, params) -> None:
+        snap = jax.tree.map(lambda x: np.asarray(x).copy(), params)
+        self._store[stage] = snap
+        self.bytes_transferred += sum(a.nbytes for a in jax.tree.leaves(snap))
+
+    def restore(self, stage: int):
+        if stage not in self._store:
+            raise KeyError(f"no backup for stage {stage}")
+        return jax.tree.map(jnp.asarray, self._store[stage])
+
+    def has(self, stage: int) -> bool:
+        return stage in self._store

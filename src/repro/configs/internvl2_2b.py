@@ -1,0 +1,26 @@
+"""InternVL2-2B [arXiv:2404.16821] — InternLM2-1.8B language backbone.
+
+24L, d_model=2048, 16 heads (GQA kv=8), d_ff=8192, vocab=92553.
+The InternViT-300M vision encoder + MLP projector are a stub: 256 patch
+embeddings (1024-d) arrive precomputed and are projected into the prefix.
+"""
+
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+ARCH_ID = "internvl2-2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        n_layers=24,
+        d_model=2048,
+        vocab_size=92553,
+        d_ff=8192,
+        attn=AttentionConfig(n_heads=16, n_kv_heads=8, head_dim=128,
+                             rope_theta=10000.0),
+        pattern=(LayerSpec(kind="attn", mlp="mlp"),),
+        act="silu",
+        prefix_len=256,              # stub ViT patch tokens
+        source="arXiv:2404.16821",
+    )

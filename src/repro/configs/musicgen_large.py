@@ -1,0 +1,28 @@
+"""MusicGen-large [arXiv:2306.05284] — decoder backbone over EnCodec tokens.
+
+48L, d_model=2048, 32 heads (kv=32), d_ff=8192, vocab=2048 (EnCodec codebook
+size), 4 codebooks with the delay interleaving pattern.  The EnCodec codec
+and T5 text encoder are stubs: conditioning arrives as precomputed prefix
+embeddings (see repro.models.frontend).
+"""
+
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+ARCH_ID = "musicgen-large"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        n_layers=48,
+        d_model=2048,
+        vocab_size=2048,
+        d_ff=8192,
+        attn=AttentionConfig(n_heads=32, n_kv_heads=32, head_dim=64,
+                             rope_theta=10000.0),
+        pattern=(LayerSpec(kind="attn", mlp="mlp"),),
+        act="gelu",
+        n_codebooks=4,
+        prefix_len=64,               # stub text-conditioning prefix
+        source="arXiv:2306.05284",
+    )

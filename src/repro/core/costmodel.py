@@ -1,0 +1,142 @@
+"""Asteroid cost models: Eq. 1/2 (comm volume), Eq. 3 (memory), Eq. 5
+(AllReduce time), and the dominant-step HPP-Round latency (Eqs. 4, 6, 11)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .hardware import Cluster
+from .profiler import GRAD_BYTES, LayerTable, Profile
+
+OPT_STATE_BYTES_PER_PARAM = 8      # Adam m+v fp32 (per fp32 param)
+
+
+# ---------------------------------------------------------------------------
+# §2.3 communication-volume analysis
+# ---------------------------------------------------------------------------
+
+
+def hdp_volume(model_param_bytes: float, groups: Sequence[dict]) -> float:
+    """Eq. (1): HetPipe-style Hybrid Data Parallelism volume per mini-batch.
+
+    groups: [{"batch": beta_i, "act_bytes": [a_{i,1}..a_{i,|g|-1}]}, ...]
+    """
+    G = len(groups)
+    intra = sum(2.0 * g["batch"] * sum(g["act_bytes"]) for g in groups)
+    if G == 1:
+        return intra
+    return 2.0 * G * model_param_bytes + intra
+
+
+def hpp_volume(stage_param_bytes: Sequence[float], group_sizes: Sequence[int],
+               boundary_act_bytes: Sequence[float], global_batch: int) -> float:
+    """Eq. (2): Hybrid Pipeline Parallelism volume per mini-batch."""
+    G = len(stage_param_bytes)
+    allreduce = sum(2.0 * (g - 1) * p for p, g in zip(stage_param_bytes, group_sizes))
+    if G == 1:
+        return allreduce
+    pipe = 2.0 * global_batch * sum(boundary_act_bytes)
+    return allreduce + pipe
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 memory model
+# ---------------------------------------------------------------------------
+
+
+def kp_policy(P: int, p: int, policy: str = "ours") -> int:
+    """Warm-up depth K_p for stage p (0-indexed) in a P-stage pipeline.
+
+    'ours'  : 2*(P-p)-1   (the paper's choice)
+    'a'     : 2*(P-p)
+    'b'     : P-p
+    'c'     : 2*(P-p)+1
+    'gpipe' : M  (caller substitutes — returns a sentinel large value)
+    """
+    if policy == "ours":
+        return 2 * (P - p) - 1
+    if policy == "a":
+        return 2 * (P - p)
+    if policy == "b":
+        return P - p
+    if policy == "c":
+        return 2 * (P - p) + 1
+    if policy == "gpipe":
+        return 1 << 30
+    raise ValueError(policy)
+
+
+def stage_memory(table: LayerTable, i: int, j: int, beta: int, k_p: int,
+                 n_microbatches: int | None = None) -> float:
+    """Eq. (3): Mem_p = MOD + OPT + K_p * ACT(beta) for layers [i, j)."""
+    w = table.param_bytes(i, j)
+    mod = w + w * (GRAD_BYTES / 4.0)            # params + accumulated grads
+    opt = w / 4.0 * OPT_STATE_BYTES_PER_PARAM
+    act = table.act_bytes_sum(i, j) * beta
+    k = k_p if n_microbatches is None else min(k_p, n_microbatches)
+    return mod + opt + k * act
+
+
+# ---------------------------------------------------------------------------
+# Steps & the dominant-step latency model (Eqs. 4, 6, 11)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One pipeline step: an execution step (stage) or a communication step."""
+
+    kind: str                      # 'exec' | 'comm'
+    ef: float                      # forward time of this step per micro-batch
+    eb: float                      # backward time per micro-batch
+    ta: float = 0.0                # AllReduce phase time (exec steps only)
+    group: tuple[int, ...] = ()    # device ranks (exec)
+    layers: tuple[int, int] = (0, 0)
+    alloc: tuple[int, ...] = ()    # micro-batch sample allocation across group
+
+    @property
+    def e_total(self) -> float:
+        return self.ef + self.eb
+
+
+def allreduce_time(param_bytes: float, group, cluster: Cluster) -> float:
+    """Eq. (5) AllReduce phase: ring over the min intra-group bandwidth."""
+    g = len(group)
+    if g <= 1:
+        return 0.0
+    return 2.0 * (g - 1) * param_bytes / (g * cluster.min_bw(group))
+
+
+def dominant_index(steps: Sequence[Step], M: int) -> int:
+    """The step with the fewest Execution-Phase bubbles == the largest
+    aligned total M*(Ef+Eb)_s + sum_{i<s}(Ef+Eb)_i (Eq. 11 generalized)."""
+    best, best_val = 0, -1.0
+    acc = 0.0
+    for s, st in enumerate(steps):
+        val = M * st.e_total + acc
+        if val > best_val:
+            best, best_val = s, val
+        acc += st.e_total
+    return best
+
+
+def round_latency(steps: Sequence[Step], M: int) -> float:
+    """HPP-Round latency, Eq. (4) with T_w (Eq. 5) and T_e (Eq. 6)."""
+    if not steps:
+        return 0.0
+    dm = dominant_index(steps, M)
+    e_dm = M * steps[dm].e_total
+    # prefix sums
+    worst = 0.0
+    tw = 0.0
+    for s, st in enumerate(steps):
+        if s < dm:
+            shift = sum(x.e_total for x in steps[s:dm])
+            te = e_dm + shift
+        else:
+            shift = sum(x.e_total for x in steps[dm:s])
+            te = e_dm - shift
+        worst = max(worst, tw + te + st.ta)
+        tw += st.ef
+    return worst

@@ -1,0 +1,193 @@
+"""Asteroid Profiler (§3.3): per-layer sizes and per-(device, batch) times.
+
+Two construction paths:
+
+* ``LayerTable.from_model_config`` — analytic per-layer FLOPs/bytes derived
+  from a ``repro.models.ModelConfig`` (every assigned architecture), plus
+  hand-built tables for the paper's CNNs (``paper_models.py``).
+* ``measure_layer_times`` — a *real* profiler that executes jitted layer
+  functions on the local device across a batch-size sweep (used on CPU in
+  tests/examples; on a Jetson it would profile the real board — same code).
+
+The planner consumes a ``Profile``: cumulative per-layer time tables
+``t_f/t_b [device][beta][layer]`` with prefix sums so any layer-range cost
+is O(1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .hardware import Cluster, DeviceProfile
+
+BWD_FLOP_RATIO = 2.0           # backward ~= 2x forward FLOPs
+GRAD_BYTES = 4                 # accumulated grads fp32
+PARAM_BYTES = 4
+ACT_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    """Static per-layer facts (per *sample* where applicable)."""
+
+    name: str
+    flops_fwd: float           # per sample
+    param_bytes: float         # w_l
+    act_bytes: float           # a_l — output activation per sample (the
+                               # tensor crossing a stage boundary after l)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerTable:
+    """The profiled DNN as a topologically-sorted layer sequence."""
+
+    name: str
+    layers: tuple[LayerCost, ...]
+
+    @property
+    def L(self) -> int:
+        return len(self.layers)
+
+    def param_bytes(self, i: int, j: int) -> float:
+        return sum(l.param_bytes for l in self.layers[i:j])
+
+    def act_bytes_sum(self, i: int, j: int) -> float:
+        return sum(l.act_bytes for l in self.layers[i:j])
+
+    def boundary_act(self, j: int) -> float:
+        """Activation size crossing the boundary after layer j-1."""
+        return self.layers[j - 1].act_bytes if 0 < j <= self.L else 0.0
+
+    def flops(self, i: int, j: int) -> float:
+        return sum(l.flops_fwd for l in self.layers[i:j])
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_model_config(cfg, seq_len: int) -> "LayerTable":
+        """Analytic table for a transformer ModelConfig (per-sample costs).
+
+        One entry per LayerSpec instance plus embed/head pseudo-layers.
+        """
+        d, S = cfg.d_model, seq_len
+        layers = [LayerCost("embed", 2 * d * S, cfg.vocab_size * d * PARAM_BYTES,
+                            S * d * ACT_BYTES)]
+        for li in range(cfg.n_layers):
+            spec = cfg.pattern[li % len(cfg.pattern)]
+            p_count = cfg.layer_param_count(spec)
+            p_active = cfg.layer_active_param_count(spec)
+            flops = 2.0 * p_active * S
+            if spec.kind == "attn" and cfg.attn is not None:
+                a = cfg.attn
+                win = spec.window if not spec.full_attention else None
+                eff_ctx = S if win is None else min(S, win)
+                flops += 2.0 * 2.0 * S * eff_ctx * a.n_heads * a.head_dim / 2.0
+            act = S * d * ACT_BYTES
+            layers.append(LayerCost(f"{spec.kind}{li}", flops,
+                                    p_count * PARAM_BYTES, act))
+        layers.append(LayerCost("head", 2 * d * cfg.vocab_size * S,
+                                (0 if cfg.tie_embeddings else cfg.vocab_size * d * PARAM_BYTES),
+                                S * cfg.vocab_size * ACT_BYTES))
+        return LayerTable(cfg.name, tuple(layers))
+
+
+@dataclasses.dataclass
+class Profile:
+    """Planner input: time tables + sizes.  Times indexed [dev][beta][layer]
+    as *cumulative* sums over layers (prefix[l] = sum of layers < l)."""
+
+    table: LayerTable
+    cluster: Cluster
+    max_batch: int
+    tf_prefix: np.ndarray      # (D, max_batch+1, L+1)
+    tb_prefix: np.ndarray
+
+    # -- range queries ---------------------------------------------------
+    def t_fwd(self, dev: int, beta: int, i: int, j: int) -> float:
+        if beta <= 0:
+            return 0.0
+        beta = min(beta, self.max_batch)
+        return float(self.tf_prefix[dev, beta, j] - self.tf_prefix[dev, beta, i])
+
+    def t_bwd(self, dev: int, beta: int, i: int, j: int) -> float:
+        if beta <= 0:
+            return 0.0
+        beta = min(beta, self.max_batch)
+        return float(self.tb_prefix[dev, beta, j] - self.tb_prefix[dev, beta, i])
+
+    def t_both(self, dev: int, beta: int, i: int, j: int) -> float:
+        return self.t_fwd(dev, beta, i, j) + self.t_bwd(dev, beta, i, j)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def analytic(table: LayerTable, cluster: Cluster, max_batch: int) -> "Profile":
+        D, L = len(cluster.devices), table.L
+        tf = np.zeros((D, max_batch + 1, L + 1))
+        tb = np.zeros((D, max_batch + 1, L + 1))
+        flops = np.array([l.flops_fwd for l in table.layers])
+        for di, dev in enumerate(cluster.devices):
+            for beta in range(1, max_batch + 1):
+                work = flops * beta
+                eff = dev.eff(beta) * flops / (flops + dev.sat_flops)
+                per_layer_f = work / (dev.flops * np.maximum(eff, 1e-9)) + dev.overhead
+                tf[di, beta, 1:] = np.cumsum(per_layer_f)
+                tb[di, beta, 1:] = np.cumsum(per_layer_f * BWD_FLOP_RATIO)
+        return Profile(table, cluster, max_batch, tf, tb)
+
+    @staticmethod
+    def measured(table: LayerTable, cluster: Cluster, max_batch: int,
+                 tf_samples: np.ndarray, tb_samples: np.ndarray) -> "Profile":
+        """From measured per-layer times: samples (D, max_batch+1, L)."""
+        D, _, L = tf_samples.shape
+        tf = np.zeros((D, max_batch + 1, L + 1))
+        tb = np.zeros((D, max_batch + 1, L + 1))
+        tf[:, :, 1:] = np.cumsum(tf_samples, axis=2)
+        tb[:, :, 1:] = np.cumsum(tb_samples, axis=2)
+        return Profile(table, cluster, max_batch, tf, tb)
+
+
+# ---------------------------------------------------------------------------
+# Real measurement path (runs on the local JAX device)
+# ---------------------------------------------------------------------------
+
+
+def measure_layer_times(layer_fns: Sequence[Callable], make_input: Callable,
+                        batch_sizes: Sequence[int], repeats: int = 3):
+    """Measure wall-clock fwd and bwd times of each layer callable.
+
+    layer_fns: list of (params, x)->y pure fns already bound to params.
+    make_input: (beta, layer_idx) -> x.
+    Returns (tf, tb) arrays of shape (len(batch_sizes), L).
+    """
+    import jax
+
+    L = len(layer_fns)
+    tf = np.zeros((len(batch_sizes), L))
+    tb = np.zeros((len(batch_sizes), L))
+    for bi, beta in enumerate(batch_sizes):
+        for li, fn in enumerate(layer_fns):
+            x = make_input(beta, li)
+            fwd = jax.jit(fn)
+            vjp_fn = jax.jit(lambda x: jax.vjp(fn, x)[1](jnp_ones_like(fn(x))))
+            fwd(x).block_until_ready()           # compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fwd(x).block_until_ready()
+            tf[bi, li] = (time.perf_counter() - t0) / repeats
+            try:
+                vjp_fn(x)[0].block_until_ready() # compile
+                t0 = time.perf_counter()
+                for _ in range(repeats):
+                    vjp_fn(x)[0].block_until_ready()
+                tb[bi, li] = (time.perf_counter() - t0) / repeats
+            except Exception:
+                tb[bi, li] = tf[bi, li] * BWD_FLOP_RATIO
+    return tf, tb
+
+
+def jnp_ones_like(x):
+    import jax.numpy as jnp
+    return jnp.ones_like(x)

@@ -1,0 +1,214 @@
+"""§3.4 Fault-tolerant pipeline replay.
+
+Three modules, faithful to the paper:
+
+1. **Heartbeat-guided failure detection** — every device emits heartbeats to
+   the coordinator; a missed deadline triggers a probe; an unanswered probe
+   confirms the failure.  (Simulated clock; the same state machine drives the
+   live JAX demo in examples/fault_tolerance.py.)
+
+2. **Topology-driven model replication** — single-device stages back up
+   their stage model to a *backup node* in the next stage (last stage wraps
+   to the first); multi-device stages are implicitly replicated by their DP
+   peers.  Periodic checkpoint traffic is charged to the D2D links.
+
+3. **Layer-wise lightweight re-planning** — on failure, instead of rerunning
+   Algorithm 2, the surviving stages re-split the layer range proportionally
+   to their aggregate computing capacity (FLOPs-based), and adjacent stages
+   migrate boundary layers *concurrently*; weights owned by the failed
+   device are restored from its backup.
+
+The heavy-rescheduling baseline (aggregate → re-plan → redistribute) is also
+implemented for the Fig. 16/17 comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .allocation import allocate_microbatch
+from .costmodel import Step, allreduce_time, kp_policy, round_latency
+from .planner import Plan, StagePlan, _comm_step, plan_hpp
+from .profiler import Profile
+
+HEARTBEAT_PERIOD = 0.5        # s
+HEARTBEAT_TIMEOUT = 2.0       # missed-deadline threshold
+PROBE_TIMEOUT = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BackupAssignment:
+    """stage -> backup device rank holding its replica."""
+
+    backup_of_stage: dict[int, int]
+    checkpoint_bytes: dict[int, float]
+
+
+def assign_backups(plan: Plan, profile: Profile) -> BackupAssignment:
+    """Topology-driven replication (Fig. 9 left)."""
+    stages = plan.stages
+    P = len(stages)
+    backup: dict[int, int] = {}
+    ckpt: dict[int, float] = {}
+    for p, st in enumerate(stages):
+        if len(st.group) > 1:
+            continue                       # DP peers already replicate
+        nxt = stages[(p + 1) % P]
+        backup[p] = nxt.group[0]
+        ckpt[p] = profile.table.param_bytes(*st.layers)
+    return BackupAssignment(backup, ckpt)
+
+
+def checkpoint_cost(assign: BackupAssignment, profile: Profile) -> float:
+    """Seconds to push one round of stage-model checkpoints."""
+    if not assign.checkpoint_bytes:
+        return 0.0
+    return max(b / profile.cluster.bandwidth for b in assign.checkpoint_bytes.values())
+
+
+# ---------------------------------------------------------------------------
+# Failure detection (simulated clock)
+# ---------------------------------------------------------------------------
+
+
+def detection_latency(fail_time: float, heartbeat_period: float = HEARTBEAT_PERIOD,
+                      timeout: float = HEARTBEAT_TIMEOUT,
+                      probe_timeout: float = PROBE_TIMEOUT) -> float:
+    """Time from failure to confirmed detection."""
+    # last heartbeat was at the period boundary before the failure
+    import math
+    last_beat = math.floor(fail_time / heartbeat_period) * heartbeat_period
+    deadline = last_beat + heartbeat_period + timeout
+    return (deadline - fail_time) + probe_timeout
+
+
+# ---------------------------------------------------------------------------
+# Lightweight layer-wise re-planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    detection_s: float
+    replan_s: float
+    migration_s: float
+    restore_s: float
+    new_plan: Plan
+    mode: str
+
+    @property
+    def total_s(self) -> float:
+        return self.detection_s + self.replan_s + self.migration_s + self.restore_s
+
+
+def _stage_capacity(profile: Profile, group, i: int, j: int, mb: int) -> float:
+    """Aggregate computing capacity sum_d v_d (Eq. 9) of a group."""
+    return sum(1.0 / max(profile.t_both(d, mb, i, j), 1e-12) for d in group)
+
+
+def lightweight_replay(plan: Plan, profile: Profile, failed_rank: int,
+                       fail_time: float = 10.0) -> RecoveryReport:
+    """Layer-wise lightweight re-planning after ``failed_rank`` exits."""
+    import time as _time
+
+    t0 = _time.perf_counter()
+    table = profile.table
+    stages = list(plan.stages)
+    mb = plan.micro_batch
+
+    # 1) drop the failed device; a stage left empty is merged away below.
+    survivors: list[StagePlan] = []
+    for st in stages:
+        group = tuple(d for d in st.group if d != failed_rank)
+        if group:
+            survivors.append(StagePlan(st.layers, group, st.alloc, st.k_p))
+        # fully-failed stage: its layer range is redistributed among the rest
+    P = len(survivors)
+    if P == 0:
+        raise RuntimeError("no surviving devices")
+
+    # 2) FLOPs-proportional re-partition over surviving stages' capacities
+    caps = [_stage_capacity(profile, st.group, 0, table.L, mb) for st in survivors]
+    total_cap = sum(caps)
+    total_flops = table.flops(0, table.L)
+    cuts = [0]
+    acc = 0.0
+    li = 0
+    for p in range(P - 1):
+        acc += total_flops * caps[p] / total_cap
+        while li < table.L and table.flops(0, li) < acc:
+            li += 1
+        cuts.append(min(li, table.L - (P - 1 - p)))
+    cuts.append(table.L)
+
+    # 3) concurrent layer migration between adjacent stages
+    #    bytes moved on each boundary = weights of layers that switch stages
+    old_cuts = [0] + [st.layers[1] for st in survivors[:-1]] + [table.L]
+    migration = 0.0
+    for p in range(P - 1):
+        lo, hi = sorted((old_cuts[p + 1], cuts[p + 1]))
+        nbytes = table.param_bytes(lo, hi)
+        link_bw = profile.cluster.bw(survivors[p].group[0], survivors[p + 1].group[0])
+        migration = max(migration, nbytes / link_bw)   # concurrent transfers
+
+    # 4) restore the failed device's weights from its backup node
+    assign = assign_backups(plan, profile)
+    restore = 0.0
+    for p, st in enumerate(plan.stages):
+        if failed_rank in st.group and len(st.group) == 1:
+            restore = table.param_bytes(*st.layers) / profile.cluster.bandwidth
+
+    # 5) build the new plan (re-run Algorithm 1 within each stage)
+    new_stages = []
+    steps: list[Step] = []
+    for p in range(P):
+        i, j = cuts[p], cuts[p + 1]
+        alloc = allocate_microbatch(profile, survivors[p].group, mb, i, j,
+                                    kp_policy(P, p))
+        ta = allreduce_time(table.param_bytes(i, j), survivors[p].group,
+                            profile.cluster)
+        steps.append(Step("exec", alloc.ef, alloc.eb, ta, survivors[p].group,
+                          (i, j), alloc.y))
+        new_stages.append(StagePlan((i, j), survivors[p].group, alloc.y,
+                                    kp_policy(P, p)))
+        if p < P - 1:
+            steps.append(_comm_step(profile, mb, j, survivors[p].group,
+                                    survivors[p + 1].group))
+    lat = round_latency(tuple(steps), plan.n_micro)
+    new_plan = Plan(plan.arch, tuple(new_stages), tuple(steps), mb,
+                    plan.n_micro, lat, "replay")
+    replan_s = _time.perf_counter() - t0
+    return RecoveryReport(detection_latency(fail_time), replan_s, migration,
+                          restore, new_plan, "lightweight")
+
+
+def heavy_rescheduling(plan: Plan, profile: Profile, failed_rank: int,
+                       fail_time: float = 10.0,
+                       replan_compute_scale: float = 1.0) -> RecoveryReport:
+    """Straw-man baseline: aggregate stage models to the coordinator, re-run
+    Algorithm 2 from scratch, redistribute all weights."""
+    import numpy as np
+
+    from .hardware import Cluster
+
+    table = profile.table
+    bw = profile.cluster.bandwidth
+
+    # 1) aggregate every stage model to the coordinator (serialized in/out)
+    aggregate = sum(table.param_bytes(*st.layers) for st in plan.stages) / bw
+
+    # 2) full re-planning on the strongest surviving device
+    devs = [d for i, d in enumerate(profile.cluster.devices) if i != failed_rank]
+    sub_cluster = Cluster(tuple(devs), profile.cluster.bandwidth)
+    sub_profile = Profile.analytic(table, sub_cluster, profile.max_batch)
+    import time as _time
+    t0 = _time.perf_counter()
+    new_plan = plan_hpp(sub_profile, plan.global_batch, plan.micro_batch,
+                        arch=plan.arch)
+    replan = (_time.perf_counter() - t0) * replan_compute_scale
+
+    # 3) redistribute all stage weights
+    redistribute = sum(table.param_bytes(*st.layers) for st in new_plan.stages) / bw
+
+    return RecoveryReport(detection_latency(fail_time), replan,
+                          aggregate + redistribute, 0.0, new_plan, "heavy")

@@ -1,0 +1,60 @@
+"""Micro-batch schedules: memory-efficient 1F1B with per-stage warm-up K_p.
+
+The paper's §3.2: GPipe runs all M forwards then all backwards, so peak
+activation memory scales O(M).  Asteroid performs ``K_p`` forwards on stage
+p before strictly alternating one-forward-one-backward, bounding resident
+activations to O(K_p) with ``K_p = 2*(P-p)-1`` chosen so parallelism is not
+sacrificed (Fig. 15b compares the neighboring policies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from .costmodel import kp_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    kind: str          # 'F' | 'B'
+    micro: int
+
+
+def stage_order_1f1b(M: int, k_p: int) -> tuple[Op, ...]:
+    """Op order for one stage under 1F1B with warm-up depth k_p."""
+    k = max(1, min(k_p, M))
+    ops: list[Op] = [Op("F", m) for m in range(k)]
+    nf, nb = k, 0
+    while nb < M:
+        ops.append(Op("B", nb))
+        nb += 1
+        if nf < M:
+            ops.append(Op("F", nf))
+            nf += 1
+    return tuple(ops)
+
+
+def stage_order_gpipe(M: int) -> tuple[Op, ...]:
+    return tuple([Op("F", m) for m in range(M)] + [Op("B", m) for m in range(M)])
+
+
+def schedule_orders(P: int, M: int, policy: str = "ours") -> list[tuple[Op, ...]]:
+    """Per-stage op orders for a P-stage pipeline.
+
+    policy in {'ours', 'a', 'b', 'c'} selects the K_p formula (Fig. 15b);
+    'gpipe' is backward-after-forward.
+    """
+    if policy == "gpipe":
+        return [stage_order_gpipe(M) for _ in range(P)]
+    return [stage_order_1f1b(M, kp_policy(P, p, policy)) for p in range(P)]
+
+
+def max_inflight(order: tuple[Op, ...]) -> int:
+    """Peak number of micro-batches whose activations are resident."""
+    live = 0
+    peak = 0
+    for op in order:
+        live += 1 if op.kind == "F" else -1
+        peak = max(peak, live)
+    return peak

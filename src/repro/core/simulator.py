@@ -1,0 +1,154 @@
+"""Discrete-event simulator for HPP training rounds.
+
+Executes a ``Plan`` under a micro-batch schedule (1F1B with K_p, or GPipe)
+with explicit inter-stage communication channels, producing:
+
+* the HPP-Round makespan (validates the planner's dominant-step estimate),
+* per-device peak memory (validates Eq. 3 and the K_p policies, Fig. 15b),
+* per-stage utilization / bubble fractions,
+* a step-level trace for visualization.
+
+The model: each stage executes its op order sequentially (the device group
+acts in lockstep; intra-group DP runs concurrently so an op costs the max
+over members, which is exactly the planner's Ef/Eb).  Each adjacent-stage
+link carries one transfer at a time per direction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from .costmodel import stage_memory
+from .planner import Plan
+from .profiler import Profile
+from .schedule import Op, schedule_orders
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    peak_mem: dict[int, float]          # device rank -> bytes
+    stage_busy: list[float]             # busy seconds per stage
+    bubble_frac: list[float]
+    trace: list[tuple]                  # (t_start, t_end, stage, op)
+
+    @property
+    def max_peak_mem(self) -> float:
+        return max(self.peak_mem.values())
+
+
+def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
+    stages = plan.stages
+    P, M = len(stages), plan.n_micro
+    exec_steps = [s for s in plan.steps if s.kind == "exec"]
+    comm_steps = [s for s in plan.steps if s.kind == "comm"]
+    assert len(exec_steps) == P and len(comm_steps) == P - 1
+
+    orders = schedule_orders(P, M, policy)
+
+    # --- readiness state -------------------------------------------------
+    f_done = [[False] * M for _ in range(P)]        # F(p, m) finished
+    b_done = [[False] * M for _ in range(P)]
+    f_arrived = [[False] * M for _ in range(P)]     # activations available
+    b_arrived = [[False] * M for _ in range(P)]     # gradient available
+    for m in range(M):
+        f_arrived[0][m] = True                      # stage 0 reads input
+    op_idx = [0] * P
+    stage_free_at = [0.0] * P
+    link_free_fwd = [0.0] * (P - 1)
+    link_free_bwd = [0.0] * (P - 1)
+
+    # memory: static (params+opt) + dynamic activation tracking
+    act_live = [0] * P
+    act_peak = [0] * P
+
+    trace: list[tuple] = []
+    busy = [0.0] * P
+
+    # event heap: (time, seq, kind, payload)
+    heap: list[tuple] = []
+    seq = 0
+
+    def push(t, kind, payload):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, payload))
+        seq += 1
+
+    def ready(p: int, op: Op) -> bool:
+        if op.kind == "F":
+            return f_arrived[p][op.micro]
+        if p == P - 1:
+            return f_done[p][op.micro]
+        return b_arrived[p][op.micro]
+
+    def try_start(p: int, now: float):
+        if op_idx[p] >= len(orders[p]):
+            return
+        op = orders[p][op_idx[p]]
+        if not ready(p, op):
+            return
+        start = max(now, stage_free_at[p])
+        dur = exec_steps[p].ef if op.kind == "F" else exec_steps[p].eb
+        end = start + dur
+        stage_free_at[p] = end
+        op_idx[p] += 1
+        busy[p] += dur
+        trace.append((start, end, p, f"{op.kind}{op.micro}"))
+        if op.kind == "F":
+            act_live[p] += 1
+            act_peak[p] = max(act_peak[p], act_live[p])
+        push(end, "exec_done", (p, op))
+
+    now = 0.0
+    for p in range(P):
+        try_start(p, 0.0)
+
+    while heap:
+        now, _, kind, payload = heapq.heappop(heap)
+        if kind == "exec_done":
+            p, op = payload
+            if op.kind == "F":
+                f_done[p][op.micro] = True
+                if p < P - 1:   # send activation forward
+                    t0 = max(now, link_free_fwd[p])
+                    t1 = t0 + comm_steps[p].ef
+                    link_free_fwd[p] = t1
+                    push(t1, "fwd_arrive", (p + 1, op.micro))
+            else:
+                b_done[p][op.micro] = True
+                act_live[p] -= 1
+                if p > 0:       # send gradient backward
+                    t0 = max(now, link_free_bwd[p - 1])
+                    t1 = t0 + comm_steps[p - 1].eb
+                    link_free_bwd[p - 1] = t1
+                    push(t1, "bwd_arrive", (p - 1, op.micro))
+            try_start(p, now)
+        elif kind == "fwd_arrive":
+            p, m = payload
+            f_arrived[p][m] = True
+            try_start(p, now)
+        elif kind == "bwd_arrive":
+            p, m = payload
+            b_arrived[p][m] = True
+            try_start(p, now)
+
+    # AllReduce phases run after each stage finishes its backwards
+    makespan = 0.0
+    for p in range(P):
+        stage_end = stage_free_at[p] + exec_steps[p].ta
+        makespan = max(makespan, stage_end)
+
+    # memory accounting (per device)
+    peak_mem: dict[int, float] = {}
+    for p, st in enumerate(stages):
+        w = profile.table.param_bytes(*st.layers)
+        for d, y in zip(st.group, st.alloc):
+            share = w  # each replica holds the full stage model
+            static = stage_memory(profile.table, *st.layers, 0, 0)  # MOD+OPT
+            act = profile.table.act_bytes_sum(*st.layers) * y
+            peak_mem[d] = static + act_peak[p] * act
+
+    span = max(stage_free_at)
+    bubble = [1.0 - busy[p] / span if span > 0 else 0.0 for p in range(P)]
+    return SimResult(makespan, peak_mem, busy, bubble, trace)

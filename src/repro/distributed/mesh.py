@@ -1,0 +1,88 @@
+"""Mesh refinement: production mesh -> logical (pod, data, stage, tp) mesh.
+
+``make_production_mesh`` (launch/mesh.py) returns the pinned
+``(data=16, model=16)`` or ``(pod=2, data=16, model=16)`` mesh.  Asteroid's
+HPP maps onto it by *refining* the ``model`` axis into ``stage × tp``:
+pipeline stages across ``stage`` (inter-group pipeline parallelism) with
+Megatron tensor parallelism inside each stage (the TPU analogue of
+intra-group parallelism), and data parallelism over ``(pod, data)``.
+
+Refinement is a pure reshape of the device array — no new jax device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from jax.sharding import Mesh
+
+AXES = ("pod", "data", "stage", "tp")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Logical parallelism layout on top of a production mesh."""
+
+    pod: int
+    data: int
+    stage: int
+    tp: int
+
+    @property
+    def dp_shards(self) -> int:
+        return self.pod * self.data
+
+    @property
+    def model(self) -> int:
+        return self.stage * self.tp
+
+
+def refine_mesh(mesh: Mesh, stage: int) -> Mesh:
+    """Split the trailing 'model' axis of a production mesh into stage×tp."""
+    names = mesh.axis_names
+    assert names[-1] == "model", names
+    model = mesh.shape["model"]
+    assert model % stage == 0, (model, stage)
+    tp = model // stage
+    devs = np.asarray(mesh.devices)
+    if "pod" in names:
+        pod, data = mesh.shape["pod"], mesh.shape["data"]
+    else:
+        pod, data = 1, mesh.shape["data"]
+    new = devs.reshape(pod, data, stage, tp)
+    return Mesh(new, AXES)
+
+
+def mesh_plan(mesh: Mesh, stage: int) -> MeshPlan:
+    model = mesh.shape["model"]
+    pod = mesh.shape.get("pod", 1)
+    return MeshPlan(pod=pod, data=mesh.shape["data"], stage=stage,
+                    tp=model // stage)
+
+
+def pick_stage_count(n_layers: int, pattern_len: int, model_axis: int,
+                     n_heads: int, max_stage: int | None = None) -> int:
+    """Choose the pipeline-stage count for an architecture.
+
+    Constraints: stage divides the model axis; tp = model/stage must divide
+    n_heads (query heads are tp-sharded); prefer the largest stage count
+    whose period padding waste is <= 12.5%.  The Asteroid planner can
+    override this (it optimizes the same trade-off with its DP), but this
+    gives a deterministic default for dry-runs.
+    """
+    n_periods = n_layers // pattern_len
+    best = 1
+    divisors = [d for d in (16, 8, 4, 2, 1) if model_axis % d == 0]
+    for s in divisors:
+        if max_stage and s > max_stage:
+            continue
+        tp = model_axis // s
+        if n_heads % tp != 0 and tp % max(n_heads, 1) != 0:
+            continue
+        padded = -(-n_periods // s) * s
+        waste = (padded - n_periods) / padded
+        if waste <= 0.125:
+            best = s
+            break
+    return best

@@ -1,0 +1,232 @@
+"""Parameter/state PartitionSpecs for the refined (pod, data, stage, tp) mesh.
+
+Specs are derived from tree paths.  Layout summary (Megatron-style):
+
+* ``periods`` subtree: leading axis = stacked periods -> ``stage``.
+* attention: wq/wk/wv column-parallel over heads (``tp`` on the output dim),
+  wo row-parallel (``tp`` on the input dim).  KV projections stay replicated
+  when tp > n_kv_heads (the runtime slices heads dynamically).
+* MLA: the up-projections (wq_b, wk_b, wv_b) are head-sharded; latent
+  down-projections replicated.
+* MLP: gate/up column-parallel, down row-parallel.
+* MoE: experts sharded over the expert-parallel axis (``data`` in training —
+  the EP=DP layout) on dim 0 and over ``tp`` on d_ff; router replicated.
+* Mamba: d_inner sharded over ``tp`` (in_proj/conv/dt_proj column-parallel;
+  x_proj/out_proj/A/D row-parallel on the d_inner dim).
+* RWKV: head projections column-parallel, out row-parallel; gate lora for
+  the decay sharded on its output.
+* embed / head: vocab-parallel over ``tp``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Which mesh axes play which role for a given step type."""
+
+    ep_axis: str | None = "data"    # expert-parallel axis (None = replicate)
+    stage_axis: str | None = "stage"
+    tp_axis: str | None = "tp"
+    dp_axes: tuple[str, ...] = ("pod", "data")
+    seq_axis: str | None = None     # decode KV cache sequence sharding
+    kv_replicated: bool = False     # tp > n_kv_heads: KV projections replicated
+
+TRAIN_LAYOUT = Layout()
+SERVE_LAYOUT = Layout(ep_axis=None)
+SERVE_SEQSHARD_LAYOUT = Layout(ep_axis=None, seq_axis="data")
+
+
+def _spec_for(path: tuple[str, ...], ndim: int, lo: Layout,
+              stacked: bool) -> P:
+    """PartitionSpec for one param leaf.  ``stacked`` => leading period dim."""
+    tp = lo.tp_axis
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+
+    def wrap(*dims):
+        dims = list(dims)
+        # pad to ndim (account for the stacked leading axis)
+        body = ndim - (1 if stacked else 0)
+        while len(dims) < body:
+            dims.append(None)
+        dims = dims[:body]
+        if stacked:
+            dims = [lo.stage_axis] + dims
+        return P(*dims)
+
+    # ---- embedding / head (never stacked) -------------------------------
+    if name == "embed":
+        return P(tp, None) if ndim == 2 else P(None, tp, None)
+    if name == "head":
+        return P(None, tp) if ndim == 2 else P(None, None, tp)
+    if name == "prefix_proj":
+        return P(None, None)
+
+    # ---- MoE -------------------------------------------------------------
+    if parent == "experts":
+        if name in ("gate", "up"):
+            return wrap(lo.ep_axis, None, tp)
+        if name == "down":
+            return wrap(lo.ep_axis, tp, None)
+    if name == "router":
+        return wrap(None, None)
+
+    # ---- attention --------------------------------------------------------
+    if name in ("wq", "wq_b", "wk_b", "wv_b"):
+        return wrap(None, tp)
+    if name in ("wk", "wv"):
+        # replicated when tp does not divide the KV head count (MQA/GQA);
+        # each shard then slices its head at compute time
+        return wrap(None, None if lo.kv_replicated else tp)
+    if name in ("wo", "out", "out_proj", "down", "wv_cm"):
+        return wrap(tp, None)
+    if name in ("wq_a", "wkv_a", "combine"):
+        return wrap(None, None)
+
+    # ---- dense MLP ---------------------------------------------------------
+    if parent == "mlp" or parent == "shared":
+        if name in ("gate", "up"):
+            return wrap(None, tp)
+        if name == "down":
+            return wrap(tp, None)
+
+    # ---- mamba --------------------------------------------------------------
+    if name in ("in_x", "in_z", "conv_w", "dt_proj"):
+        return wrap(None, tp)
+    if name in ("conv_b", "dt_bias", "D"):
+        return wrap(tp)
+    if name in ("x_proj", "A_log"):
+        return wrap(tp, None)
+
+    # ---- rwkv -----------------------------------------------------------------
+    if name in ("wr", "wk_tm", "wv_tm", "wg"):
+        return wrap(None, tp)
+    if name in ("w0", "u"):
+        return wrap(tp)
+    if name == "w_lora_b":
+        return wrap(None, tp)
+    if name in ("w_lora_a", "mix_lora_a", "mix_lora_b", "mix_base",
+                "mix_k", "mix_r"):
+        return wrap(*([None] * 8))
+
+    # norms, biases, everything else: replicated (stacked over stage only)
+    return wrap(*([None] * 8))
+
+
+# RWKV name disambiguation: time-mix wk/wv/wr collide with channel-mix and
+# attention names; resolve by parent.
+def _resolve(path: tuple[str, ...]) -> tuple[str, ...]:
+    if len(path) >= 2:
+        parent, name = path[-2], path[-1]
+        if parent == "rwkv_tm" and name in ("wk", "wv"):
+            return path[:-1] + (name + "_tm",)
+        if parent == "rwkv_cm":
+            if name == "wv":
+                return path[:-1] + ("wv_cm",)
+            if name == "wr":
+                return path[:-1] + ("wr_cm",)
+            if name == "wk":
+                return path[:-1] + ("wk_cm",)
+    return path
+
+
+def _cm_spec(name: str, ndim: int, lo: Layout, stacked: bool) -> P | None:
+    tp = lo.tp_axis
+    table = {"wk_cm": (None, tp), "wv_cm": (tp, None), "wr_cm": (None, None)}
+    if name in table:
+        dims = list(table[name])
+        if stacked:
+            dims = [lo.stage_axis] + dims
+        return P(*dims)
+    return None
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(f"[{k.idx}]")
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_pspecs(params, layout: Layout = TRAIN_LAYOUT):
+    """PartitionSpec tree matching ``params`` (global model params)."""
+
+    def leaf_spec(path, leaf):
+        names = _resolve(tuple(n for n in _path_names(path) if not n.startswith("[")))
+        stacked = "periods" in names
+        cm = _cm_spec(names[-1], leaf.ndim, layout, stacked)
+        if cm is not None:
+            return cm
+        spec = _spec_for(names, leaf.ndim, layout, stacked)
+        # sanity: never more dims than the array has
+        assert len(spec) <= leaf.ndim or leaf.ndim == 0, (names, spec, leaf.shape)
+        return spec if leaf.ndim else P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def kv_replicated_overrides(params, cfg, layout: Layout):
+    """When tp > n_kv_heads, wk/wv (and their caches) stay replicated."""
+    def fix(path, spec, leaf):
+        names = _path_names(path)
+        if names and names[-1] in ("wk", "wv") and "attn" in names:
+            dims = list(spec)
+            dims[-1] = None
+            return P(*dims)
+        return spec
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s, l: fix(p, s, l), param_pspecs(params, layout), params)
+
+
+def state_pspecs(states, layout: Layout, batch_sharded: bool = True):
+    """PartitionSpecs for decode states (leading dim = stacked periods).
+
+    Leaf layouts (batch axis is always axis 1):
+      attn k/v      (P, B, S, H, D)   heads over tp (None if kv replicated)
+      mla c_kv/rope (P, B, S, R)
+      mamba conv    (P, B, K-1, d_in) d_in over tp
+      mamba ssm     (P, B, d_in, N)   d_in over tp
+      rwkv wkv      (P, B, H, d, d)   heads over tp
+      shift         (P, B, 1, D)
+    The cache sequence dim is sharded over ``layout.seq_axis`` when set
+    (flash-decoding style); batch over (pod, data) when ``batch_sharded``.
+    """
+    tp = layout.tp_axis
+    b = ("pod", "data") if batch_sharded else None
+    seq = layout.seq_axis
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name in ("k", "v"):
+            return P(layout.stage_axis, b, seq,
+                     None if layout.kv_replicated else tp, None)
+        if name in ("c_kv", "k_rope"):
+            return P(layout.stage_axis, b, seq, None)
+        if name == "conv":
+            return P(layout.stage_axis, b, None, tp)
+        if name == "ssm":
+            return P(layout.stage_axis, b, tp, None)
+        if name == "wkv":
+            return P(layout.stage_axis, b, tp, None, None)
+        if name == "shift":
+            return P(layout.stage_axis, b, None, None)
+        raise KeyError(f"unknown state leaf {names}")
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, states)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,102 @@
+"""Pallas TPU flash-decoding kernel: one query token vs a long KV cache.
+
+Grid = (B·Hq, n_kv_blocks): KV blocks stream through VMEM; the partial
+softmax (m, l, acc) lives in scratch and the final renormalized output is
+written on the last block — the kernel analogue of the sequence-sharded
+``decode_attention`` collective path (which splits the same computation
+*across chips* and combines partials with pmax/psum).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, window, block_k: int, n_kv: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (1, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    cache_len = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (1, bk)
+    pos = t * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = pos < cache_len
+    if window is not None:
+        mask &= pos >= cache_len - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "block_k",
+                                             "interpret"))
+def flash_decode(q, k_cache, v_cache, cache_len, *, scale: float | None = None,
+                 window: int | None = None, block_k: int = 512,
+                 interpret: bool = False):
+    """q: (BH, D); k/v_cache: (BHkv, S, D); cache_len: () int32.
+
+    Returns (BH, D).  GQA via the KV index map (q row i -> kv row i//G)."""
+    BH, D = q.shape
+    BHkv, S, _ = k_cache.shape
+    group = BH // BHkv
+    if scale is None:
+        scale = D ** -0.5
+    block_k = min(block_k, S)
+    n_kv = -(-S // block_k)
+    if n_kv * block_k != S:   # pad: pallas clamps OOB block starts
+        pad = n_kv * block_k - S
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0)))
+    q3 = q[:, None, :]
+    clen = jnp.broadcast_to(cache_len[None], (1,)).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, t: (i // group, t, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, t: (i // group, t, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda i, t: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k_cache, v_cache, clen)
+    return out[:, 0]

@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (forward): causal / sliding-window / softcap /
+GQA, with explicit BlockSpec VMEM tiling.
+
+TPU mapping: grid = (batch·q_heads, n_q_blocks, n_kv_blocks); the innermost
+grid dim streams KV blocks through VMEM while an (m, l, acc) online-softmax
+accumulator lives in VMEM scratch (TPU grids execute sequentially, so
+scratch persists across the kv dimension).  GQA is expressed in the KV
+BlockSpec index map (q-head h reads kv-head h // group) — no KV replication
+in HBM.  Block shapes default to 128 (MXU-aligned).
+
+Validated against ``ref.naive_attention`` in interpret mode on CPU; compiled
+path targets TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window, softcap,
+                 block_q: int, block_k: int, n_kv: int, seq_len: int):
+    j = pl.program_id(1)          # q block index
+    t = pl.program_id(2)          # kv block index
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = j * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = t * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale: float | None = None, causal: bool = True,
+                    window: int | None = None, softcap: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (BH, S, D); k/v: (BHkv, S, D) with BH % BHkv == 0 (GQA grouping
+    is contiguous: q row i reads kv row i // (BH // BHkv)).  Returns (BH, S, D).
+    """
+    BH, S, D = q.shape
+    BHkv = k.shape[0]
+    group = BH // BHkv
+    if scale is None:
+        scale = D ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    n_q = -(-S // block_q)
+    n_kv = -(-S // block_k)
+
+    # pad the sequence so every BlockSpec tile is in-bounds (pallas clamps
+    # out-of-range block starts, which would alias tiles); padded keys are
+    # masked via k_pos < seq_len, padded q rows are sliced off below.
+    S_pad = max(n_q * block_q, n_kv * block_k)
+    if S_pad != S:
+        q = jnp.pad(q, ((0, 0), (0, n_q * block_q - S), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, n_kv * block_k - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, n_kv * block_k - S), (0, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_kv=n_kv,
+        seq_len=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda i, j, t: (i, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, j, t: (i // group, t, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, j, t: (i // group, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda i, j, t: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, n_q * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)[:, :S]

@@ -1,0 +1,75 @@
+"""Pallas TPU fused SwiGLU MLP: silu(x·Wg) ⊙ (x·Wu) · Wd in one kernel.
+
+Grid = (n_row_blocks, n_ff_blocks): each step computes one (bm × bf) tile of
+the hidden activation and immediately contracts it with the matching Wd row
+block, accumulating the (bm × D) output in VMEM scratch — the (T, d_ff)
+hidden tensor never exists in HBM.  bm/bf default to MXU-aligned 128/512.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+                   n_ff: int, act: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, D)
+    wg = wg_ref[...].astype(jnp.float32)          # (D, bf)
+    wu = wu_ref[...].astype(jnp.float32)
+    wd = wd_ref[...].astype(jnp.float32)          # (bf, D)
+
+    g = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if act == "silu":
+        h = g * jax.nn.sigmoid(g) * u
+    else:  # gelu_tanh
+        h = jax.nn.gelu(g, approximate=True) * u
+    acc_ref[...] += jax.lax.dot_general(h, wd, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_ff - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f", "act",
+                                             "interpret"))
+def fused_swiglu(x, wg, wu, wd, *, block_m: int = 128, block_f: int = 512,
+                 act: str = "silu", interpret: bool = False):
+    """x: (T, D); wg/wu: (D, F); wd: (F, D) -> (T, D)."""
+    T, D = x.shape
+    F = wg.shape[1]
+    block_m = min(block_m, T)
+    block_f = min(block_f, F)
+    assert T % block_m == 0 and F % block_f == 0, (T, F, block_m, block_f)
+    n_m = T // block_m
+    n_f = F // block_f
+
+    kernel = functools.partial(_swiglu_kernel, n_ff=n_f, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_m, n_f),
+        in_specs=[
+            pl.BlockSpec((block_m, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((D, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((block_f, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, D), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the Mamba selective scan (chunked serial).
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t x_t) ⊗ B_t ;   y_t = h_t · C_t
+
+The XLA-native path (`repro.models.ssm`) uses an associative scan whose
+log-depth combine levels materialize (B, C, d_inner, N) intermediates —
+the dominant HBM-traffic term for Jamba in the roofline analysis
+(EXPERIMENTS.md §Perf iteration 3).  This kernel runs the recurrence
+serially inside VMEM: grid = (batch, n_chunks), the (d, N) state lives in
+scratch across the sequential chunk dimension, and each step's intermediates
+never leave registers/VMEM — HBM traffic drops from O(S·d·N·log C) to
+O(S·(d + N)) reads + O(S·d) writes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, o_ref, h_ref, *,
+                 chunk: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]                               # (d, N) = -exp(A_log)
+
+    def step(i, h):
+        dt_i = dt_ref[0, i]                      # (d,)
+        x_i = x_ref[0, i]                        # (d,)
+        b_i = b_ref[0, i]                        # (N,)
+        c_i = c_ref[0, i]                        # (N,)
+        decay = jnp.exp(dt_i[:, None] * a)       # (d, N)
+        h = h * decay + (dt_i * x_i)[:, None] * b_i[None, :]
+        o_ref[0, i] = jnp.sum(h * c_i[None, :], axis=1).astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(dt, b, c, x, a, *, chunk: int = 128, interpret: bool = False):
+    """dt/x: (B, S, d) fp32; b/c: (B, S, N) fp32; a: (d, N) = -exp(A_log).
+
+    Returns y: (B, S, d) fp32 (the C·h readout; the D·x skip and gating stay
+    outside, as in the model layer)."""
+    B, S, d = dt.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((d, N), lambda i, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, b, c, x, a)

@@ -1,0 +1,69 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode (the kernel
+body executes in Python for correctness); on TPU they compile natively.
+``use_pallas()`` is the switch the model layer consults — the distributed
+runtime uses the XLA-native paths by default and swaps kernels in with
+``--use-pallas`` on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import flash_decode
+from .flash_attention import flash_attention
+from .fused_swiglu import fused_swiglu
+from .rwkv6_wkv import rwkv6_wkv
+
+__all__ = ["flash_attention_op", "flash_decode_op", "rwkv6_wkv_op",
+           "fused_swiglu_op", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def flash_attention_op(q, k, v, **kw):
+    """(B, S, H, D) layout wrapper -> flattens heads into the grid dim."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    # GQA contiguity: q head i maps to kv head i // (H // Hkv) within a batch
+    out = flash_attention(qf, kf, vf, interpret=_interp(), **kw)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def flash_decode_op(q, k_cache, v_cache, cache_len, **kw):
+    """q: (B, H, D); caches: (B, S, Hkv, D)."""
+    B, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    qf = q.reshape(B * H, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    out = flash_decode(qf, kf, vf, cache_len, interpret=_interp(), **kw)
+    return out.reshape(B, H, D)
+
+
+def rwkv6_wkv_op(r, k, v, w, u, **kw):
+    """(B, H, S, d) layout wrapper."""
+    B, H, S, d = r.shape
+    flat = lambda t: t.reshape(B * H, S, d)
+    u2 = u[None].repeat(B, axis=0).reshape(B * H, d) if u.ndim == 2 else u
+    out = rwkv6_wkv(flat(r), flat(k), flat(v), flat(w), u2,
+                    interpret=_interp(), **kw)
+    return out.reshape(B, H, S, d)
+
+
+def fused_swiglu_op(x, wg, wu, wd, **kw):
+    """(..., D) layout wrapper."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = fused_swiglu(x2, wg, wu, wd, interpret=_interp(), **kw)
+    return out.reshape(shape)

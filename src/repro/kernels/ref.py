@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_attention(q, k, v, *, scale=None, causal=True, window=None,
+                    softcap=None):
+    """q: (BH, S, D); k/v: (BHkv, S, D).  Full-softmax reference."""
+    BH, S, D = q.shape
+    G = BH // k.shape[0]
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def naive_decode(q, k_cache, v_cache, cache_len, *, scale=None, window=None):
+    """q: (BH, D); caches (BHkv, S, D); reference one-token attention."""
+    BH, D = q.shape
+    BHkv, S, _ = k_cache.shape
+    G = BH // BHkv
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k_cache, G, axis=0)
+    vv = jnp.repeat(v_cache, G, axis=0)
+    s = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, :]
+    mask = pos < cache_len
+    if window is not None:
+        mask &= pos >= cache_len - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def naive_wkv6(r, k, v, w, u):
+    """Step-by-step WKV-6 recurrence.  r/k/v/w: (BH, S, d); u: (BH, d)."""
+    BH, S, d = r.shape
+
+    def per_head(r_h, k_h, v_h, w_h, u_h):
+        def step(s, inputs):
+            r_t, k_t, v_t, w_t = inputs
+            kv = jnp.outer(k_t, v_t)
+            out = r_t @ (s + u_h[:, None] * kv)
+            s = s * w_t[:, None] + kv
+            return s, out
+
+        s0 = jnp.zeros((d, d), jnp.float32)
+        _, outs = jax.lax.scan(step, s0, (r_h, k_h, v_h, w_h))
+        return outs
+
+    return jax.vmap(per_head)(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), w.astype(jnp.float32),
+                              u.astype(jnp.float32))
+
+
+def naive_swiglu(x, wg, wu, wd, act: str = "silu"):
+    xf = x.astype(jnp.float32)
+    g = xf @ wg.astype(jnp.float32)
+    uu = xf @ wu.astype(jnp.float32)
+    if act == "silu":
+        h = jax.nn.silu(g) * uu
+    else:
+        h = jax.nn.gelu(g, approximate=True) * uu
+    return (h @ wd.astype(jnp.float32)).astype(x.dtype)
+
+
+def naive_mamba_scan(dt, b, c, x, a):
+    """Step-by-step selective-scan reference.  dt/x: (B,S,d); b/c: (B,S,N);
+    a: (d,N)."""
+    import jax
+    import jax.numpy as jnp
+
+    def per_batch(dt_b, b_b, c_b, x_b):
+        def step(h, inp):
+            dt_t, b_t, c_t, x_t = inp
+            h = h * jnp.exp(dt_t[:, None] * a) + (dt_t * x_t)[:, None] * b_t[None, :]
+            return h, jnp.sum(h * c_t[None, :], axis=1)
+
+        h0 = jnp.zeros(a.shape, jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (dt_b, b_b, c_b, x_b))
+        return ys
+
+    return jax.vmap(per_batch)(dt, b, c, x)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (chunked).
+
+    out_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t   = diag(w_t) S_{t-1} + k_tᵀ v_t        (w_t data-dependent, per channel)
+
+TPU mapping: grid = (B·H, n_chunks); the (d, d) state matrix lives in VMEM
+scratch and carries across the sequential chunk dimension.  Within a chunk
+the recurrence is expanded to matmul form with decay-weighted triangular
+attention (same scheme as the XLA-native ``repro.models.rwkv``): with
+per-step log-decay clamped to [-20, 0] the factored ``exp(±cumsum)`` terms
+stay in fp32 range for chunk sizes <= 128.
+
+Block shapes: r/k/v/w tiles (1, C, d) stream through VMEM; d = head_dim
+(64 for RWKV-6) keeps the state tile MXU-aligned at fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                chunk: int, d: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)      # (C, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)      # per-step decay in (0, 1)
+    u = u_ref[0].astype(jnp.float32)      # (1, d) bonus
+
+    logw = jnp.log(jnp.maximum(w, 1e-20))
+    cum = jnp.cumsum(logw, axis=0)                       # (C, d)
+    c = jnp.concatenate([jnp.zeros((1, d), jnp.float32), cum[:-1]], axis=0)
+
+    rq = r * jnp.exp(c)
+    kq = k * jnp.exp(-cum)
+    att = jax.lax.dot_general(rq, kq, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(tj < ti, att, 0.0)
+    out = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    # bonus diagonal
+    bonus = jnp.sum(r * u * k, axis=1, keepdims=True)    # (C, 1)
+    out = out + bonus * v
+    # incoming state
+    out = out + jax.lax.dot_general(rq, s_ref[...], (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    # state update: S <- diag(exp(cum_C)) S + sum_j diag(exp(cum_C - cum_j)) k_j^T v_j
+    decay_all = jnp.exp(cum[-1])                         # (d,)
+    kw = k * jnp.exp(cum[-1][None, :] - cum)             # (C, d)
+    s_ref[...] = (s_ref[...] * decay_all[:, None] +
+                  jax.lax.dot_general(kw, v, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/w: (BH, S, d) with w the per-step decay in (0,1); u: (BH, d).
+
+    Returns (BH, S, d) fp32 WKV outputs (pre group-norm)."""
+    BH, S, d = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    u3 = u[:, None, :]                                    # (BH, 1, d)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, t: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u3)

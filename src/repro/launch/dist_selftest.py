@@ -1,0 +1,148 @@
+"""Distributed-runtime self-test: HPP train parity vs single-device reference.
+
+Runs every architecture family's smoke config through the full shard_map
+pipeline (data=2, stage=2, tp=2 on 8 host devices) and compares the loss to
+the single-device ``repro.models.model.loss_fn`` with identical params.
+
+Invoked by tests/test_distributed.py in a subprocess (so the host-device
+flag does not leak into other tests) and usable directly:
+
+    PYTHONPATH=src python -m repro.launch.dist_selftest [arch ...]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses  # noqa: E402
+import sys  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+DEFAULT_ARCHS = [
+    "phi3-mini-3.8b",          # dense MHA
+    "gemma-2b",                # MQA kv=1 (replicated-KV slice path), GeGLU, tied
+    "gemma2-2b",               # sliding window + softcaps + post norms
+    "phi3.5-moe-42b-a6.6b",    # MoE with EP all_to_all
+    "jamba-1.5-large-398b",    # hybrid mamba + attn + MoE
+    "rwkv6-7b",                # attention-free
+    "musicgen-large",          # multi-codebook + prefix
+    "internvl2-2b",            # VLM prefix
+    "deepseek-v3-671b",        # MLA + sigmoid router + MTP
+]
+
+TOL = 2e-3
+
+
+def run_arch(arch: str, devices) -> float:
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticLM, shard_batch
+    from repro.models.frontend import frontend_dim
+    from repro.models.model import init_model, loss_fn as local_loss_fn
+    from repro.runtime.train import build_train_step, init_train_state
+
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        # capacity drops are the one legitimate local/global divergence —
+        # disable them for the parity check
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    B, S = 8, 64
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    ts = build_train_step(cfg, mesh_prod, global_batch=B, stage=2, n_micro=4)
+
+    key = jax.random.PRNGKey(0)
+    ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    batch_np = ds.batch(0, B)
+    batch = shard_batch(batch_np, ts.mesh, ts.batch_specs)
+    params, opt_state = init_train_state(key, ts)
+
+    loss_d, metrics = ts.loss_fn(params, batch)
+
+    ref_params = init_model(key, cfg)
+    loss_r, metrics_r = jax.jit(lambda p, b: local_loss_fn(p, b, cfg, ce_chunk=1024))(
+        ref_params, {k: jnp.asarray(v) for k, v in batch_np.items()})
+
+    # CE must match exactly; the MoE aux loss is a per-shard/per-microbatch
+    # estimate (as in production systems), so the total gets a looser bound
+    diff = abs(float(metrics["ce"]) - float(metrics_r["ce"]))
+    diff_total = abs(float(loss_d) - float(loss_r))
+    assert diff_total < 0.05, (arch, diff_total)
+
+    # and one optimizer step must reduce the loss
+    new_params, new_opt, l0, _ = ts.step_fn(params, opt_state, batch)
+    l1, _ = ts.loss_fn(new_params, batch)
+    improved = float(l1) < float(l0)
+    print(f"{arch:26s} dist={float(loss_d):.5f} ref={float(loss_r):.5f} "
+          f"diff={diff:.2e} step {float(l0):.4f}->{float(l1):.4f} "
+          f"{'OK' if diff < TOL and improved else 'FAIL'}", flush=True)
+    if diff >= TOL or not improved:
+        raise SystemExit(f"{arch}: parity diff {diff} (tol {TOL}) improved={improved}")
+    return diff
+
+
+def run_serve(arch: str, devices, seq_shard: bool = False, stage=None) -> float:
+    """Distributed serve_step vs single-device decode logits parity."""
+    from repro.configs import get_smoke_config
+    from repro.models.model import decode_step, init_decode_states, init_model
+    from repro.runtime.serve import build_serve_step, prepare_serve_states
+    from repro.runtime.train import prepare_params
+    from repro.distributed.sharding import named
+
+    cfg = get_smoke_config(arch).replace(prefix_len=0, mtp_depth=0)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    B, cache_len, steps = (1, 64, 6) if seq_shard else (8, 64, 6)
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    ss = build_serve_step(cfg, mesh_prod, batch_global=B, cache_len=cache_len,
+                          seq_shard=seq_shard, stage=stage)
+
+    key = jax.random.PRNGKey(0)
+    params = jax.jit(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                     out_shardings=named(ss.mesh, ss.param_specs))(key)
+    states = jax.jit(lambda: prepare_serve_states(cfg, ss.spec.plan, B, cache_len),
+                     out_shardings=named(ss.mesh, ss.state_specs))()
+
+    ref_params = init_model(key, cfg)
+    ref_states = init_decode_states(B, cache_len, cfg)
+    ref_step = jax.jit(lambda p, t, pos, st: decode_step(p, t, pos, st, cfg))
+
+    shape = (steps, B, cfg.n_codebooks) if cfg.n_codebooks > 1 else (steps, B)
+    tokens = np.random.RandomState(0).randint(0, cfg.vocab_size, size=shape)
+    worst = 0.0
+    for t in range(steps):
+        tok = jnp.asarray(tokens[t], jnp.int32)
+        logits_d, states = ss.step_fn(params, tok, jnp.int32(t), states)
+        logits_r, ref_states = ref_step(ref_params, tok, jnp.int32(t), ref_states)
+        d = float(jnp.max(jnp.abs(jnp.asarray(logits_d) - logits_r)))
+        worst = max(worst, d)
+    tag = "serve-seqshard" if seq_shard else "serve"
+    ok = worst < 2e-3
+    print(f"{arch:26s} [{tag}] stage={ss.spec.plan.stage} tp={ss.spec.plan.tp} "
+          f"max_logit_diff={worst:.2e} {'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch} serve parity {worst}")
+    return worst
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    serve = "--serve" in sys.argv
+    seq_shard = "--seq-shard" in sys.argv
+    archs = args or DEFAULT_ARCHS
+    devices = jax.devices()
+    assert len(devices) >= 8, "needs 8 host devices"
+    for arch in archs:
+        if serve:
+            run_serve(arch, devices[:8], seq_shard=seq_shard)
+        else:
+            run_arch(arch, devices[:8])
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+        --shape train_4k [--multi-pod] [--all] [--out artifacts/dryrun]
+
+For each combination this builds the distributed step (HPP pipeline train
+step, prefill step, or TP/seq-sharded serve step), lowers it with
+ShapeDtypeStruct inputs (no allocation), compiles for the full mesh, and
+writes a JSON record with:
+
+  * compiled.memory_analysis()  — per-device bytes (proves it fits),
+  * compiled.cost_analysis()    — per-device FLOPs / bytes for the roofline,
+  * collective bytes parsed from the compiled HLO (per op kind),
+  * the parallelism layout (stage/tp/M) chosen for the arch.
+
+Shapes (from the assignment):
+  train_4k     seq=4096    global_batch=256   train_step
+  prefill_32k  seq=32768   global_batch=32    prefill (forward)
+  decode_32k   seq=32768   global_batch=128   serve_step (1 token, KV cache)
+  long_500k    seq=524288  global_batch=1     serve_step, seq-sharded cache
+               (sub-quadratic archs only — see configs.LONG_CONTEXT_OK)
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode_long", seq=524288, batch=1),
+}
+
+DRYRUN_DTYPES = dict(param_dtype="bfloat16", compute_dtype="bfloat16")
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    from repro.models.frontend import frontend_dim
+
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    if info["kind"] in ("train", "prefill"):
+        if cfg.n_codebooks > 1:
+            toks = jax.ShapeDtypeStruct((B, cfg.n_codebooks, S), jnp.int32)
+        else:
+            toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        batch = {"tokens": toks}
+        if cfg.prefix_len > 0:
+            batch["prefix"] = jax.ShapeDtypeStruct(
+                (B, cfg.prefix_len, frontend_dim(cfg)), jnp.bfloat16)
+        return batch
+    # decode: one token per sequence + scalar position
+    if cfg.n_codebooks > 1:
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return {"token": tok, "position": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def jaxpr_cost_record(arch: str, shape_name: str, multi_pod: bool,
+                      stage: int | None = None,
+                      n_micro: int | None = None,
+                      hoist: bool = True) -> dict | None:
+    """Loop-aware static cost (repro.analysis.jaxpr_cost) for one combo.
+
+    XLA's cost_analysis counts scan bodies once; this traces the jaxpr and
+    multiplies trip counts — the roofline uses these numbers when present.
+    """
+    from repro.analysis.jaxpr_cost import cost_of_fn
+    from repro.configs import LONG_CONTEXT_OK, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim import AdamW
+    from repro.runtime.serve import (build_prefill_step, build_serve_step,
+                                     prepare_serve_states)
+    from repro.runtime.train import build_train_step, prepare_params
+
+    info = SHAPES[shape_name]
+    cfg = get_config(arch).replace(**DRYRUN_DTYPES)
+    if info["kind"] == "decode_long" and arch not in LONG_CONTEXT_OK:
+        return None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    def axsz(plan):
+        return {"pod": plan.pod, "data": plan.data, "stage": plan.stage,
+                "tp": plan.tp}
+
+    if info["kind"] == "train":
+        ts = build_train_step(cfg, mesh, global_batch=info["batch"],
+                              stage=stage, n_micro=n_micro,
+                              hoist_varying=hoist)
+        ap = jax.eval_shape(lambda k: prepare_params(k, cfg, ts.spec.plan),
+                            jax.random.PRNGKey(0))
+        ao = jax.eval_shape(AdamW(lr=1e-3).init, ap)
+        c = cost_of_fn(ts.step_fn, ap, ao, input_specs(cfg, shape_name),
+                       axis_sizes=axsz(ts.spec.plan))
+    elif info["kind"] == "prefill":
+        ss = build_prefill_step(cfg, mesh, batch_global=info["batch"],
+                                seq_len=info["seq"], stage=stage,
+                                n_micro=n_micro)
+        ap = jax.eval_shape(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                            jax.random.PRNGKey(0))
+        c = cost_of_fn(ss.step_fn, ap, input_specs(cfg, shape_name),
+                       axis_sizes=axsz(ss.spec.plan))
+    else:
+        seq_shard = info["kind"] == "decode_long"
+        ss = build_serve_step(cfg, mesh, batch_global=info["batch"],
+                              cache_len=info["seq"], seq_shard=seq_shard,
+                              stage=stage)
+        ap = jax.eval_shape(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                            jax.random.PRNGKey(0))
+        as_ = jax.eval_shape(lambda: prepare_serve_states(
+            cfg, ss.spec.plan, info["batch"], info["seq"]))
+        sp = input_specs(cfg, shape_name)
+        c = cost_of_fn(ss.step_fn, ap, sp["token"], sp["position"], as_,
+                       axis_sizes=axsz(ss.spec.plan))
+    return {"jcost": {"flops": c.flops, "bytes": c.bytes,
+                      "collective_bytes": c.collective_bytes,
+                      "by_collective": dict(c.by_collective)}}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            stage: int | None = None, n_micro: int | None = None,
+            tag: str = "", hoist: bool = True, zero_opt: bool = False) -> dict:
+    from repro.analysis.hlo import collective_bytes, total_collective_bytes
+    from repro.configs import LONG_CONTEXT_OK, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim import AdamW
+    from repro.runtime.serve import (build_prefill_step, build_serve_step,
+                                     prepare_serve_states)
+    from repro.runtime.train import build_train_step, prepare_params
+
+    info = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch).replace(**DRYRUN_DTYPES)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "kind": info["kind"], "status": "skip"}
+
+    if info["kind"] == "decode_long" and arch not in LONG_CONTEXT_OK:
+        rec["reason"] = "full-attention arch: long_500k skipped per assignment"
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+
+    if info["kind"] == "train":
+        ts = build_train_step(cfg, mesh, global_batch=info["batch"],
+                              stage=stage, n_micro=n_micro,
+                              hoist_varying=hoist, zero_opt=zero_opt)
+        plan = ts.spec.plan
+        abstract_params = jax.eval_shape(
+            lambda k: prepare_params(k, cfg, plan), jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-3)
+        abstract_opt = jax.eval_shape(opt.init, abstract_params)
+        lowered = ts.step_fn.lower(abstract_params, abstract_opt,
+                                   input_specs(cfg, shape_name))
+        tokens_global = info["batch"] * info["seq"]
+        rec.update(stage=plan.stage, tp=plan.tp, n_micro=ts.spec.n_micro)
+    elif info["kind"] == "prefill":
+        ss = build_prefill_step(cfg, mesh, batch_global=info["batch"],
+                                seq_len=info["seq"], stage=stage,
+                                n_micro=n_micro)
+        plan = ss.spec.plan
+        abstract_params = jax.eval_shape(
+            lambda k: prepare_params(k, cfg, plan), jax.random.PRNGKey(0))
+        lowered = ss.step_fn.lower(abstract_params,
+                                   input_specs(cfg, shape_name))
+        tokens_global = info["batch"] * info["seq"]
+        rec.update(stage=plan.stage, tp=plan.tp, n_micro=ss.spec.n_groups)
+    else:
+        seq_shard = info["kind"] == "decode_long"
+        ss = build_serve_step(cfg, mesh, batch_global=info["batch"],
+                              cache_len=info["seq"], seq_shard=seq_shard,
+                              stage=stage)
+        plan = ss.spec.plan
+        abstract_params = jax.eval_shape(
+            lambda k: prepare_params(k, cfg, plan), jax.random.PRNGKey(0))
+        abstract_states = jax.eval_shape(
+            lambda: prepare_serve_states(cfg, plan, info["batch"], info["seq"]))
+        spec_in = input_specs(cfg, shape_name)
+        lowered = ss.step_fn.lower(abstract_params, spec_in["token"],
+                                   spec_in["position"], abstract_states)
+        tokens_global = info["batch"]          # one token per sequence
+        rec.update(stage=plan.stage, tp=plan.tp, seq_shard=seq_shard)
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rec.update(
+        status="ok",
+        n_devices=mesh.devices.size,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        tokens_global=tokens_global,
+        active_params=cfg.active_param_count(),
+        total_params=cfg.param_count(),
+        memory=dict(
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            total_bytes=(ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                         ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        ),
+        cost={k: cost.get(k, 0.0) for k in ("flops", "bytes accessed")},
+        collectives=coll,
+        collective_bytes_total=total_collective_bytes(hlo),
+        hlo_bytes=len(hlo),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--stage", type=int, default=None)
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--zero-opt", action="store_true",
+                    help="ZeRO-1: shard Adam moments over (pod,data)")
+    ap.add_argument("--no-hoist", action="store_true",
+                    help="paper-faithful baseline (no varying-cast hoist)")
+    ap.add_argument("--jcost", action="store_true",
+                    help="backfill loop-aware jaxpr costs into existing "
+                         "artifacts (no compile)")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+
+    archs = args.arch or (list(ARCH_IDS) if args.all else ["phi3-mini-3.8b"])
+    shapes = args.shape or (list(SHAPES) if args.all else ["train_4k"])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                if args.tag:
+                    name += f"__{args.tag}"
+                path = os.path.join(args.out, name + ".json")
+                if args.jcost:
+                    if not os.path.exists(path):
+                        continue
+                    rec = json.load(open(path))
+                    if rec.get("status") != "ok" or "jcost" in rec:
+                        continue
+                    try:
+                        extra = jaxpr_cost_record(arch, shape, mp,
+                                                  stage=args.stage,
+                                                  n_micro=args.n_micro,
+                                                  hoist=not args.no_hoist)
+                        if extra:
+                            rec.update(extra)
+                            json.dump(rec, open(path, "w"), indent=1)
+                            print(f"[jcost] {name} flops={extra['jcost']['flops']:.3e} "
+                                  f"coll={extra['jcost']['collective_bytes']/2**20:.0f}MiB",
+                                  flush=True)
+                    except Exception as e:
+                        print(f"[jcost-error] {name}: {e}", flush=True)
+                    continue
+                if os.path.exists(path):
+                    print(f"[cached] {name}")
+                    results.append(json.load(open(path)))
+                    continue
+                print(f"[dryrun] {name} ...", flush=True)
+                try:
+                    rec = run_one(arch, shape, mp, args.out, stage=args.stage,
+                                  n_micro=args.n_micro, tag=args.tag,
+                                  hoist=not args.no_hoist,
+                                  zero_opt=args.zero_opt)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ok = rec["status"]
+                extra = ""
+                if ok == "ok":
+                    extra = (f" flops/dev={rec['cost']['flops']:.3e}"
+                             f" mem/dev={rec['memory']['total_bytes']/2**30:.2f}GiB"
+                             f" coll/dev={rec['collective_bytes_total']/2**20:.1f}MiB"
+                             f" compile={rec['compile_s']}s")
+                elif ok == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[{ok}] {name}{extra}", flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,96 @@
+"""Distributed serving launcher: batched autoregressive decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
+        --smoke --devices 8 --batch 8 --prompt-len 16 --gen 32
+"""
+
+import argparse
+import os
+
+
+def _preparse_devices():
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    if args.devices:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+
+_preparse_devices()
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.distributed.sharding import named
+    from repro.runtime.serve import build_serve_step, prepare_serve_states
+    from repro.runtime.train import prepare_params
+
+    cfg = (get_smoke_config(args.arch) if args.smoke else get_config(args.arch))
+    cfg = cfg.replace(prefix_len=0, mtp_depth=0)
+    devs = jax.devices()
+    n = len(devs)
+    data_axis = max(1, n // 4)
+    mesh = Mesh(np.array(devs).reshape(data_axis, n // data_axis),
+                ("data", "model"))
+    cache_len = args.prompt_len + args.gen
+    ss = build_serve_step(cfg, mesh, batch_global=args.batch,
+                          cache_len=cache_len, seq_shard=args.seq_shard)
+    print(f"arch={cfg.name} serve plan: stage={ss.spec.plan.stage} "
+          f"tp={ss.spec.plan.tp} cache={cache_len}")
+
+    key = jax.random.PRNGKey(0)
+    params = jax.jit(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                     out_shardings=named(ss.mesh, ss.param_specs))(key)
+    states = jax.jit(lambda: prepare_serve_states(cfg, ss.spec.plan,
+                                                  args.batch, cache_len),
+                     out_shardings=named(ss.mesh, ss.state_specs))()
+
+    rng = np.random.RandomState(0)
+    shape = (args.batch, cfg.n_codebooks) if cfg.n_codebooks > 1 else (args.batch,)
+    prompt = rng.randint(0, cfg.vocab_size,
+                         size=(args.prompt_len, *shape)).astype(np.int32)
+
+    import time
+    seqs = [prompt[t] for t in range(args.prompt_len)]
+    tok = jnp.asarray(prompt[0])
+    t0 = time.perf_counter()
+    skey = key
+    for pos in range(cache_len - 1):
+        logits, states = ss.step_fn(params, tok, jnp.int32(pos), states)
+        if pos + 1 < args.prompt_len:
+            tok = jnp.asarray(prompt[pos + 1])
+        else:
+            skey = jax.random.fold_in(skey, pos)
+            nxt = jax.random.categorical(
+                skey, jnp.asarray(logits) / args.temperature, axis=-1)
+            tok = nxt.astype(jnp.int32)
+            seqs.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    gen_tokens = args.gen * args.batch
+    print(f"decoded {args.gen} steps x batch {args.batch} in {dt:.1f}s "
+          f"({gen_tokens / dt:.1f} tok/s on CPU-interpret hardware)")
+    out = np.stack(seqs)  # (T, B) or (T, B, CB)
+    print("sample sequence 0:", out[:, 0].reshape(out.shape[0], -1)[:, 0][:24], "...")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

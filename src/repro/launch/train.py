@@ -1,0 +1,110 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \
+        --smoke --devices 8 --steps 50 --global-batch 16 --seq 128
+
+On a real TPU slice the production mesh comes from ``make_production_mesh``;
+on CPU ``--devices N`` forces N host devices (must be set before jax init,
+which this module does first).
+"""
+
+import argparse
+import os
+import sys
+
+
+def _preparse_devices():
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    if args.devices:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+
+_preparse_devices()
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--data-axis", type=int, default=None)
+    ap.add_argument("--stage", type=int, default=None)
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override width (e.g. scale to ~100M params)")
+    ap.add_argument("--n-layers", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro import checkpoint
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import SyntheticLM, shard_batch
+    from repro.models.frontend import frontend_dim
+    from repro.optim import AdamW, cosine_schedule
+    from repro.runtime.train import build_train_step, init_train_state
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    overrides = {}
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if args.n_layers:
+        overrides["n_layers"] = args.n_layers
+    if overrides:
+        cfg = cfg.replace(**overrides)
+
+    devs = jax.devices()
+    n = len(devs)
+    data_axis = args.data_axis or max(1, n // 4)
+    model_axis = n // data_axis
+    mesh = Mesh(np.array(devs).reshape(data_axis, model_axis),
+                ("data", "model"))
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"mesh=(data={data_axis}, model={model_axis})")
+
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=min(20, args.steps // 5),
+                                   total=args.steps))
+    ts = build_train_step(cfg, mesh, global_batch=args.global_batch,
+                          stage=args.stage, n_micro=args.n_micro, optimizer=opt)
+    print(f"plan: stage={ts.spec.plan.stage} tp={ts.spec.plan.tp} "
+          f"M={ts.spec.n_micro}")
+
+    key = jax.random.PRNGKey(0)
+    params, opt_state = init_train_state(key, ts, opt)
+    ds = SyntheticLM(cfg.vocab_size, args.seq, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+
+    import time
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = shard_batch(ds.batch(step, args.global_batch), ts.mesh,
+                            ts.batch_specs)
+        params, opt_state, loss, metrics = ts.step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tput = args.global_batch * args.seq * (step + 1) / dt
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"ce {float(metrics['ce']):.4f} tok/s {tput:,.0f}")
+    if args.checkpoint_dir:
+        checkpoint.save(args.checkpoint_dir, "final", params)
+        print(f"checkpoint saved to {args.checkpoint_dir}")
+    print("done")
+    return float(loss)
+
+
+if __name__ == "__main__":
+    main()

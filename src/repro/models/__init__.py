@@ -1,0 +1,14 @@
+"""Pure-JAX model zoo for the Asteroid reproduction."""
+
+from .attention import AttentionConfig, MLAConfig
+from .config import LayerSpec, ModelConfig
+from .module import NO_PARALLEL, ParallelCtx, tree_bytes, tree_size
+from .moe import MoEConfig
+from .rwkv import RWKVConfig
+from .ssm import MambaConfig
+
+__all__ = [
+    "AttentionConfig", "MLAConfig", "LayerSpec", "ModelConfig", "MoEConfig",
+    "RWKVConfig", "MambaConfig", "ParallelCtx", "NO_PARALLEL",
+    "tree_bytes", "tree_size",
+]

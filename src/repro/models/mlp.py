@@ -1,0 +1,46 @@
+"""Dense MLP blocks: SwiGLU / GeGLU / GELU, Megatron tensor-parallel aware.
+
+TP layout: gate/up projections are column-parallel (d_ff sharded), the down
+projection is row-parallel; a single ``psum`` over the tp axis restores the
+full activation.  Layer code always sees *local* shapes — ``d_ff`` passed to
+``init_mlp`` must already be the per-shard value when used under shard_map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import ParallelCtx, NO_PARALLEL, dense_init, split_keys
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, d_model: int, d_ff_local: int, act: str = "silu", gated: bool = True,
+             dtype=jnp.float32):
+    ks = split_keys(key, 3)
+    params = {
+        "up": dense_init(ks[1], (d_model, d_ff_local), in_dim=d_model, dtype=dtype),
+        "down": dense_init(ks[2], (d_ff_local, d_model), in_dim=d_ff_local, dtype=dtype),
+    }
+    if gated:
+        params["gate"] = dense_init(ks[0], (d_model, d_ff_local), in_dim=d_model, dtype=dtype)
+    return params
+
+
+def mlp(params, x, act: str = "silu", ctx: ParallelCtx = NO_PARALLEL):
+    """x: (..., d_model) -> (..., d_model).  Row-parallel psum over tp."""
+    a = ACTIVATIONS[act]
+    up = x @ params["up"]
+    if "gate" in params:
+        h = a(x @ params["gate"]) * up
+    else:
+        h = a(up)
+    out = h @ params["down"]
+    return ctx.psum_tp(out)

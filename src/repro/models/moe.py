@@ -1,0 +1,162 @@
+"""Mixture-of-Experts layer with expert parallelism over ``ctx.ep_axis``.
+
+Design (EP=DP, the standard TPU layout):
+
+* The router runs on each shard's local tokens.
+* Tokens are dispatched into a per-expert capacity buffer ``(E, C, D)`` via a
+  scatter (sort-free, cumsum position-in-expert), then ``all_to_all`` over the
+  EP axis moves each expert's rows to the shard that owns it.  Every shard
+  owns ``E / ep_size`` experts (their FFN weights are *local* arrays).
+* Expert FFNs are additionally tensor-parallel over ``ctx.tp_axis`` on the
+  ``d_ff`` dim (row-parallel psum on the way down, same as dense MLP).
+* A second ``all_to_all`` returns expert outputs; the combine applies the
+  router weights.
+
+Supports top-k routing with softmax or sigmoid (DeepSeek-V3) scores, shared
+experts, and the switch-style load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .module import ParallelCtx, NO_PARALLEL, dense_init, split_keys
+from .mlp import ACTIVATIONS, init_mlp, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int                 # routed experts (global)
+    top_k: int
+    d_ff: int                      # per-expert hidden dim (global)
+    n_shared_experts: int = 0      # DeepSeek shared expert(s)
+    score_fn: str = "softmax"      # "softmax" | "sigmoid"
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    act: str = "silu"
+    n_experts_global: int | None = None   # set by .local(); None => n_experts
+
+    def local(self, ep: int, tp: int) -> "MoEConfig":
+        assert self.n_experts % ep == 0, (self.n_experts, ep)
+        assert self.d_ff % tp == 0, (self.d_ff, tp)
+        return dataclasses.replace(
+            self, n_experts=self.n_experts // ep, d_ff=self.d_ff // tp,
+            n_experts_global=self.n_experts_global or self.n_experts)
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, n_experts_global: int | None = None,
+             dtype=jnp.float32):
+    """cfg carries *local* sizes; router is over the *global* expert count."""
+    e_global = n_experts_global or cfg.n_experts
+    ks = split_keys(key, 4)
+    e_local = cfg.n_experts
+    params = {
+        "router": dense_init(ks[0], (d_model, e_global), in_dim=d_model, dtype=jnp.float32),
+        # stacked local experts (E_local, ...)
+        "experts": {
+            "gate": dense_init(ks[1], (e_local, d_model, cfg.d_ff), in_dim=d_model, dtype=dtype),
+            "up": dense_init(ks[2], (e_local, d_model, cfg.d_ff), in_dim=d_model, dtype=dtype),
+            "down": dense_init(ks[3], (e_local, cfg.d_ff, d_model), in_dim=cfg.d_ff, dtype=dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = init_mlp(
+            jax.random.fold_in(key, 7), d_model,
+            cfg.d_ff * cfg.n_shared_experts, act=cfg.act, dtype=dtype)
+    return params
+
+
+def _router(params, x2d, cfg: MoEConfig, e_global: int):
+    """x2d: (T, D) -> (weights (T,k), experts (T,k) int32, aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ params["router"].astype(jnp.float32)  # (T, E)
+    if cfg.score_fn == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(scores, cfg.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E * sum_e(frac_tokens_e * mean_prob_e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    assign = jax.nn.one_hot(top_e[:, 0], e_global, dtype=jnp.float32)
+    frac_tokens = assign.mean(axis=0)
+    mean_prob = probs.mean(axis=0)
+    aux = e_global * jnp.sum(frac_tokens * mean_prob) * cfg.aux_loss_weight
+    return top_w, top_e, aux
+
+
+def moe(params, x, cfg: MoEConfig, e_global: int, ctx: ParallelCtx = NO_PARALLEL):
+    """x: (..., D) -> (out (..., D), aux_loss scalar).
+
+    cfg carries local sizes (experts per EP shard, d_ff per TP shard);
+    ``e_global`` is the global routed-expert count.
+    """
+    orig_shape = x.shape
+    D = x.shape[-1]
+    x2d = x.reshape(-1, D)
+    T = x2d.shape[0]
+    ep = ctx.ep_size if ctx.ep_axis is not None else 1
+    e_local = cfg.n_experts
+    assert e_local * ep == e_global, (e_local, ep, e_global)
+
+    top_w, top_e, aux = _router(params, x2d, cfg, e_global)
+
+    # --- dispatch: scatter local tokens into (E_global, C, D) capacity buffer
+    cap = int(cfg.capacity_factor * T * cfg.top_k / e_global) + 1
+    flat_e = top_e.reshape(-1)                      # (T*k,)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), cfg.top_k)
+    # position of each (token, expert) pair within its expert's buffer
+    onehot = jax.nn.one_hot(flat_e, e_global, dtype=jnp.int32)          # (T*k, E)
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.take_along_axis(cum, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    flat_w = jnp.where(keep, flat_w, 0.0)
+    slot = jnp.where(keep, pos_in_e, cap - 1)
+
+    buf = jnp.zeros((e_global, cap, D), x.dtype)
+    buf = buf.at[flat_e, slot].add(jnp.where(keep[:, None], x2d[flat_tok], 0.0).astype(x.dtype))
+
+    # --- EP exchange: rows for expert e travel to shard e // e_local
+    if ctx.ep_axis is not None:
+        # (E_global, C, D) -> all_to_all -> rows grouped by source shard:
+        # result (E_global, C, D) where [s*e_local:(s+1)*e_local] came from shard s
+        buf = ctx.all_to_all_ep(buf, split_axis=0, concat_axis=0)
+        # -> (ep, e_local, C, D) -> (e_local, ep*C, D): each local expert sees
+        # the rows sent by every shard.
+        buf = buf.reshape(ep, e_local, cap, D).transpose(1, 0, 2, 3).reshape(e_local, ep * cap, D)
+    else:
+        buf = buf.reshape(e_local, cap, D)
+
+    # --- expert FFN (vmapped over local experts), TP row-parallel on down
+    act = ACTIVATIONS[cfg.act]
+    ex = params["experts"]
+
+    def expert_fn(g, u, d, rows):
+        h = act(rows @ g) * (rows @ u)
+        return h @ d
+
+    out_rows = jax.vmap(expert_fn)(ex["gate"], ex["up"], ex["down"], buf)
+    out_rows = ctx.psum_tp(out_rows)
+
+    # --- return trip
+    if ctx.ep_axis is not None:
+        out_rows = out_rows.reshape(e_local, ep, cap, D).transpose(1, 0, 2, 3).reshape(e_global, cap, D)
+        out_rows = ctx.all_to_all_ep(out_rows, split_axis=0, concat_axis=0)
+    else:
+        out_rows = out_rows.reshape(e_global, cap, D)
+
+    # --- combine: gather each (token, k) slot's output, weight, and sum
+    gathered = out_rows[flat_e, slot]               # (T*k, D)
+    combined = jnp.zeros((T, D), jnp.float32)
+    combined = combined.at[flat_tok].add(gathered.astype(jnp.float32) * flat_w[:, None])
+    out = combined.astype(x.dtype)
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], x2d, act=cfg.act, ctx=ctx)
+
+    return out.reshape(orig_shape), aux

@@ -1,0 +1,28 @@
+"""Normalization layers (RMSNorm family, pure JAX)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .module import ones_init, zeros_init
+
+
+def init_rmsnorm(key, dim: int, dtype=jnp.float32, zero_centered: bool = False):
+    """RMSNorm params.
+
+    ``zero_centered`` (Gemma-style) stores ``w`` with effective scale
+    ``1 + w`` — pass the same flag to :func:`rmsnorm` at apply time.
+    """
+    init = zeros_init if zero_centered else ones_init
+    return {"scale": init(key, (dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, zero_centered: bool = False):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * (var + eps) ** -0.5
+    scale = params["scale"].astype(jnp.float32)
+    if zero_centered:
+        scale = 1.0 + scale
+    return (xf * scale).astype(dtype)

@@ -1,0 +1,46 @@
+"""Rotary position embeddings (RoPE), including partial-dim RoPE for MLA."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables for given positions.
+
+    positions: (...,) int32  ->  cos, sin: (..., head_dim // 2) float32
+    """
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x: (..., S, H, D) with cos/sin (..., S, D//2); broadcasting over heads.
+    Uses the "split-half" convention (as in Llama/Gemma reference code).
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    # cos/sin: (..., S, d2) -> (..., S, 1, d2) to broadcast over the head dim.
+    cos_b = cos[..., None, :]
+    sin_b = sin[..., None, :]
+    out1 = x1 * cos_b - x2 * sin_b
+    out2 = x2 * cos_b + x1 * sin_b
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def apply_rope_partial(x: jnp.ndarray, cos, sin, rope_dim: int) -> jnp.ndarray:
+    """RoPE on the *last* ``rope_dim`` channels only (DeepSeek MLA layout)."""
+    if rope_dim == x.shape[-1]:
+        return apply_rope(x, cos, sin)
+    pass_dim = x.shape[-1] - rope_dim
+    x_pass, x_rope = x[..., :pass_dim], x[..., pass_dim:]
+    return jnp.concatenate([x_pass, apply_rope(x_rope, cos, sin)], axis=-1)

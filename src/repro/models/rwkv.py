@@ -1,0 +1,255 @@
+"""RWKV-6 "Finch" block: time-mix (WKV6 with data-dependent decay) + channel-mix.
+
+Faithful to arXiv:2404.05892 in structure:
+
+* token-shift with data-dependent linear interpolation (the ddlerp is kept,
+  with the low-rank "lora" producing the five mix coefficients),
+* per-channel *data-dependent* decay ``w_t = exp(-exp(w0 + lora_w(x_t)))`` —
+  the defining Finch feature,
+* per-head WKV state ``S ∈ R^{head × head}``:  ``out_t = r_t · (S + diag(u)·kᵀv)``,
+  ``S ← diag(w_t)·S + kᵀ_t v_t`` with bonus ``u``,
+* grouped RMS-norm over heads after WKV, learned gate ``g``,
+* channel-mix: token-shift + squared-relu MLP.
+
+The sequence form is computed in *chunks*: within a chunk the recurrence is
+expanded to matmul form (decay-weighted lower-triangular attention-like
+product), across chunks the (B, H, d, d) state is carried by ``lax.scan`` —
+the same scheme as the Pallas kernel in ``repro.kernels.rwkv6_wkv``.
+
+TP: heads are sharded over ``ctx.tp_axis``; all projections column-parallel,
+``out_proj`` row-parallel (+psum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .module import ParallelCtx, NO_PARALLEL, dense_init, split_keys, zeros_init, vscan
+from .norms import init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+    chunk: int = 64
+    ffn_mult: float = 3.5          # channel-mix hidden = ffn_mult * d
+
+
+def init_rwkv_time_mix(key, d_model: int, cfg: RWKVConfig, tp: int = 1, dtype=jnp.float32):
+    assert d_model % cfg.head_dim == 0
+    h_global = d_model // cfg.head_dim
+    assert h_global % tp == 0
+    d_loc = d_model // tp
+    ks = split_keys(key, 16)
+    p = {
+        # token-shift ddlerp: base mix + low-rank data-dependent part (5 targets:
+        # r, k, v, w, g)
+        "mix_base": (jax.random.uniform(ks[0], (5, d_model)) * 0.5).astype(jnp.float32),
+        "mix_lora_a": dense_init(ks[1], (d_model, cfg.mix_lora * 5), in_dim=d_model, dtype=dtype),
+        "mix_lora_b": zeros_init(ks[2], (5, cfg.mix_lora, d_model), dtype),
+        # projections (column-parallel: local head block)
+        "wr": dense_init(ks[3], (d_model, d_loc), in_dim=d_model, dtype=dtype),
+        "wk": dense_init(ks[4], (d_model, d_loc), in_dim=d_model, dtype=dtype),
+        "wv": dense_init(ks[5], (d_model, d_loc), in_dim=d_model, dtype=dtype),
+        "wg": dense_init(ks[6], (d_model, d_loc), in_dim=d_model, dtype=dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + (x @ a) @ b))
+        "w0": (jax.random.uniform(ks[7], (d_loc,), minval=-8.0, maxval=-4.0)).astype(jnp.float32),
+        "w_lora_a": dense_init(ks[8], (d_model, cfg.decay_lora), in_dim=d_model, dtype=dtype),
+        "w_lora_b": zeros_init(ks[9], (cfg.decay_lora, d_loc), dtype),
+        "u": (jax.random.uniform(ks[10], (d_loc,)) * 0.5).astype(jnp.float32),  # bonus
+        "ln_x": init_rmsnorm(ks[11], cfg.head_dim, dtype),   # grouped per-head norm
+        "out": dense_init(ks[12], (d_loc, d_model), in_dim=d_loc, dtype=dtype),
+    }
+    return p
+
+
+def _token_shift(x, prev):
+    """x: (B,S,D); prev: (B,1,D) last token of previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x, xs):
+    """Data-dependent lerp between x and shifted xs -> 5 mixed streams."""
+    base = params["mix_base"]                    # (5, D)
+    delta = xs - x
+    lora = jnp.tanh((x + delta * 0.5) @ params["mix_lora_a"])
+    lora = lora.reshape(*x.shape[:-1], 5, -1)
+    adj = jnp.einsum("...fl,fld->...fd", lora, params["mix_lora_b"])
+    mix = jnp.clip(base + adj, 0.0, 1.0)         # (...,5,D)
+    return x[..., None, :] + delta[..., None, :] * mix  # (...,5,D)
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """WKV6 over one chunk in matmul form.
+
+    r,k,v: (B,H,C,d); w: (B,H,C,d) per-step decay in (0,1); u: (H,d) bonus;
+    s0: (B,H,d,d) carry (key-dim × value-dim).
+    Returns (out (B,H,C,d), s_end).
+    """
+    B, H, C, d = r.shape
+    logw = jnp.log(jnp.maximum(w, 1e-20))
+    cum = jnp.cumsum(logw, axis=2)                            # (B,H,C,d) log decay up to & incl t
+    # decay from step j+1..t applied between pair (t, j):  exp(cum_t - cum_j - logw_t? )
+    # state before bonus at t uses products of w over (j, t): prod_{i=j+1}^{t} w_i? —
+    # convention: S_t = diag(w_t) S_{t-1} + k_t^T v_t applied AFTER readout with bonus:
+    #   out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    # so pair (t, j<t) weight = prod_{i=j+1}^{t-1} w_i = exp(cum_{t-1} - cum_j)
+    # Use shifted cumsum: c_t = cum_{t-1} (c_0 = 0).
+    c = jnp.concatenate([jnp.zeros_like(cum[:, :, :1]), cum[:, :, :-1]], axis=2)
+    rq = r * jnp.exp(c)                                       # (B,H,C,d)
+    kq = k * jnp.exp(-cum)                                    # pair weight exp(c_t - cum_j)... see below
+    # attention-like intra-chunk matrix: A[t,j] = sum_d r_t[d] k_j[d] exp(c_t - cum_j)  (j < t)
+    att = jnp.einsum("bhtd,bhjd->bhtj", rq, kq)
+    tri = jnp.tril(jnp.ones((C, C)), k=-1)
+    att = att * tri
+    out = jnp.einsum("bhtj,bhjd->bhtd", att, v)
+    # bonus (diagonal) term: r_t diag(u) k_t^T v_t
+    bonus = jnp.einsum("bhtd,hd,bhtd->bht", r, u, k)
+    out = out + bonus[..., None] * v
+    # contribution of the incoming state: r_t exp(c_t) @ s0
+    out = out + jnp.einsum("bhtd,bhde->bhte", rq, s0)
+    # end-of-chunk state: S_C = diag(exp(cum_C)) s0 + sum_j diag(exp(cum_C - cum_j)) k_j^T v_j
+    decay_all = jnp.exp(cum[:, :, -1])                        # (B,H,d)
+    s_end = s0 * decay_all[..., None] + jnp.einsum(
+        "bhjd,bhje->bhde", k * jnp.exp(cum[:, :, -1:] - cum), v)
+    return out, s_end
+
+
+def rwkv_time_mix(params, x, cfg: RWKVConfig, ctx: ParallelCtx = NO_PARALLEL,
+                  state=None):
+    """x: (B, S, D) -> (out, new_state).
+
+    state = {"shift": (B,1,D), "wkv": (B,H_loc,d,d)}.
+    """
+    B, S, D = x.shape
+    d = cfg.head_dim
+    xs = _token_shift(x, state["shift"] if state is not None else jnp.zeros((B, 1, D), x.dtype))
+    mixed = _ddlerp(params, x, xs)                          # (B,S,5,D)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = (xr @ params["wr"])
+    k = (xk @ params["wk"])
+    v = (xv @ params["wv"])
+    g = jax.nn.silu(xg @ params["wg"])
+    H_loc = r.shape[-1] // d
+
+    logit = params["w0"] + jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    # Per-step log-decay clamped to >= -1 in the chunked (sequence) form so the
+    # factored exp(-cumsum(log w)) stays in fp32 range; channels asking for a
+    # faster decay saturate to ~0 within a few steps anyway.  The recurrent
+    # decode path uses the unclamped decay.
+    logit = jnp.clip(logit.astype(jnp.float32), -20.0, 0.0)
+    w = jnp.exp(-jnp.exp(logit))                            # (B,S,d_loc) in (0,1)
+
+    def heads(t):  # (B,S,H*d) -> (B,H,S,d)
+        return t.reshape(B, S, H_loc, d).transpose(0, 2, 1, 3)
+
+    rh, kh, vh, wh = map(lambda t: heads(t).astype(jnp.float32), (r, k, v, w))
+    u = params["u"].reshape(H_loc, d)
+
+    chunk = min(cfg.chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H_loc, d, d), jnp.float32))
+
+    def chunk_step(s, args):
+        rc, kc, vc, wc = args
+        # bonus with per-head u
+        out, s_end = _wkv_chunk(rc, kc, vc, wc, u, s)
+        return s_end, out
+
+    def to_chunks(t):  # (B,H,S,d) -> (n,B,H,chunk,d)
+        return t.reshape(B, H_loc, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    s_final, outs = vscan(jax.checkpoint(chunk_step), s0,
+                             tuple(map(to_chunks, (rh, kh, vh, wh))))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, H_loc, S, d)
+
+    # grouped per-head RMS norm, gate, out-proj
+    o = rmsnorm(params["ln_x"], o)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H_loc * d).astype(x.dtype)
+    out = (o * g) @ params["out"]
+    new_state = {"shift": x[:, -1:], "wkv": s_final}
+    return ctx.psum_tp(out), new_state
+
+
+def rwkv_time_mix_decode(params, x, cfg: RWKVConfig, state, ctx: ParallelCtx = NO_PARALLEL):
+    """Single-token recurrent step.  x: (B, D)."""
+    B, D = x.shape
+    d = cfg.head_dim
+    xs = state["shift"][:, 0]
+    mixed = _ddlerp(params, x, xs)                           # (B,5,D)
+    xr, xk, xv, xw, xg = [mixed[:, i] for i in range(5)]
+
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    H_loc = r.shape[-1] // d
+
+    logit = params["w0"] + jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(logit.astype(jnp.float32)))
+
+    rh, kh, vh, wh = [t.reshape(B, H_loc, d).astype(jnp.float32) for t in (r, k, v, w)]
+    u = params["u"].reshape(H_loc, d)
+    s = state["wkv"]                                         # (B,H,d,d)
+
+    kv = jnp.einsum("bhd,bhe->bhde", kh, vh)
+    out = jnp.einsum("bhd,bhde->bhe", rh, s + u[None, :, :, None] * kv)
+    s_new = s * wh[..., None] + kv
+
+    o = rmsnorm(params["ln_x"], out.reshape(B, H_loc, 1, d))[:, :, 0]
+    o = o.reshape(B, H_loc * d).astype(x.dtype)
+    out = (o * g) @ params["out"]
+    return ctx.psum_tp(out), {"shift": x[:, None], "wkv": s_new}
+
+
+# ---------------------------------------------------------------------------
+# Channel mix
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_channel_mix(key, d_model: int, d_ff_local: int, dtype=jnp.float32):
+    ks = split_keys(key, 4)
+    return {
+        "mix_k": (jax.random.uniform(ks[0], (d_model,)) * 0.5).astype(jnp.float32),
+        "mix_r": (jax.random.uniform(ks[1], (d_model,)) * 0.5).astype(jnp.float32),
+        "wk": dense_init(ks[2], (d_model, d_ff_local), in_dim=d_model, dtype=dtype),
+        "wr": dense_init(ks[3], (d_model, d_model), in_dim=d_model, dtype=dtype),
+        "wv": dense_init(jax.random.fold_in(key, 9), (d_ff_local, d_model), in_dim=d_ff_local, dtype=dtype),
+    }
+
+
+def rwkv_channel_mix(params, x, ctx: ParallelCtx = NO_PARALLEL, state=None):
+    """x: (B,S,D) -> (out, new_state); state = {"shift": (B,1,D)}."""
+    B, S, D = x.shape
+    prev = state["shift"] if state is not None else jnp.zeros((B, 1, D), x.dtype)
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * params["mix_k"]
+    xr = x + (xs - x) * params["mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    kv = ctx.psum_tp(k @ params["wv"])
+    out = jax.nn.sigmoid(xr @ params["wr"]) * kv
+    return out, {"shift": x[:, -1:]}
+
+
+def rwkv_channel_mix_decode(params, x, state, ctx: ParallelCtx = NO_PARALLEL):
+    out, new_state = rwkv_channel_mix(params, x[:, None], ctx, state)
+    return out[:, 0], new_state
+
+
+def init_rwkv_state(batch: int, d_model: int, cfg: RWKVConfig, tp: int = 1,
+                    dtype=jnp.float32):
+    h_loc = d_model // cfg.head_dim // tp
+    return {
+        "tm": {"shift": jnp.zeros((batch, 1, d_model), dtype),
+               "wkv": jnp.zeros((batch, h_loc, cfg.head_dim, cfg.head_dim), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, 1, d_model), dtype)},
+    }

@@ -1,0 +1,194 @@
+"""Mamba (S6 selective SSM) block — used by the Jamba hybrid architecture.
+
+Implements the Mamba-1 block: in-proj -> (x, z); causal depthwise conv;
+selective scan  h_t = exp(Δ_t ⊙ A) h_{t-1} + Δ_t B_t x_t ;  y_t = C_t h_t + D x_t ;
+gated by silu(z); out-proj.
+
+The scan is *chunked*: a `lax.scan` over time-chunks carries the (B, d_inner,
+d_state) hidden state; inside a chunk a `lax.associative_scan` runs the
+diagonal linear recurrence.  The chunk function is `jax.checkpoint`-ed so the
+backward pass recomputes intra-chunk intermediates (the same strategy the
+reference CUDA kernel uses), bounding activation memory to O(S/chunk) states.
+
+TP: d_inner is sharded over ``ctx.tp_axis`` (column-parallel in_proj, row-
+parallel out_proj + psum), mirroring the Megatron-style attention layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .module import ParallelCtx, NO_PARALLEL, dense_init, split_keys, zeros_init, vscan
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int | None = None      # default: ceil(d_model / 16)
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def get_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank is not None else -(-d_model // 16)
+
+
+def init_mamba(key, d_model: int, cfg: MambaConfig, tp: int = 1, dtype=jnp.float32):
+    """Params with d_inner sharded ``tp``-way (local shapes)."""
+    d_in = cfg.d_inner(d_model)
+    assert d_in % tp == 0
+    d_loc = d_in // tp
+    dt_rank = cfg.get_dt_rank(d_model)
+    ks = split_keys(key, 8)
+    # S4D-real initialization for A (negative reals)
+    a = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32)[None, :], (d_loc, 1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[6], (d_loc,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))))
+    return {
+        # separate x/z projections (a fused in_proj would interleave the two
+        # halves and could not be column-sharded over tp)
+        "in_x": dense_init(ks[0], (d_model, d_loc), in_dim=d_model, dtype=dtype),
+        "in_z": dense_init(ks[5], (d_model, d_loc), in_dim=d_model, dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, d_loc), in_dim=cfg.d_conv, dtype=dtype),
+        "conv_b": zeros_init(ks[1], (d_loc,), dtype),
+        "x_proj": dense_init(ks[2], (d_loc, dt_rank + 2 * cfg.d_state), in_dim=d_loc, dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_loc), in_dim=dt_rank, dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a),                       # (d_loc, N) float32
+        "D": jnp.ones((d_loc,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_loc, d_model), in_dim=d_loc, dtype=dtype),
+    }
+
+
+def _ssm_params(params, xc, cfg: MambaConfig, d_model: int,
+                ctx: ParallelCtx = NO_PARALLEL):
+    """xc: (B, S, d_loc) post-conv -> (dt, B_t, C_t) per-step SSM params.
+
+    Under TP, x_proj is row-parallel (consumes the local d_inner shard) and
+    its small (dt_rank + 2N) output is psum-reduced so Δ/B/C see all
+    channels; dt_proj is then column-parallel back to the local shard.
+    """
+    dt_rank = cfg.get_dt_rank(d_model)
+    proj = ctx.psum_tp(xc @ params["x_proj"])
+    dt = proj[..., :dt_rank] @ params["dt_proj"] + params["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                 # (B,S,d_loc)
+    b_t = proj[..., dt_rank: dt_rank + cfg.d_state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + cfg.d_state:].astype(jnp.float32)  # (B,S,N)
+    return dt, b_t, c_t
+
+
+def _chunk_scan(h0, decay, contrib):
+    """Diagonal linear recurrence over one chunk via associative scan.
+
+    h0: (B, d, N); decay/contrib: (B, C, d, N).  Returns (y_states (B,C,d,N), h_end).
+    """
+    def op(a, b):
+        da, xa = a
+        db, xb = b
+        return da * db, xa * db + xb
+
+    dec_acc, x_acc = lax.associative_scan(op, (decay, contrib), axis=1)
+    states = dec_acc * h0[:, None] + x_acc
+    return states, states[:, -1]
+
+
+def mamba_scan(params, xc, cfg: MambaConfig, d_model: int, h0=None,
+               ctx: ParallelCtx = NO_PARALLEL):
+    """Selective scan over (B, S, d_loc).  Returns (y, h_final)."""
+    B, S, d_loc = xc.shape
+    N = cfg.d_state
+    dt, b_t, c_t = _ssm_params(params, xc, cfg, d_model, ctx)
+    A = -jnp.exp(params["A_log"])                                # (d_loc, N)
+    xf = xc.astype(jnp.float32)
+
+    chunk = min(cfg.chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    def reshape_c(t):  # (B,S,...) -> (n_chunks, B, chunk, ...)
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    dt_c, b_c, c_c, x_c = map(reshape_c, (dt, b_t, c_t, xf))
+
+    @jax.checkpoint
+    def chunk_fn(h, args):
+        dt_i, b_i, c_i, x_i = args                # (B,chunk,d), (B,chunk,N), ...
+        decay = jnp.exp(dt_i[..., None] * A)      # (B,chunk,d,N)
+        contrib = (dt_i * x_i)[..., None] * b_i[:, :, None, :]
+        states, h_end = _chunk_scan(h, decay, contrib)
+        y = jnp.einsum("bcdn,bcn->bcd", states, c_i)
+        return h_end, y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_loc, N), jnp.float32)
+    h_final, ys = vscan(chunk_fn, h0, (dt_c, b_c, c_c, x_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d_loc)
+    y = y + xf * params["D"]
+    return y.astype(xc.dtype), h_final
+
+
+def mamba_forward(params, x, cfg: MambaConfig, ctx: ParallelCtx = NO_PARALLEL,
+                  state=None):
+    """Full-sequence Mamba block.  x: (B, S, d_model).
+
+    Returns (y, new_state) where state = {"conv": (B, d_conv-1, d_loc),
+    "ssm": (B, d_loc, N)} for streaming decode continuity.
+    """
+    B, S, _ = x.shape
+    xs = x @ params["in_x"]
+    z = x @ params["in_z"]
+    d_loc = xs.shape[-1]
+
+    # causal depthwise conv along S
+    K = params["conv_w"].shape[0]
+    prev = state["conv"] if state is not None else jnp.zeros((B, K - 1, d_loc), xs.dtype)
+    xp = jnp.concatenate([prev, xs], axis=1)
+    xc = sum(xp[:, i: i + S] * params["conv_w"][i] for i in range(K)) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    h0 = state["ssm"] if state is not None else None
+    y, h_final = mamba_scan(params, xc, cfg, x.shape[-1], h0, ctx)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = {"conv": xp[:, S:], "ssm": h_final}
+    return ctx.psum_tp(out), new_state
+
+
+def mamba_decode(params, x, cfg: MambaConfig, state, ctx: ParallelCtx = NO_PARALLEL):
+    """Single-token Mamba step.  x: (B, d_model); state as above."""
+    B, _ = x.shape
+    xs = x @ params["in_x"]
+    z = x @ params["in_z"]
+    d_loc = xs.shape[-1]
+
+    K = params["conv_w"].shape[0]
+    conv_buf = jnp.concatenate([state["conv"], xs[:, None]], axis=1)  # (B, K, d_loc)
+    xc = jnp.einsum("bkd,kd->bd", conv_buf, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, b_t, c_t = _ssm_params(params, xc[:, None], cfg, x.shape[-1], ctx)
+    dt, b_t, c_t = dt[:, 0], b_t[:, 0], c_t[:, 0]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt[..., None] * A)                                # (B,d,N)
+    h = state["ssm"] * decay + (dt * xc.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + xc.astype(jnp.float32) * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return ctx.psum_tp(out), {"conv": conv_buf[:, 1:], "ssm": h}
+
+
+def init_mamba_state(batch: int, d_model: int, cfg: MambaConfig, tp: int = 1,
+                     dtype=jnp.float32):
+    d_loc = cfg.d_inner(d_model) // tp
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_loc), dtype),
+        "ssm": jnp.zeros((batch, d_loc, cfg.d_state), jnp.float32),
+    }

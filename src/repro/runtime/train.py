@@ -1,0 +1,195 @@
+"""Distributed train-step builder.
+
+``build_train_step`` wires everything: global param init (periods padded to
+the stage count, vocab padded to tp divisibility), PartitionSpecs, the
+shard_map SPMD loss, jax.grad (DP gradient psums fall out of the shard_map
+transpose), and the optimizer update (sharding-preserving elementwise).
+
+``abstract_train_state`` builds the same thing out of ShapeDtypeStructs for
+the dry-run path (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.mesh import MeshPlan, mesh_plan, pick_stage_count, refine_mesh
+from repro.distributed.sharding import (Layout, TRAIN_LAYOUT, named,
+                                        param_pspecs)
+from repro.models.config import ModelConfig
+from repro.models.model import init_model
+from repro.optim import AdamW
+
+from .pipeline import TrainSpec, batch_pspecs, pad_periods, spmd_loss_fn
+
+
+def pad_vocab_params(params, cfg: ModelConfig, tp: int):
+    """Pad embed/head vocab dims to a multiple of tp (CE masks the pad)."""
+    v = cfg.vocab_size
+    v_pad = -(-v // tp) * tp - v
+    if v_pad == 0:
+        return params
+    out = dict(params)
+
+    def pad(a, axis):
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, v_pad)
+        return jnp.pad(a, widths)
+
+    out["embed"] = pad(params["embed"], 0 if cfg.n_codebooks == 1 else 1)
+    if "head" in params:
+        out["head"] = pad(params["head"], 1 if cfg.n_codebooks == 1 else 2)
+    return out
+
+
+def prepare_params(key, cfg: ModelConfig, plan: MeshPlan):
+    """Global init + structural padding for the distributed layout."""
+    params = init_model(key, cfg)
+    params["periods"], _ = pad_periods(params["periods"], cfg.n_periods,
+                                       plan.stage)
+    params = pad_vocab_params(params, cfg, plan.tp)
+    return params
+
+
+def default_n_micro(cfg: ModelConfig, plan: MeshPlan, global_batch: int) -> int:
+    """Micro-batch count: enough to fill the pipeline (>= 2*stages when the
+    local batch allows), dividing the per-shard batch."""
+    b_loc = global_batch // plan.dp_shards
+    target = min(2 * plan.stage, b_loc)
+    m = 1
+    for cand in range(target, 0, -1):
+        if b_loc % cand == 0:
+            m = cand
+            break
+    return max(m, 1)
+
+
+@dataclasses.dataclass
+class TrainStep:
+    spec: TrainSpec
+    mesh: Mesh                      # refined mesh
+    param_specs: object
+    batch_specs: dict
+    step_fn: object                 # jitted (params, opt_state, batch) -> ...
+    loss_fn: object                 # jitted (params, batch) -> (loss, metrics)
+
+
+def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
+                     global_batch: int, *, stage: int | None = None,
+                     n_micro: int | None = None, optimizer: AdamW | None = None,
+                     remat: bool = True, ce_chunk: int = 1024,
+                     hoist_varying: bool = True,
+                     zero_opt: bool = False) -> TrainStep:
+    n_heads = cfg.attn.n_heads if cfg.attn is not None else (
+        cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else cfg.d_model)
+    model_axis = production_mesh.shape["model"]
+    if stage is None:
+        stage = pick_stage_count(cfg.n_layers, len(cfg.pattern), model_axis,
+                                 n_heads)
+    mesh = refine_mesh(production_mesh, stage)
+    plan = mesh_plan(production_mesh, stage)
+    if n_micro is None:
+        n_micro = default_n_micro(cfg, plan, global_batch)
+    spec = TrainSpec(cfg=cfg, plan=plan, n_micro=n_micro, remat=remat,
+                     ce_chunk=ce_chunk, hoist_varying=hoist_varying)
+    optimizer = optimizer or AdamW(lr=1e-3)
+
+    # --- specs (built against an abstract param tree) ----------------------
+    abstract = jax.eval_shape(lambda k: prepare_params(k, cfg, plan),
+                              jax.random.PRNGKey(0))
+    kv_repl = cfg.attn is not None and cfg.attn.n_kv_heads % plan.tp != 0
+    layout = dataclasses.replace(TRAIN_LAYOUT, kv_replicated=kv_repl)
+    pspecs = param_pspecs(abstract, layout)
+    bspecs = batch_pspecs(cfg)
+
+    spmd = spmd_loss_fn(spec)
+    sharded_loss = jax.shard_map(spmd, mesh=mesh,
+                                 in_specs=(pspecs, bspecs),
+                                 out_specs=(P(), {"ce": P(), "aux": P(),
+                                                  "mtp": P(), "tokens": P()}))
+
+    def loss_fn(params, batch):
+        return sharded_loss(params, batch)
+
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss, metrics
+
+    param_shardings = named(mesh, pspecs)
+    jit_loss = jax.jit(loss_fn, in_shardings=(param_shardings, named(mesh, bspecs)))
+    opt_sh = _opt_shardings(optimizer, abstract, param_shardings,
+                            zero_sharding=zero_opt)
+    jit_step = jax.jit(step_fn, in_shardings=(
+        param_shardings, opt_sh, named(mesh, bspecs)),
+        out_shardings=(param_shardings, opt_sh, None, None))
+
+    return TrainStep(spec=spec, mesh=mesh, param_specs=pspecs,
+                     batch_specs=bspecs, step_fn=jit_step, loss_fn=jit_loss)
+
+
+def _zero_moment_shardings(abstract_params, param_shardings):
+    """ZeRO-1-style: shard each moment over ('pod','data') on the first dim
+    that is unsharded and divisible — fp32 Adam moments dominate the training
+    footprint, and they are only touched in the (resharded) update step."""
+    mesh = jax.tree.leaves(param_shardings)[0].mesh
+    dp = mesh.shape["pod"] * mesh.shape["data"]
+
+    def shard_one(leaf, named_sh):
+        spec = list(named_sh.spec) + [None] * (leaf.ndim - len(named_sh.spec))
+        used = set()
+        for entry in spec:
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                used.add(ax)
+        # only dp axes this tensor doesn't already use (e.g. EP'd experts
+        # are already sharded over 'data' — they are "ZeRO'd" by EP)
+        free = tuple(ax for ax in ("pod", "data") if ax not in used)
+        n = 1
+        for ax in free:
+            n *= mesh.shape[ax]
+        if n <= 1:
+            return named_sh
+        for i, dim in enumerate(leaf.shape):
+            if spec[i] is None and dim % n == 0 and dim >= n:
+                spec[i] = free if len(free) > 1 else free[0]
+                return NamedSharding(mesh, P(*spec))
+        return named_sh           # too small / indivisible: keep param layout
+
+    return jax.tree.map(shard_one, abstract_params, param_shardings)
+
+
+def _opt_shardings(optimizer, abstract_params, param_shardings,
+                   zero_sharding: bool = False):
+    """Moments share the param shardings (or a ZeRO-1 dp-sharded variant);
+    the step counter is replicated."""
+    from repro.optim import AdamWState, SGDState
+    mesh = jax.tree.leaves(param_shardings)[0].mesh
+    rep = NamedSharding(mesh, P())
+    moments = (_zero_moment_shardings(abstract_params, param_shardings)
+               if zero_sharding else param_shardings)
+    st = jax.eval_shape(optimizer.init, abstract_params)
+    if isinstance(st, AdamWState):
+        return AdamWState(rep, moments, moments)
+    if isinstance(st, SGDState):
+        return SGDState(rep, moments)
+    raise TypeError(type(st))
+
+
+def init_train_state(key, ts: TrainStep, optimizer: AdamW | None = None):
+    """Materialize sharded params + optimizer state on the mesh."""
+    optimizer = optimizer or AdamW(lr=1e-3)
+    cfg, plan = ts.spec.cfg, ts.spec.plan
+    shardings = named(ts.mesh, ts.param_specs)
+    params = jax.jit(lambda k: prepare_params(k, cfg, plan),
+                     out_shardings=shardings)(key)
+    opt_state = jax.jit(optimizer.init,
+                        out_shardings=_opt_shardings(optimizer,
+                                                     jax.eval_shape(lambda: params),
+                                                     shardings))(params)
+    return params, opt_state

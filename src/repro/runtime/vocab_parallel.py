@@ -1,0 +1,90 @@
+"""Vocab-parallel embedding lookup and cross-entropy (Megatron-style).
+
+The embedding table / LM head are sharded over the ``tp`` axis on the vocab
+dim.  Lookup masks out-of-range ids and psums partial rows; cross-entropy
+computes per-shard partial max / sum-exp / gold-logit and reduces — the full
+(B, S, V) logits are never materialized, and the sequence dim is chunked.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.module import NO_PARALLEL, ParallelCtx, vscan
+
+
+def vp_embed(table_local: jnp.ndarray, ids: jnp.ndarray,
+             ctx: ParallelCtx = NO_PARALLEL) -> jnp.ndarray:
+    """table_local: (V_local, D); ids: (...) global token ids -> (..., D)."""
+    v_local = table_local.shape[0]
+    off = ctx.tp_index() * v_local
+    local_ids = ids - off
+    ok = (local_ids >= 0) & (local_ids < v_local)
+    rows = table_local[jnp.clip(local_ids, 0, v_local - 1)]
+    rows = jnp.where(ok[..., None], rows, 0)
+    return ctx.psum_tp(rows)
+
+
+def vp_ce_chunk(h: jnp.ndarray, w_local: jnp.ndarray, targets: jnp.ndarray,
+                mask: jnp.ndarray, ctx: ParallelCtx, softcap=None,
+                v_valid: int | None = None):
+    """CE over one chunk.  h: (..., D); w_local: (D, V_local);
+    targets/mask: (...).  Returns (sum_loss, sum_count) fp32 — already
+    psum-reduced over tp for the vocab dim (NOT over data/stage).
+
+    ``v_valid``: true vocab size when the table was padded for tp
+    divisibility — padded columns are masked out of the softmax."""
+    v_local = w_local.shape[1]
+    logits = (h @ w_local).astype(jnp.float32)              # (..., V_local)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if v_valid is not None:
+        col = ctx.tp_index() * v_local + jnp.arange(v_local)
+        logits = jnp.where(col < v_valid, logits, -1e30)
+    # the softmax max-shift is gradient-free (pmax has no vjp rule, so the
+    # stop_gradient must sit *before* the collective)
+    m = ctx.pmax_tp(lax.stop_gradient(logits.max(axis=-1)))
+    se = ctx.psum_tp(jnp.exp(logits - m[..., None]).sum(axis=-1))
+    lse = m + jnp.log(se)
+
+    off = ctx.tp_index() * v_local
+    local_t = targets - off
+    ok = (local_t >= 0) & (local_t < v_local)
+    gold_local = jnp.take_along_axis(
+        logits, jnp.clip(local_t, 0, v_local - 1)[..., None], axis=-1)[..., 0]
+    gold = ctx.psum_tp(jnp.where(ok, gold_local, 0.0))
+
+    loss = (lse - gold) * mask
+    return loss.sum(), mask.sum()
+
+
+def vp_chunked_ce(h: jnp.ndarray, w_local: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray, ctx: ParallelCtx = NO_PARALLEL,
+                  softcap=None, chunk: int = 1024, v_valid: int | None = None):
+    """Sequence-chunked vocab-parallel CE.
+
+    h: (B, S, D); targets/mask: (B, S).  Returns (sum_loss, sum_count).
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def step(carry, args):
+        s_loss, s_cnt = carry
+        hi, ti, mi = args
+        l, c = vp_ce_chunk(hi, w_local, ti, mi, ctx, softcap, v_valid)
+        return (s_loss + l, s_cnt + c), None
+
+    hc = h[:, : n * chunk].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = mask[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    zero = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    (s_loss, s_cnt), _ = vscan(step, zero, (hc, tc, mc))
+    if rem:
+        l, c = vp_ce_chunk(h[:, n * chunk:], w_local, targets[:, n * chunk:],
+                           mask[:, n * chunk:], ctx, softcap, v_valid)
+        s_loss, s_cnt = s_loss + l, s_cnt + c
+    return s_loss, s_cnt

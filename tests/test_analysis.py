@@ -1,0 +1,89 @@
+"""Tests for the analysis stack: loop-aware jaxpr costs, HLO collective
+parsing, roofline construction."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.analysis.hlo import _shape_bytes, collective_bytes
+from repro.analysis.jaxpr_cost import (Cost, collective_payload, cost_of_fn,
+                                       jaxpr_cost)
+from repro.analysis.roofline import Roofline, from_record, model_flops
+
+
+def test_dot_flops_exact():
+    f = lambda a, b: a @ b
+    c = cost_of_fn(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                   jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    assert c.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_trip_count():
+    def scanned(a, b):
+        def body(c, _):
+            return jnp.tanh(c @ b), None
+        c, _ = lax.scan(body, a, None, length=10)
+        return c
+
+    one = cost_of_fn(lambda a, b: jnp.tanh(a @ b),
+                     jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    ten = cost_of_fn(scanned, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    assert ten.flops == pytest.approx(10 * one.flops, rel=1e-6)
+
+
+def test_nested_scan():
+    def nested(a):
+        def outer(c, _):
+            def inner(d, _):
+                return d * 2.0, None
+            d, _ = lax.scan(inner, c, None, length=5)
+            return d, None
+        c, _ = lax.scan(outer, a, None, length=3)
+        return c
+
+    c = cost_of_fn(nested, jax.ShapeDtypeStruct((8,), jnp.float32))
+    assert c.flops == 3 * 5 * 8   # 15 multiplies of 8 elements
+
+
+def test_collective_payload_factors():
+    assert collective_payload("psum", 100, 1) == 0.0           # trivial axis
+    assert collective_payload("psum", 100, 4) == pytest.approx(150.0)
+    assert collective_payload("all_to_all", 100, 4) == pytest.approx(75.0)
+    assert collective_payload("ppermute", 100, 4) == 100.0
+
+
+def test_grad_includes_backward():
+    f = lambda a, b: jnp.sum(a @ b)
+    g = jax.grad(f)
+    c_f = cost_of_fn(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    c_g = cost_of_fn(g, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    assert c_g.flops >= 2 * c_f.flops * 0.9   # bwd of matmul ~= 2x fwd
+
+
+def test_hlo_shape_bytes():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("f32[4]") == 16
+    assert _shape_bytes("pred[8]") == 8
+
+
+def test_roofline_from_record():
+    rec = {"arch": "a", "shape": "train_4k", "mesh": "16x16", "kind": "train",
+           "n_devices": 256, "tokens_global": 256 * 4096,
+           "active_params": 1e9,
+           "jcost": {"flops": 1e13, "bytes": 1e12, "collective_bytes": 1e10}}
+    r = from_record(rec)
+    assert r.compute_s == pytest.approx(1e13 / 197e12)
+    assert r.memory_s == pytest.approx(1e12 / 819e9)
+    assert r.collective_s == pytest.approx(1e10 / 50e9)
+    assert r.dominant == "memory"
+    # model flops: 6 * 1e9 * (256*4096/256)
+    assert r.model_flops_per_device == pytest.approx(6e9 * 4096)
+
+
+def test_model_flops_train_vs_infer():
+    assert model_flops(1e9, 100, True) == 3 * model_flops(1e9, 100, False)

@@ -1,0 +1,187 @@
+"""Planner unit + property tests: Algorithm 1/2, cost model, schedules."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.allocation import AllocationError, allocate_microbatch
+from repro.core.costmodel import (Step, dominant_index, hdp_volume, hpp_volume,
+                                  kp_policy, round_latency, stage_memory)
+from repro.core.hardware import (JETSON_NANO, JETSON_NX, JETSON_TX2, Cluster,
+                                 env_b, env_c, env_d)
+from repro.core.planner import (auto_microbatch, plan_dp, plan_gpipe,
+                                plan_hpp, plan_homogeneous_hpp)
+from repro.core.profiler import LayerCost, LayerTable, Profile
+from repro.core.schedule import (max_inflight, schedule_orders,
+                                 stage_order_1f1b, stage_order_gpipe)
+from repro.core.simulator import simulate
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+
+def toy_table(L=12, d=512, seq=128, vocab=32000):
+    cfg = ModelConfig(name=f"toy-{L}L", n_layers=L, d_model=d, vocab_size=vocab,
+                      d_ff=4 * d,
+                      attn=AttentionConfig(n_heads=8, n_kv_heads=8, head_dim=d // 8),
+                      pattern=(LayerSpec(),))
+    return LayerTable.from_model_config(cfg, seq_len=seq)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return Profile.analytic(toy_table(), env_c().sorted_by_memory(), max_batch=64)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def test_allocation_conserves_and_respects_memory(profile):
+    group = tuple(range(len(profile.cluster.devices)))
+    alloc = allocate_microbatch(profile, group, 32, 0, profile.table.L, k_p=1)
+    assert sum(alloc.y) == 32
+    for d, y in zip(group, alloc.y):
+        mem = stage_memory(profile.table, 0, profile.table.L, y, 1)
+        assert mem <= profile.cluster.devices[d].mem_bytes
+
+
+def test_allocation_prefers_fast_devices(profile):
+    # rank 0 is the NX (fastest, most memory after sorting) — it should get
+    # at least as many samples as the weakest nano
+    group = tuple(range(len(profile.cluster.devices)))
+    alloc = allocate_microbatch(profile, group, 24, 0, profile.table.L, k_p=1)
+    assert alloc.y[0] >= alloc.y[-1]
+
+
+def test_allocation_memory_infeasible_raises():
+    tiny = Cluster((JETSON_NANO._replace_mem(1e4) if hasattr(JETSON_NANO, "_replace_mem")
+                    else JETSON_NANO.__class__(**{**JETSON_NANO.__dict__, "mem_bytes": 1e4}),))
+    prof = Profile.analytic(toy_table(), tiny, max_batch=8)
+    with pytest.raises(AllocationError):
+        allocate_microbatch(prof, (0,), 8, 0, prof.table.L, k_p=1)
+
+
+@given(mb=st.integers(2, 48))
+@settings(max_examples=10, deadline=None)
+def test_allocation_total_property(mb):
+    prof = Profile.analytic(toy_table(), env_d().sorted_by_memory(), max_batch=64)
+    group = tuple(range(len(prof.cluster.devices)))
+    alloc = allocate_microbatch(prof, group, mb, 0, prof.table.L, k_p=1)
+    assert sum(alloc.y) == mb
+    assert all(y >= 0 for y in alloc.y)
+    # Eq. 8: reported times are the max over the group
+    ef = max(prof.t_fwd(d, y, 0, prof.table.L) for d, y in zip(group, alloc.y))
+    assert abs(ef - alloc.ef) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+def test_kp_policy_values():
+    assert [kp_policy(3, p) for p in range(3)] == [5, 3, 1]
+    assert [kp_policy(3, p, "a") for p in range(3)] == [6, 4, 2]
+    assert [kp_policy(3, p, "b") for p in range(3)] == [3, 2, 1]
+    assert [kp_policy(3, p, "c") for p in range(3)] == [7, 5, 3]
+
+
+def test_hdp_vs_hpp_volume_shape():
+    """HDP must exceed HPP when parameters dominate activations (Table 2)."""
+    P_bytes = 100e6
+    groups = [{"batch": 16, "act_bytes": [1e6] * 2} for _ in range(2)]
+    v_hdp = hdp_volume(P_bytes, groups)
+    v_hpp = hpp_volume([P_bytes * 0.6, P_bytes * 0.4], [2, 3], [1e6], 32)
+    assert v_hdp > v_hpp
+
+
+def test_round_latency_single_stage_matches_direct():
+    steps = (Step("exec", ef=1.0, eb=2.0, ta=0.5),)
+    # single stage: M*(ef+eb) + ta
+    assert round_latency(steps, 4) == pytest.approx(4 * 3.0 + 0.5)
+
+
+def test_dominant_index_prefers_heavy_step():
+    steps = (Step("exec", 1.0, 1.0), Step("comm", 0.1, 0.1), Step("exec", 2.0, 2.0))
+    assert dominant_index(steps, 8) == 2
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def test_1f1b_order_valid():
+    order = stage_order_1f1b(8, 3)
+    # every micro-batch appears exactly once as F and once as B, B after F
+    fs = [op.micro for op in order if op.kind == "F"]
+    bs = [op.micro for op in order if op.kind == "B"]
+    assert sorted(fs) == list(range(8)) and sorted(bs) == list(range(8))
+    for m in range(8):
+        assert order.index(next(o for o in order if o == o.__class__("F", m))) < \
+               order.index(next(o for o in order if o == o.__class__("B", m)))
+
+
+def test_1f1b_inflight_bound():
+    for M in (4, 8, 16):
+        for k in (1, 3, 5):
+            assert max_inflight(stage_order_1f1b(M, k)) == min(k, M)
+    assert max_inflight(stage_order_gpipe(8)) == 8
+
+
+@given(M=st.integers(1, 32), P=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_schedule_orders_property(M, P):
+    orders = schedule_orders(P, M, "ours")
+    assert len(orders) == P
+    for p, order in enumerate(orders):
+        assert max_inflight(order) == min(2 * (P - p) - 1, M)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 + simulator agreement
+# ---------------------------------------------------------------------------
+
+
+def test_plan_hpp_beats_baselines(profile):
+    plan = plan_hpp(profile, global_batch=64, micro_batch=8)
+    dp = plan_dp(profile, 64, 8)
+    pp = plan_gpipe(profile, 64, 8)
+    assert plan.latency <= dp.latency
+    assert plan.latency <= pp.latency
+
+
+def test_plan_respects_memory(profile):
+    plan = plan_hpp(profile, 64, 8)
+    mems = plan.memory_per_device(profile)
+    for d, m in mems.items():
+        assert m <= profile.cluster.devices[d].mem_bytes
+
+
+def test_simulator_close_to_estimate(profile):
+    plan = plan_hpp(profile, 64, 8)
+    res = simulate(plan, profile, policy="ours")
+    # dominant-step approximation: within 25% of event-accurate makespan
+    assert res.makespan == pytest.approx(plan.latency, rel=0.25)
+
+
+def test_1f1b_policy_memory_ordering(profile):
+    plan = plan_hpp(profile, 64, 8)
+    mem = {}
+    for policy in ("ours", "a", "c", "gpipe"):
+        res = simulate(plan, profile, policy=policy)
+        mem[policy] = res.max_peak_mem
+    assert mem["ours"] <= mem["a"] <= mem["c"]
+    assert mem["ours"] <= mem["gpipe"]
+
+
+def test_homogeneous_planner_worse_on_heterogeneous(profile):
+    ours = plan_hpp(profile, 64, 8)
+    pd = plan_homogeneous_hpp(profile, 64, 8)
+    assert ours.latency <= pd.latency * 1.001
+
+
+def test_auto_microbatch_feasible(profile):
+    plan = auto_microbatch(profile, 64)
+    assert plan.global_batch == 64

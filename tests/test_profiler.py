@@ -1,0 +1,74 @@
+"""Profiler tests: analytic tables, the *real* measurement path (runs jitted
+layers on the local device — the same code would profile a Jetson), and the
+non-linear batch-efficiency shape from Fig. 6."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hardware import JETSON_NANO, JETSON_NX, Cluster
+from repro.core.profiler import (LayerCost, LayerTable, Profile,
+                                 measure_layer_times)
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+
+def test_layer_table_from_model_config():
+    cfg = ModelConfig(name="t", n_layers=4, d_model=128, vocab_size=1000,
+                      d_ff=512,
+                      attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=32),
+                      pattern=(LayerSpec(),))
+    table = LayerTable.from_model_config(cfg, seq_len=64)
+    assert table.L == 6                      # embed + 4 blocks + head
+    assert table.layers[0].name == "embed"
+    assert table.layers[-1].name == "head"
+    # params accounted: blocks sum to ~model total minus embeddings
+    block_params = table.param_bytes(1, 5) / 4
+    assert block_params == pytest.approx(
+        sum(cfg.layer_param_count(s) for s in cfg.pattern) * 4, rel=1e-6)
+
+
+def test_nonlinear_batch_curve():
+    """Fig. 6: time per sample decreases with batch (sub-linear scaling)."""
+    dev = JETSON_NANO
+    per_sample = [dev.layer_time(1e8, b) / b for b in (1, 4, 16, 64)]
+    assert per_sample == sorted(per_sample, reverse=True)
+    # ... but total time still increases
+    totals = [dev.layer_time(1e8, b) for b in (1, 4, 16, 64)]
+    assert totals == sorted(totals)
+
+
+def test_profile_range_queries_consistent():
+    layers = tuple(LayerCost(f"l{i}", 1e8 * (i + 1), 1e6, 1e5)
+                   for i in range(5))
+    prof = Profile.analytic(LayerTable("t", layers),
+                            Cluster((JETSON_NANO, JETSON_NX)), max_batch=8)
+    full = prof.t_fwd(0, 4, 0, 5)
+    split = prof.t_fwd(0, 4, 0, 2) + prof.t_fwd(0, 4, 2, 5)
+    assert full == pytest.approx(split, rel=1e-9)
+    assert prof.t_bwd(0, 4, 0, 5) == pytest.approx(2.0 * full, rel=1e-9)
+    # the NX (rank 1) is strictly faster
+    assert prof.t_fwd(1, 4, 0, 5) < full
+
+
+def test_measured_profile_path():
+    """The real profiler measures jitted layer fns on the local device."""
+    d = 64
+    w1 = jnp.ones((d, d)) * 0.01
+    w2 = jnp.ones((d, d)) * 0.01
+    fns = [lambda x: jnp.tanh(x @ w1), lambda x: jnp.tanh(x @ w2)]
+    tf, tb = measure_layer_times(fns, lambda beta, li: jnp.ones((beta, d)),
+                                 batch_sizes=(1, 4), repeats=2)
+    assert tf.shape == (2, 2) and tb.shape == (2, 2)
+    assert (tf > 0).all() and (tb > 0).all()
+    # feed the measured samples into a Profile
+    layers = tuple(LayerCost(f"l{i}", 1e6, 1e4, 1e3) for i in range(2))
+    samples_f = np.zeros((1, 5, 2))
+    samples_b = np.zeros((1, 5, 2))
+    samples_f[0, 1] = tf[0]
+    samples_f[0, 4] = tf[1]
+    samples_b[0, 1] = tb[0]
+    samples_b[0, 4] = tb[1]
+    prof = Profile.measured(LayerTable("m", layers), Cluster((JETSON_NANO,)),
+                            4, samples_f, samples_b)
+    assert prof.t_fwd(0, 1, 0, 2) == pytest.approx(tf[0].sum(), rel=1e-6)

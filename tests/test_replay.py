@@ -1,0 +1,75 @@
+"""Fault-tolerant pipeline replay (§3.4) tests."""
+
+import pytest
+
+from repro.core.hardware import env_c, env_d
+from repro.core.planner import plan_hpp
+from repro.core.profiler import LayerTable, Profile
+from repro.core.replay import (assign_backups, detection_latency,
+                               heavy_rescheduling, lightweight_replay)
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="toy", n_layers=12, d_model=512, vocab_size=32000,
+                      d_ff=2048,
+                      attn=AttentionConfig(n_heads=8, n_kv_heads=8, head_dim=64),
+                      pattern=(LayerSpec(),))
+    table = LayerTable.from_model_config(cfg, seq_len=128)
+    profile = Profile.analytic(table, env_c().sorted_by_memory(), max_batch=64)
+    plan = plan_hpp(profile, 128, 16, arch="toy")
+    return profile, plan
+
+
+def test_backup_assignment_topology(setup):
+    profile, plan = setup
+    assign = assign_backups(plan, profile)
+    P = len(plan.stages)
+    for p, st in enumerate(plan.stages):
+        if len(st.group) == 1:
+            assert p in assign.backup_of_stage
+            nxt = plan.stages[(p + 1) % P]
+            assert assign.backup_of_stage[p] in nxt.group
+        else:
+            assert p not in assign.backup_of_stage
+
+
+def test_detection_latency_bounds():
+    lat = detection_latency(10.0)
+    # at most heartbeat period + timeout + probe
+    assert 0 < lat <= 0.5 + 2.0 + 1.0 + 1e-9
+
+
+def test_lightweight_faster_than_heavy(setup):
+    profile, plan = setup
+    fail = plan.stages[-1].group[0]
+    light = lightweight_replay(plan, profile, fail)
+    heavy = heavy_rescheduling(plan, profile, fail)
+    assert light.total_s < heavy.total_s
+    # the replanned pipeline keeps most of the throughput
+    assert light.new_plan.throughput >= 0.5 * heavy.new_plan.throughput
+
+
+def test_replay_covers_all_layers_and_devices(setup):
+    profile, plan = setup
+    fail = plan.stages[0].group[0]
+    light = lightweight_replay(plan, profile, fail)
+    stages = light.new_plan.stages
+    # contiguous full cover of the layer range
+    assert stages[0].layers[0] == 0
+    assert stages[-1].layers[1] == profile.table.L
+    for a, b in zip(stages, stages[1:]):
+        assert a.layers[1] == b.layers[0]
+    # failed device no longer used
+    for st in stages:
+        assert fail not in st.group
+
+
+@pytest.mark.parametrize("fail_stage", [0, 1, -1])
+def test_replay_any_stage(setup, fail_stage):
+    profile, plan = setup
+    fail = plan.stages[fail_stage].group[0]
+    rep = lightweight_replay(plan, profile, fail)
+    assert rep.total_s > 0
+    assert rep.new_plan.latency > 0

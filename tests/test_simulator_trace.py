@@ -1,0 +1,76 @@
+"""Simulator trace-level invariants (beyond the makespan checks)."""
+
+import pytest
+
+from repro.core.hardware import env_d
+from repro.core.planner import plan_hpp
+from repro.core.profiler import LayerTable, Profile
+from repro.core.simulator import simulate
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    cfg = ModelConfig(name="t", n_layers=8, d_model=256, vocab_size=8000,
+                      d_ff=1024,
+                      attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=64),
+                      pattern=(LayerSpec(),))
+    table = LayerTable.from_model_config(cfg, seq_len=128)
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=32)
+    plan = plan_hpp(prof, 64, 8, arch="t")
+    return prof, plan
+
+
+def test_trace_completeness(sim_setup):
+    """Every (stage, micro) runs exactly one F and one B, F before B."""
+    prof, plan = sim_setup
+    res = simulate(plan, prof, policy="ours")
+    P, M = len(plan.stages), plan.n_micro
+    seen = {}
+    for t0, t1, stage, op in res.trace:
+        assert t1 >= t0
+        seen.setdefault((stage, op), []).append((t0, t1))
+    for p in range(P):
+        for m in range(M):
+            assert len(seen[(p, f"F{m}")]) == 1
+            assert len(seen[(p, f"B{m}")]) == 1
+            assert seen[(p, f"F{m}")][0][1] <= seen[(p, f"B{m}")][0][0]
+
+
+def test_trace_causality_across_stages(sim_setup):
+    """Micro m cannot start on stage p+1 before finishing on stage p."""
+    prof, plan = sim_setup
+    res = simulate(plan, prof, policy="ours")
+    start = {}
+    end = {}
+    for t0, t1, stage, op in res.trace:
+        if op.startswith("F"):
+            start[(stage, int(op[1:]))] = t0
+            end[(stage, int(op[1:]))] = t1
+    P, M = len(plan.stages), plan.n_micro
+    for p in range(P - 1):
+        for m in range(M):
+            assert start[(p + 1, m)] >= end[(p, m)]
+
+
+def test_no_stage_overlap(sim_setup):
+    """A stage's device group executes one op at a time."""
+    prof, plan = sim_setup
+    res = simulate(plan, prof, policy="ours")
+    by_stage = {}
+    for t0, t1, stage, op in res.trace:
+        by_stage.setdefault(stage, []).append((t0, t1))
+    for stage, spans in by_stage.items():
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert b0 >= a1 - 1e-12
+
+
+def test_gpipe_policy_no_interleave(sim_setup):
+    """Under the gpipe policy, every F on a stage precedes every B."""
+    prof, plan = sim_setup
+    res = simulate(plan, prof, policy="gpipe")
+    for stage in range(len(plan.stages)):
+        ops = sorted((t0, op) for t0, t1, s, op in res.trace if s == stage)
+        first_b = next(i for i, (_, op) in enumerate(ops) if op.startswith("B"))
+        assert all(op.startswith("B") for _, op in ops[first_b:])
