@@ -1,0 +1,293 @@
+"""Lower an Asteroid ``Plan`` (Algorithm 2 output) into the pipeline runtime.
+
+The planner reasons about an edge cluster in *layer-table* coordinates:
+stages are layer ranges ``[i, j)`` over ``embed + n_layers + head`` pseudo
+layers, device groups are ranks into the profiled cluster, and micro-batch
+allocations are per-device sample counts.  The shard_map runtime
+(``repro.runtime``) executes in *mesh* coordinates: a refined
+``(pod, data, stage, tp)`` mesh whose ``stage`` axis slices the stacked
+period params, with ``M`` micro-batches streamed through a circular
+ppermute pipeline.
+
+``lower_plan`` translates between the two worlds:
+
+* stage count        -> ``MeshPlan.stage`` (must divide the mesh model axis),
+* layer ranges       -> per-stage *period* ranges, cuts snapped to period
+                        boundaries (periods are the runtime's atomic unit),
+* ``Plan.n_micro``   -> the runtime's micro-batch count ``M``,
+* per-stage warm-up  -> K_p from ``core.schedule`` (validated against the
+                        plan's own ``StagePlan.k_p``).
+
+``plan_to_train_step`` then builds the runnable distributed train step, and
+``check_against_simulator`` cross-checks the lowered schedule against the
+discrete-event simulator: per-stage op counts, the unit-cost makespan in
+ticks, and the O(K_p) resident-activation bound (DESIGN.md §2–3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .costmodel import kp_policy, stage_memory
+from .planner import Plan
+from .profiler import Profile
+from .schedule import max_inflight, schedule_orders
+from .simulator import SimResult, simulate
+
+
+class LoweringError(RuntimeError):
+    """The plan cannot be realized on the requested runtime mesh."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredPlan:
+    """Runtime-coordinate view of an Asteroid ``Plan``."""
+
+    arch: str
+    stage: int                                  # pipeline depth P
+    n_micro: int                                # micro-batches per round M
+    micro_batch: int                            # samples per micro-batch
+    global_batch: int
+    n_periods: int                              # real periods in the model
+    stage_periods: tuple[tuple[int, int], ...]  # period range [i, j) per stage
+    stage_layers: tuple[tuple[int, int], ...]   # original table layer ranges
+    device_groups: tuple[tuple[int, ...], ...]  # edge-cluster ranks (Plan)
+    micro_alloc: tuple[tuple[int, ...], ...]    # per-device sample allocation
+    warmup: tuple[int, ...]                     # K_p per stage
+
+    @property
+    def k_per_stage(self) -> int:
+        """Uniform periods-per-stage slice width (max range, zero-padded)."""
+        return max(j - i for i, j in self.stage_periods)
+
+    @property
+    def forward_ticks(self) -> int:
+        """Scan length of the runtime's circular forward pipeline."""
+        return self.n_micro + self.stage - 1
+
+    @property
+    def total_ticks(self) -> int:
+        """Forward scan + its grad-reversed backward scan."""
+        return 2 * self.forward_ticks
+
+    def orders(self, policy: str = "ours"):
+        """Per-stage 1F1B op orders for this plan's (P, M)."""
+        return schedule_orders(self.stage, self.n_micro, policy)
+
+    def peak_inflight(self, policy: str = "ours") -> tuple[int, ...]:
+        """Peak resident micro-batches per stage under the op orders."""
+        return tuple(max_inflight(o) for o in self.orders(policy))
+
+    def memory_bound(self, profile: Profile) -> dict[int, float]:
+        """Eq. (3) per-device peak bytes implied by the lowered schedule."""
+        out: dict[int, float] = {}
+        for st_layers, group, alloc, k in zip(self.stage_layers,
+                                              self.device_groups,
+                                              self.micro_alloc, self.warmup):
+            for d, y in zip(group, alloc):
+                out[d] = stage_memory(profile.table, *st_layers, y, k,
+                                      self.n_micro)
+        return out
+
+    def tick_makespan(self, policy: str = "ours") -> int:
+        """Schedule completion time in unit ticks (ef = eb = 1, zero comm).
+
+        An independent list-scheduling implementation of the simulator's
+        dependency rules, used to cross-validate the two.
+        """
+        P, M = self.stage, self.n_micro
+        orders = self.orders(policy)
+        f_done = [[None] * M for _ in range(P)]
+        b_done = [[None] * M for _ in range(P)]
+        idx = [0] * P
+        free = [0] * P
+        remaining = sum(len(o) for o in orders)
+        while remaining:
+            progressed = False
+            for p in range(P):
+                while idx[p] < len(orders[p]):
+                    op = orders[p][idx[p]]
+                    if op.kind == "F":
+                        dep = 0 if p == 0 else f_done[p - 1][op.micro]
+                    elif p == P - 1:
+                        dep = f_done[p][op.micro]
+                    else:
+                        dep = b_done[p + 1][op.micro]
+                    if dep is None:
+                        break
+                    end = max(free[p], dep) + 1
+                    free[p] = end
+                    (f_done if op.kind == "F" else b_done)[p][op.micro] = end
+                    idx[p] += 1
+                    remaining -= 1
+                    progressed = True
+            if not progressed:
+                raise LoweringError("deadlocked schedule (invalid op orders)")
+        return max(free)
+
+
+# ---------------------------------------------------------------------------
+# Plan -> runtime coordinates
+# ---------------------------------------------------------------------------
+
+
+def _snap_to_periods(stage_layers, n_layers: int, pattern_len: int,
+                     n_periods: int) -> tuple[tuple[int, int], ...]:
+    """Snap table-coordinate layer cuts to period boundaries.
+
+    Table layout: index 0 = embed, 1..n_layers = real layers, L-1 = head.
+    Interior cuts land on the nearest period boundary, kept strictly
+    monotone so every stage owns >= 1 period.
+    """
+    P = len(stage_layers)
+    if P > n_periods:
+        raise LoweringError(
+            f"plan has {P} stages but the model only has {n_periods} periods")
+    cuts = [0]
+    for s, (i, j) in enumerate(stage_layers[:-1]):
+        r = min(max(j - 1, 0), n_layers)           # cut in real-layer coords
+        per = round(r / pattern_len)
+        # strictly monotone, leaving >= 1 period for each remaining stage
+        per = max(per, cuts[-1] + 1)
+        per = min(per, n_periods - (P - 1 - s))
+        cuts.append(per)
+    cuts.append(n_periods)
+    return tuple((cuts[p], cuts[p + 1]) for p in range(P))
+
+
+def lower_plan(plan: Plan, cfg, model_axis: int | None = None) -> LoweredPlan:
+    """Translate ``plan`` into runtime coordinates for ``cfg``.
+
+    ``model_axis``: size of the production mesh's model axis; when given the
+    stage count must divide it (tp = model_axis / stage).
+    """
+    P = len(plan.stages)
+    if model_axis is not None and model_axis % P != 0:
+        raise LoweringError(
+            f"stage count {P} does not divide the mesh model axis "
+            f"{model_axis}; re-plan with max_stages set to a divisor")
+    if cfg.n_layers % len(cfg.pattern) != 0:
+        raise LoweringError(
+            f"n_layers {cfg.n_layers} not a multiple of the pattern "
+            f"({len(cfg.pattern)})")
+    n_periods = cfg.n_layers // len(cfg.pattern)
+
+    stage_layers = tuple(st.layers for st in plan.stages)
+    for (a, b), (c, _) in zip(stage_layers[:-1], stage_layers[1:]):
+        if b != c:
+            raise LoweringError(f"stage layer ranges not contiguous: {b} != {c}")
+
+    stage_periods = _snap_to_periods(stage_layers, cfg.n_layers,
+                                     len(cfg.pattern), n_periods)
+
+    warmup = tuple(kp_policy(P, p) for p in range(P))
+    for p, st in enumerate(plan.stages):
+        if st.k_p != warmup[p]:
+            raise LoweringError(
+                f"stage {p} warm-up {st.k_p} != schedule K_p {warmup[p]}")
+        if sum(st.alloc) != plan.micro_batch:
+            raise LoweringError(
+                f"stage {p} allocation {st.alloc} does not sum to the "
+                f"micro-batch {plan.micro_batch}")
+    if plan.n_micro * plan.micro_batch != plan.global_batch:
+        raise LoweringError("n_micro * micro_batch != global_batch")
+
+    return LoweredPlan(
+        arch=plan.arch, stage=P, n_micro=plan.n_micro,
+        micro_batch=plan.micro_batch, global_batch=plan.global_batch,
+        n_periods=n_periods, stage_periods=stage_periods,
+        stage_layers=stage_layers,
+        device_groups=tuple(st.group for st in plan.stages),
+        micro_alloc=tuple(st.alloc for st in plan.stages), warmup=warmup)
+
+
+# ---------------------------------------------------------------------------
+# Simulator cross-check
+# ---------------------------------------------------------------------------
+
+
+def _unitize(plan: Plan) -> Plan:
+    """Copy of ``plan`` with unit exec cost and free communication."""
+    steps = tuple(
+        dataclasses.replace(s, ef=1.0, eb=1.0, ta=0.0) if s.kind == "exec"
+        else dataclasses.replace(s, ef=0.0, eb=0.0) for s in plan.steps)
+    return dataclasses.replace(plan, steps=steps)
+
+
+def check_against_simulator(lowered: LoweredPlan, plan: Plan,
+                            profile: Profile, policy: str = "ours",
+                            rel_tol: float = 1e-6) -> SimResult:
+    """Assert the lowered schedule agrees with the discrete-event simulator.
+
+    1. every stage executes exactly M forwards + M backwards,
+    2. the simulator's makespan on a unit-cost copy of the plan equals the
+       lowered schedule's tick count (two independent implementations of
+       the same dependency rules),
+    3. peak resident activations per stage equal ``min(max(1, K_p), M)`` —
+       the O(K_p) 1F1B memory bound — and the simulator's per-device peak
+       bytes stay within the Eq. (3) budget the lowering derives.
+    Returns the (real-cost) simulation for further inspection.
+    """
+    M, P = lowered.n_micro, lowered.stage
+    sim = simulate(plan, profile, policy)
+
+    ops_per_stage = [0] * P
+    for (_, _, p, _) in sim.trace:
+        ops_per_stage[p] += 1
+    assert ops_per_stage == [2 * M] * P, (ops_per_stage, M)
+
+    unit = simulate(_unitize(plan), profile, policy)
+    ticks = lowered.tick_makespan(policy)
+    assert abs(unit.makespan - ticks) <= rel_tol * ticks, \
+        (unit.makespan, ticks)
+
+    inflight = lowered.peak_inflight(policy)
+    expected = tuple(min(max(1, k), M) for k in lowered.warmup)
+    assert inflight == expected, (inflight, expected)
+
+    bound = lowered.memory_bound(profile)
+    for d, peak in sim.peak_mem.items():
+        assert peak <= bound[d] * (1 + rel_tol), (d, peak, bound[d])
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# Runtime bridge
+# ---------------------------------------------------------------------------
+
+
+def plan_to_train_step(plan: Plan, profile: Profile | None, cfg,
+                       production_mesh=None, *, check: bool = True, **kw):
+    """Build a runnable distributed train step from an Asteroid ``Plan``.
+
+    Returns ``(TrainStep, LoweredPlan)``.  ``production_mesh`` defaults to a
+    ``(data=1, model=N)`` mesh over the local jax devices.  When ``profile``
+    is given and ``check`` is True, the lowered schedule is cross-checked
+    against the simulator before anything is compiled.
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.runtime.train import build_train_step
+
+    if production_mesh is None:
+        devs = jax.devices()
+        production_mesh = Mesh(np.array(devs).reshape(1, len(devs)),
+                               ("data", "model"))
+    lowered = lower_plan(plan, cfg, production_mesh.shape["model"])
+    if check and profile is not None:
+        check_against_simulator(lowered, plan, profile)
+
+    dp = (production_mesh.shape.get("pod", 1) *
+          production_mesh.shape["data"])
+    if lowered.global_batch % dp or (lowered.global_batch // dp) % lowered.n_micro:
+        raise LoweringError(
+            f"global batch {lowered.global_batch} not divisible into "
+            f"{lowered.n_micro} micro-batches per {dp} data shards")
+
+    ts = build_train_step(cfg, production_mesh,
+                          global_batch=lowered.global_batch,
+                          stage=lowered.stage, n_micro=lowered.n_micro,
+                          stage_periods=lowered.stage_periods, **kw)
+    return ts, lowered

@@ -85,8 +85,13 @@ def _comm_step(profile: Profile, micro_batch: int, boundary_layer: int,
 
 def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
              max_stages: int | None = None, arch: str = "",
-             check_memory: bool = True, intra_opt: bool = True) -> Plan:
-    """Run Algorithm 2.  Returns the best plan over p in [1, max_stages]."""
+             check_memory: bool = True, intra_opt: bool = True,
+             allowed_stages=None) -> Plan:
+    """Run Algorithm 2.  Returns the best plan over p in [1, max_stages].
+
+    ``allowed_stages``: optional collection restricting the final stage
+    count (e.g. divisors of a runtime mesh's model axis, so the plan can be
+    lowered — see ``core.lowering``)."""
     t_start = time.perf_counter()
     table = profile.table
     L, N = table.L, len(profile.cluster.devices)
@@ -148,9 +153,14 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
                 if best is not None:
                     Q[(l, n, p)] = best
 
-    candidates = [(Q[(L, N, p)][1], p) for p in range(1, P_max + 1)
-                  if (L, N, p) in Q]
+    feasible = [p for p in range(1, P_max + 1) if (L, N, p) in Q]
+    candidates = [(Q[(L, N, p)][1], p) for p in feasible
+                  if allowed_stages is None or p in allowed_stages]
     if not candidates:
+        if feasible:
+            raise AllocationError(
+                f"no feasible plan with allowed_stages={sorted(allowed_stages)} "
+                f"(feasible stage counts: {feasible})")
         raise AllocationError("no feasible HPP plan (memory budgets too tight)")
     lat, p_best = min(candidates)
     steps = Q[(L, N, p_best)][0]

@@ -59,10 +59,6 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
     link_free_fwd = [0.0] * (P - 1)
     link_free_bwd = [0.0] * (P - 1)
 
-    # memory: static (params+opt) + dynamic activation tracking
-    act_live = [0] * P
-    act_peak = [0] * P
-
     trace: list[tuple] = []
     busy = [0.0] * P
 
@@ -95,9 +91,6 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
         op_idx[p] += 1
         busy[p] += dur
         trace.append((start, end, p, f"{op.kind}{op.micro}"))
-        if op.kind == "F":
-            act_live[p] += 1
-            act_peak[p] = max(act_peak[p], act_live[p])
         push(end, "exec_done", (p, op))
 
     now = 0.0
@@ -117,7 +110,6 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
                     push(t1, "fwd_arrive", (p + 1, op.micro))
             else:
                 b_done[p][op.micro] = True
-                act_live[p] -= 1
                 if p > 0:       # send gradient backward
                     t0 = max(now, link_free_bwd[p - 1])
                     t1 = t0 + comm_steps[p - 1].eb
@@ -138,6 +130,22 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
     for p in range(P):
         stage_end = stage_free_at[p] + exec_steps[p].ta
         makespan = max(makespan, stage_end)
+
+    # peak resident activations per stage, from the executed trace: a
+    # micro-batch is resident from its F's *start* (not scheduling time —
+    # an op can be queued behind a still-running one) until its B's end.
+    act_peak = [0] * P
+    events: list[list[tuple]] = [[] for _ in range(P)]
+    for (t0, t1, p, op) in trace:
+        if op[0] == "F":
+            events[p].append((t0, 1))
+        else:
+            events[p].append((t1, -1))
+    for p in range(P):
+        live = 0
+        for _, delta in sorted(events[p]):      # (-1) sorts before (+1) at ties
+            live += delta
+            act_peak[p] = max(act_peak[p], live)
 
     # memory accounting (per device)
     peak_mem: dict[int, float] = {}

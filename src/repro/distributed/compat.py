@@ -1,0 +1,187 @@
+"""JAX version compatibility for the distributed runtime.
+
+The runtime targets two API generations:
+
+* **jax >= 0.5/0.6**: ``jax.shard_map`` is a public top-level API with
+  varying-manual-axes (vma) typing — replication is part of the avals,
+  adjusted explicitly with ``lax.pcast`` and queried via ``jax.typeof``.
+  The strictness knob is ``check_vma``.
+* **jax 0.4.x** (the floor this repo supports): shard_map lives in
+  ``jax.experimental.shard_map``, takes ``check_rep`` instead of
+  ``check_vma``, and has no vma typing at all — ``lax.pcast`` /
+  ``jax.typeof`` do not exist and replication is tracked internally by
+  rewrite rules.
+
+Everything version-dependent is centralized here so the rest of the code
+has exactly one spelling:
+
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+* ``pcast_varying(x, axes)`` — mark ``x`` varying over ``axes`` (pure type
+  operation on new jax, identity on 0.4.x),
+* ``varying_axes(x)`` — the axes ``x`` is already varying over,
+* ``manual_axes()`` — the manual mesh axes of the enclosing shard_map
+  (empty outside shard_map, and always empty on 0.4.x).
+
+On 0.4.x ``check_vma`` maps directly to ``check_rep``: True additionally
+enables the replication-*rewrite* machinery, which auto-inserts the
+pbroadcasts that explicit pcasts provide on new jax — load-bearing for
+correct psum transposes under ``jax.grad``, so the train path must keep
+it on.  ``check_vma=False`` (the serve paths' deliberately-replicated KV
+caches, inexpressible to either checker) maps to ``check_rep=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_VMA = hasattr(lax, "pcast") and hasattr(jax, "typeof")
+
+# On 0.4.x the RNG lowering is NOT sharding-invariant: jitting an
+# initializer with out_shardings that split a dimension across the mesh
+# (e.g. the vocab-parallel embedding, or period stacks over ``stage``)
+# silently produces different bits than the same program run eager or
+# unsharded — with the legacy threefry for some layouts, and even with
+# ``jax_threefry_partitionable`` for others (stage-sharded stacks on a
+# multi-axis mesh).  ``SHARDED_INIT_SAFE`` gates whether out_shardings may
+# be trusted for random initialization; ``sharded_init`` falls back to
+# unsharded init + device_put when it cannot.
+SHARDED_INIT_SAFE = HAS_NATIVE_SHARD_MAP
+
+
+def sharded_init(fn, shardings):
+    """``jax.jit(fn, out_shardings=shardings)``, or a numerically-safe
+    equivalent (init unsharded, then place) on jax 0.4.x."""
+    if SHARDED_INIT_SAFE:
+        return jax.jit(fn, out_shardings=shardings)
+    jitted = jax.jit(fn)
+
+    def wrapped(*args):
+        return jax.device_put(jitted(*args), shardings)
+
+    return wrapped
+
+
+def _patch_04x_transpose() -> None:
+    """Fix jax 0.4.x's ``_shard_map_transpose`` emitting cotangents for
+    *defined* primals (residuals / closed-over constants).
+
+    Constants that enter the body linearly — e.g. the pipeline scan's zero
+    initial carry — are partial-eval'ed into residual inputs of the
+    backward shard_map with in_names ``{0: all_axes}``, and 0.4.x's
+    ``ad.backward_pass`` hands back real (non-Zero) cotangents for them.
+    Nothing upstream consumes d/d(constant), but a scalar one crashes
+    ``_check_names`` (a rank-0 aval cannot carry a dim-0 sharding).  The
+    fix — also the behavior of the rewritten >= 0.5 implementation — is to
+    zero cotangents for every input that is not an ``UndefinedPrimal``.
+    """
+    from math import prod
+
+    import jax.experimental.shard_map as _sm
+    from jax._src import core, dtypes
+    from jax._src import linear_util as lu
+    from jax._src.api_util import flatten_fun_nokwargs
+    from jax._src.interpreters import ad, partial_eval as pe
+    from jax._src.tree_util import tree_flatten, tree_unflatten
+
+    def fixed_transpose(out_cts, *args, jaxpr, mesh, in_names, out_names,
+                        check_rep, rewrite, auto):
+        mb_div = lambda x, y: x / y if y != 1 else x
+        out_cts = [
+            ad.Zero(_sm._shard_aval(mesh, ns, x.aval)) if type(x) is ad.Zero
+            else x if rewrite or dtypes.dtype(x) == dtypes.float0
+            else mb_div(x, prod(map(mesh.shape.get,
+                                    _sm._unmentioned2(mesh, ns, auto))))
+            for ns, x in zip(out_names, out_cts)]
+        args = [x if type(x) is not ad.UndefinedPrimal else
+                ad.UndefinedPrimal(_sm._shard_aval(mesh, ns, x.aval))
+                for ns, x in zip(in_names, args)]
+        all_args, in_tree = tree_flatten((out_cts, args))
+
+        @lu.wrap_init
+        def fun_trans(out_cts, args):
+            undef = list(map(ad.is_undefined_primal, args))
+            res, undefs = _sm.partition_list(undef, list(args))
+            jaxpr_known, jaxpr_unknown, _, _ = pe.partial_eval_jaxpr_nounits(
+                pe.close_jaxpr(jaxpr), undef, False)
+            res_reshaped = core.jaxpr_as_fun(jaxpr_known)(*res)
+            out = ad.backward_pass(
+                jaxpr_unknown.jaxpr, False, (), (*res_reshaped, *undefs),
+                out_cts)
+            # the fix: defined primals carry no cotangent
+            out = [ad.Zero(x.aval) if not u and type(x) is not ad.Zero else x
+                   for u, x in zip(undef, out)]
+            out = [
+                ad.Zero(_sm._unshard_aval(mesh, ns, x.aval))
+                if type(x) is ad.Zero else x if rewrite
+                else jax.lax.psum(x, tuple(_sm._unmentioned2(mesh, ns, auto)))
+                for ns, x in zip(in_names, out)]
+            return out
+
+        fun_trans, nz_arg_cts = ad.nonzero_outputs(fun_trans)
+        fun_trans_flat, out_tree = flatten_fun_nokwargs(fun_trans, in_tree)
+
+        new_in_names = \
+            [n for n, x in zip(out_names, out_cts) if type(x) is not ad.Zero] + \
+            [n for n, x in zip(in_names, args)
+             if type(x) is not ad.UndefinedPrimal]
+
+        def new_out_names_thunk():
+            return tuple(names for names, nz in zip(in_names, nz_arg_cts())
+                         if nz)
+
+        out_flat = _sm.shard_map_p.bind(
+            fun_trans_flat, *all_args, mesh=mesh,
+            in_names=tuple(new_in_names),
+            out_names_thunk=new_out_names_thunk, check_rep=check_rep,
+            rewrite=rewrite, auto=auto)
+        return tree_unflatten(out_tree(), out_flat)
+
+    ad.primitive_transposes[_sm.shard_map_p] = fixed_transpose
+
+
+if not HAS_NATIVE_SHARD_MAP:
+    _patch_04x_transpose()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-adaptive ``shard_map`` entrypoint (keyword-only specs)."""
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # check_rep=True additionally turns on 0.4.x's replication-rewrite
+    # machinery, which auto-inserts the pbroadcasts that the explicit
+    # pcasts provide on new jax — required for correct psum transposes
+    # under jax.grad.  check_vma=False maps to check_rep=False (the serve
+    # paths' deliberately-unexpressible replicated KV caches).
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def manual_axes() -> tuple:
+    """Manual axes of the enclosing shard_map ('' outside / on 0.4.x)."""
+    if not HAS_VMA:
+        return ()
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return tuple(getattr(am, "manual_axes", ()) or ())
+    except Exception:
+        return ()
+
+
+def varying_axes(x) -> frozenset:
+    """Axes ``x`` is typed varying over (always empty without vma typing)."""
+    if not HAS_VMA:
+        return frozenset()
+    return frozenset(jax.typeof(x).vma)
+
+
+def pcast_varying(x, axes):
+    """Idempotently mark ``x`` varying over ``axes`` (no-op on 0.4.x —
+    there is no vma type to adjust, and pcast is purely a type operation)."""
+    if not HAS_VMA or not axes:
+        return x
+    need = tuple(a for a in axes if a not in jax.typeof(x).vma)
+    return lax.pcast(x, need, to="varying") if need else x

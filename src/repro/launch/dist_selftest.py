@@ -85,12 +85,78 @@ def run_arch(arch: str, devices) -> float:
     return diff
 
 
+def run_arch_planned(arch: str, devices) -> float:
+    """Full planner->lowering->runtime path: profile an edge cluster, run
+    Algorithm 2 restricted to mesh-feasible stage counts, lower the plan
+    (heterogeneous period split + n_micro + K_p cross-check against the
+    simulator), and verify train-loss parity vs the single-device model."""
+    from repro.configs import get_smoke_config
+    from repro.core.hardware import env_d
+    from repro.core.lowering import plan_to_train_step
+    from repro.core.planner import plan_hpp
+    from repro.core.profiler import LayerTable, Profile
+    from repro.data import SyntheticLM, shard_batch
+    from repro.models.frontend import frontend_dim
+    from repro.models.model import init_model, loss_fn as local_loss_fn
+    from repro.runtime.train import build_train_step, init_train_state
+
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    # 4 periods so a 2-stage split can be heterogeneous
+    cfg = cfg.replace(n_layers=4 * len(cfg.pattern))
+    B, S = 8, 64
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+
+    table = LayerTable.from_model_config(cfg, S)
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=B)
+    plan = plan_hpp(prof, B, micro_batch=2, arch=arch, allowed_stages={2})
+    ts, lowered = plan_to_train_step(plan, prof, cfg, mesh_prod)
+
+    key = jax.random.PRNGKey(0)
+    ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    batch_np = ds.batch(0, B)
+    ref_params = init_model(key, cfg)
+    loss_r, metrics_r = jax.jit(lambda p, b: local_loss_fn(p, b, cfg, ce_chunk=1024))(
+        ref_params, {k: jnp.asarray(v) for k, v in batch_np.items()})
+
+    batch = shard_batch(batch_np, ts.mesh, ts.batch_specs)
+    params, opt_state = init_train_state(key, ts)
+    loss_d, metrics = ts.loss_fn(params, batch)
+    diff = abs(float(metrics["ce"]) - float(metrics_r["ce"]))
+
+    new_params, new_opt, l0, _ = ts.step_fn(params, opt_state, batch)
+    l1, _ = ts.loss_fn(new_params, batch)
+    improved = float(l1) < float(l0)
+
+    # the planner may have chosen a uniform split — exercise a maximally
+    # skewed heterogeneous one (3 periods | 1 period) explicitly
+    ts2 = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                           n_micro=4, stage_periods=((0, 3), (3, 4)))
+    batch2 = shard_batch(batch_np, ts2.mesh, ts2.batch_specs)
+    params2, _ = init_train_state(key, ts2)
+    _, metrics2 = ts2.loss_fn(params2, batch2)
+    diff2 = abs(float(metrics2["ce"]) - float(metrics_r["ce"]))
+
+    ok = diff < TOL and diff2 < TOL and improved
+    print(f"{arch:26s} [plan] periods={lowered.stage_periods} "
+          f"M={lowered.n_micro} K_p={lowered.warmup} diff={diff:.2e} "
+          f"het(3|1) diff={diff2:.2e} step {float(l0):.4f}->{float(l1):.4f} "
+          f"{'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch}: planned-lowering parity {diff}/{diff2} "
+                         f"improved={improved}")
+    return diff
+
+
 def run_serve(arch: str, devices, seq_shard: bool = False, stage=None) -> float:
     """Distributed serve_step vs single-device decode logits parity."""
     from repro.configs import get_smoke_config
     from repro.models.model import decode_step, init_decode_states, init_model
     from repro.runtime.serve import build_serve_step, prepare_serve_states
     from repro.runtime.train import prepare_params
+    from repro.distributed.compat import sharded_init
     from repro.distributed.sharding import named
 
     cfg = get_smoke_config(arch).replace(prefix_len=0, mtp_depth=0)
@@ -102,10 +168,10 @@ def run_serve(arch: str, devices, seq_shard: bool = False, stage=None) -> float:
                           seq_shard=seq_shard, stage=stage)
 
     key = jax.random.PRNGKey(0)
-    params = jax.jit(lambda k: prepare_params(k, cfg, ss.spec.plan),
-                     out_shardings=named(ss.mesh, ss.param_specs))(key)
-    states = jax.jit(lambda: prepare_serve_states(cfg, ss.spec.plan, B, cache_len),
-                     out_shardings=named(ss.mesh, ss.state_specs))()
+    params = sharded_init(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                          named(ss.mesh, ss.param_specs))(key)
+    states = sharded_init(lambda: prepare_serve_states(cfg, ss.spec.plan, B, cache_len),
+                          named(ss.mesh, ss.state_specs))()
 
     ref_params = init_model(key, cfg)
     ref_states = init_decode_states(B, cache_len, cfg)
@@ -133,12 +199,15 @@ def main():
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     serve = "--serve" in sys.argv
     seq_shard = "--seq-shard" in sys.argv
+    planned = "--plan" in sys.argv
     archs = args or DEFAULT_ARCHS
     devices = jax.devices()
     assert len(devices) >= 8, "needs 8 host devices"
     for arch in archs:
         if serve:
             run_serve(arch, devices[:8], seq_shard=seq_shard)
+        elif planned:
+            run_arch_planned(arch, devices[:8])
         else:
             run_arch(arch, devices[:8])
     print("ALL OK")

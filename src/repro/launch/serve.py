@@ -39,6 +39,7 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke_config
+    from repro.distributed.compat import sharded_init
     from repro.distributed.sharding import named
     from repro.runtime.serve import build_serve_step, prepare_serve_states
     from repro.runtime.train import prepare_params
@@ -57,11 +58,11 @@ def main():
           f"tp={ss.spec.plan.tp} cache={cache_len}")
 
     key = jax.random.PRNGKey(0)
-    params = jax.jit(lambda k: prepare_params(k, cfg, ss.spec.plan),
-                     out_shardings=named(ss.mesh, ss.param_specs))(key)
-    states = jax.jit(lambda: prepare_serve_states(cfg, ss.spec.plan,
-                                                  args.batch, cache_len),
-                     out_shardings=named(ss.mesh, ss.state_specs))()
+    params = sharded_init(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                          named(ss.mesh, ss.param_specs))(key)
+    states = sharded_init(lambda: prepare_serve_states(cfg, ss.spec.plan,
+                                                       args.batch, cache_len),
+                          named(ss.mesh, ss.state_specs))()
 
     rng = np.random.RandomState(0)
     shape = (args.batch, cfg.n_codebooks) if cfg.n_codebooks > 1 else (args.batch,)

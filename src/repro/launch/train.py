@@ -49,6 +49,11 @@ def main():
     ap.add_argument("--d-model", type=int, default=None,
                     help="override width (e.g. scale to ~100M params)")
     ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--plan", action="store_true",
+                    help="derive stage split / n_micro / K_p from the "
+                         "Asteroid planner (Algorithm 2) and lower it")
+    ap.add_argument("--env", default="D", choices=list("ABCD"),
+                    help="edge environment profiled for --plan")
     args = ap.parse_args()
 
     from repro import checkpoint
@@ -78,8 +83,37 @@ def main():
 
     opt = AdamW(lr=cosine_schedule(args.lr, warmup=min(20, args.steps // 5),
                                    total=args.steps))
-    ts = build_train_step(cfg, mesh, global_batch=args.global_batch,
-                          stage=args.stage, n_micro=args.n_micro, optimizer=opt)
+    if args.plan:
+        from repro.core.hardware import ENVS
+        from repro.core.lowering import plan_to_train_step
+        from repro.core.planner import plan_hpp
+        from repro.core.profiler import LayerTable, Profile
+
+        cluster = ENVS[args.env]().sorted_by_memory()
+        table = LayerTable.from_model_config(cfg, args.seq)
+        prof = Profile.analytic(table, cluster,
+                                max_batch=max(args.global_batch, 1))
+        n_periods = cfg.n_layers // len(cfg.pattern)
+        divisors = {d for d in range(1, model_axis + 1)
+                    if model_axis % d == 0 and d <= n_periods}
+        if args.n_micro:
+            if args.global_batch % args.n_micro:
+                raise SystemExit(f"--n-micro {args.n_micro} must divide "
+                                 f"--global-batch {args.global_batch}")
+            mb = args.global_batch // args.n_micro
+        else:
+            m = next(m for m in (4, 2, 1) if args.global_batch % m == 0)
+            mb = args.global_batch // m
+        plan = plan_hpp(prof, args.global_batch, mb, arch=cfg.name,
+                        allowed_stages=divisors)
+        ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt)
+        print(f"asteroid plan: {lowered.stage} stages periods="
+              f"{lowered.stage_periods} M={lowered.n_micro} "
+              f"K_p={lowered.warmup} predicted latency {plan.latency:.3f}s")
+    else:
+        ts = build_train_step(cfg, mesh, global_batch=args.global_batch,
+                              stage=args.stage, n_micro=args.n_micro,
+                              optimizer=opt)
     print(f"plan: stage={ts.spec.plan.stage} tp={ts.spec.plan.tp} "
           f"M={ts.spec.n_micro}")
 

@@ -96,26 +96,19 @@ NO_PARALLEL = ParallelCtx()
 
 
 def _manual_axes() -> tuple:
-    try:
-        am = jax.sharding.get_abstract_mesh()
-        return tuple(getattr(am, "manual_axes", ()) or ())
-    except Exception:
-        return ()
+    from repro.distributed.compat import manual_axes
+    return manual_axes()
 
 
 def vary_all(tree: PyTree) -> PyTree:
     """Mark every leaf varying over all manual mesh axes (no-op outside
-    shard_map).  pcast is a pure type operation — no communication."""
+    shard_map and on jax without vma typing).  pcast is a pure type
+    operation — no communication."""
+    from repro.distributed.compat import pcast_varying
     axes = _manual_axes()
     if not axes:
         return tree
-
-    def f(x):
-        cur = jax.typeof(x).vma
-        need = tuple(a for a in axes if a not in cur)
-        return lax.pcast(x, need, to="varying") if need else x
-
-    return jax.tree.map(f, tree)
+    return jax.tree.map(lambda x: pcast_varying(x, axes), tree)
 
 
 def vscan(body: Callable, init, xs, **kw):

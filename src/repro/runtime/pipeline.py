@@ -15,7 +15,7 @@ Asteroid's hybrid pipeline parallelism on the refined TPU mesh
   is stage-sharded instead of wasted;
 * the stage body is remat'ed (`jax.checkpoint`), bounding resident
   activations to the stage *input* per in-flight micro-batch — the SPMD
-  realization of the paper's O(K_p) 1F1B memory bound (DESIGN.md §2).
+  realization of the paper's O(K_p) 1F1B memory bound (DESIGN.md §3).
 
 The paper's planner picks the stage count; ``pad_periods`` pads the period
 stack with zero (identity) layers when stages don't divide the period count.
@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import pcast_varying
 from repro.distributed.mesh import MeshPlan
 from repro.models.blocks import apply_period, shard_config
 from repro.models.config import ModelConfig
@@ -68,16 +69,50 @@ def pad_periods(periods, n_periods: int, n_stages: int):
     return padded_params, mask
 
 
+def stage_period_mask(stage_periods) -> list[float]:
+    """Static validity mask for heterogeneously-split periods: stage p's
+    uniform slice holds (j_p - i_p) real periods then zero padding."""
+    k = max(j - i for i, j in stage_periods)
+    mask: list[float] = []
+    for i, j in stage_periods:
+        mask += [1.0] * (j - i) + [0.0] * (k - (j - i))
+    return mask
+
+
+def arrange_periods(periods, stage_periods):
+    """Arrange stacked period params for a planner-chosen (possibly
+    heterogeneous) stage split.
+
+    ``stage_periods``: per-stage period ranges [i, j) partitioning
+    [0, n_periods).  Stage p's uniform slice [p*k, (p+1)*k) of the result
+    (k = max range length) holds its assigned periods followed by zero
+    (identity) periods, so the runtime's static per-stage slicing realizes
+    the heterogeneous split.  Returns (arranged_params, valid_mask (P*k,)).
+    """
+    mask_vals = stage_period_mask(stage_periods)
+    take = []
+    k = max(j - i for i, j in stage_periods)
+    for i, j in stage_periods:
+        take += list(range(i, j)) + [0] * (k - (j - i))
+    idx = jnp.asarray(take)
+    mask = jnp.asarray(mask_vals, jnp.float32)
+
+    def f(x):
+        g = x[idx]
+        keep = (mask > 0).reshape(-1, *([1] * (g.ndim - 1)))
+        return jnp.where(keep, g, jnp.zeros_like(g))
+
+    return jax.tree.map(f, periods), mask
+
+
 # ---------------------------------------------------------------------------
 # Stage body
 # ---------------------------------------------------------------------------
 
 
 def _vary(x, axes=("stage",)):
-    """Idempotent pcast-to-varying (vma typing helper)."""
-    cur = jax.typeof(x).vma
-    need = tuple(a for a in axes if a not in cur)
-    return lax.pcast(x, need, to="varying") if need else x
+    """Idempotent pcast-to-varying (vma typing helper; no-op on jax 0.4.x)."""
+    return pcast_varying(x, axes)
 
 
 def _stage_fn(periods_local, period_mask_local, x, positions, cfg_local,
@@ -166,6 +201,9 @@ class TrainSpec:
     n_micro: int
     remat: bool = True
     ce_chunk: int = 1024
+    # Planner-lowered heterogeneous stage split: per-stage period ranges
+    # [i, j) partitioning [0, n_periods) (core.lowering).  None = uniform.
+    stage_periods: tuple[tuple[int, int], ...] | None = None
     # Perf iteration 1 (EXPERIMENTS.md): hoist replicated->varying casts
     # (and hence the gradient all-reduces their transposes create) out of
     # the pipeline loops.  False reproduces the paper-faithful baseline.
@@ -222,12 +260,21 @@ def spmd_loss_fn(spec: TrainSpec):
 
         # ---- pipeline ----------------------------------------------------
         # validity mask for zero-padded periods (identity layers): static,
-        # sliced to this stage's slice of the period stack
+        # sliced to this stage's slice of the period stack.  With a lowered
+        # heterogeneous split, each stage's uniform slice holds its assigned
+        # periods then padding (arrange_periods).
         n_periods = cfg.n_periods
-        padded = -(-n_periods // plan.stage) * plan.stage
-        k_per_stage = padded // plan.stage
-        mask_global = jnp.asarray(
-            [1.0] * n_periods + [0.0] * (padded - n_periods), jnp.float32)
+        if spec.stage_periods is not None:
+            assert len(spec.stage_periods) == plan.stage, \
+                (spec.stage_periods, plan.stage)
+            mask_vals = stage_period_mask(spec.stage_periods)
+            k_per_stage = len(mask_vals) // plan.stage
+            mask_global = jnp.asarray(mask_vals, jnp.float32)
+        else:
+            padded = -(-n_periods // plan.stage) * plan.stage
+            k_per_stage = padded // plan.stage
+            mask_global = jnp.asarray(
+                [1.0] * n_periods + [0.0] * (padded - n_periods), jnp.float32)
         if plan.stage > 1:
             mask_local = lax.dynamic_slice_in_dim(
                 mask_global, lax.axis_index("stage") * k_per_stage, k_per_stage)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
 from repro.distributed.mesh import MeshPlan, mesh_plan, refine_mesh
 from repro.distributed.sharding import (Layout, SERVE_LAYOUT, named,
                                         param_pspecs, state_pspecs)
@@ -264,8 +265,8 @@ def build_prefill_step(cfg: ModelConfig, production_mesh: Mesh, *,
     bspecs = batch_pspecs(cfg)
     logits_spec = P(("pod", "data"), "tp") if cfg.n_codebooks == 1 \
         else P(("pod", "data"), None, "tp")
-    sharded = jax.shard_map(fn, mesh=mesh, in_specs=(pspecs, bspecs),
-                            out_specs=logits_spec, check_vma=False)
+    sharded = shard_map(fn, mesh=mesh, in_specs=(pspecs, bspecs),
+                        out_specs=logits_spec, check_vma=False)
     step = jax.jit(sharded, in_shardings=(named(mesh, pspecs),
                                           named(mesh, bspecs)))
     return ServeStep(spec=ServeSpec(cfg, plan, seq_len, batch_global, False,
@@ -336,10 +337,10 @@ def build_serve_step(cfg: ModelConfig, production_mesh: Mesh, *,
             else P(None, None, "tp")
 
     fn = spmd_decode_fn(spec)
-    sharded = jax.shard_map(fn, mesh=mesh,
-                            in_specs=(pspecs, tok_spec, P(), sspecs),
-                            out_specs=(logits_spec, sspecs),
-                            check_vma=False)
+    sharded = shard_map(fn, mesh=mesh,
+                        in_specs=(pspecs, tok_spec, P(), sspecs),
+                        out_specs=(logits_spec, sspecs),
+                        check_vma=False)
     step = jax.jit(sharded,
                    in_shardings=(named(mesh, pspecs),
                                  named(mesh, tok_spec),

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import shard_map, sharded_init
 from repro.distributed.mesh import MeshPlan, mesh_plan, pick_stage_count, refine_mesh
 from repro.distributed.sharding import (Layout, TRAIN_LAYOUT, named,
                                         param_pspecs)
@@ -25,7 +26,8 @@ from repro.models.config import ModelConfig
 from repro.models.model import init_model
 from repro.optim import AdamW
 
-from .pipeline import TrainSpec, batch_pspecs, pad_periods, spmd_loss_fn
+from .pipeline import (TrainSpec, arrange_periods, batch_pspecs, pad_periods,
+                       spmd_loss_fn)
 
 
 def pad_vocab_params(params, cfg: ModelConfig, tp: int):
@@ -47,11 +49,21 @@ def pad_vocab_params(params, cfg: ModelConfig, tp: int):
     return out
 
 
-def prepare_params(key, cfg: ModelConfig, plan: MeshPlan):
-    """Global init + structural padding for the distributed layout."""
+def prepare_params(key, cfg: ModelConfig, plan: MeshPlan,
+                   stage_periods=None):
+    """Global init + structural padding for the distributed layout.
+
+    ``stage_periods``: planner-lowered per-stage period ranges; when given,
+    the period stack is arranged so each stage's uniform slice holds its
+    assigned (possibly heterogeneous) period range (core.lowering).
+    """
     params = init_model(key, cfg)
-    params["periods"], _ = pad_periods(params["periods"], cfg.n_periods,
-                                       plan.stage)
+    if stage_periods is not None:
+        params["periods"], _ = arrange_periods(params["periods"],
+                                               stage_periods)
+    else:
+        params["periods"], _ = pad_periods(params["periods"], cfg.n_periods,
+                                           plan.stage)
     params = pad_vocab_params(params, cfg, plan.tp)
     return params
 
@@ -83,8 +95,8 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      global_batch: int, *, stage: int | None = None,
                      n_micro: int | None = None, optimizer: AdamW | None = None,
                      remat: bool = True, ce_chunk: int = 1024,
-                     hoist_varying: bool = True,
-                     zero_opt: bool = False) -> TrainStep:
+                     hoist_varying: bool = True, zero_opt: bool = False,
+                     stage_periods=None) -> TrainStep:
     n_heads = cfg.attn.n_heads if cfg.attn is not None else (
         cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else cfg.d_model)
     model_axis = production_mesh.shape["model"]
@@ -95,23 +107,40 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
     plan = mesh_plan(production_mesh, stage)
     if n_micro is None:
         n_micro = default_n_micro(cfg, plan, global_batch)
+    if stage_periods is not None:
+        stage_periods = tuple(tuple(r) for r in stage_periods)
+        if len(stage_periods) != plan.stage:
+            raise ValueError(f"stage_periods {stage_periods} has "
+                             f"{len(stage_periods)} ranges for {plan.stage} stages")
+        prev = 0
+        for i, j in stage_periods:
+            if i != prev or j <= i:
+                raise ValueError(f"stage_periods {stage_periods} must be "
+                                 f"contiguous non-empty ranges from 0")
+            prev = j
+        if prev != cfg.n_periods:
+            raise ValueError(f"stage_periods {stage_periods} covers "
+                             f"[0, {prev}) but the model has "
+                             f"{cfg.n_periods} periods")
     spec = TrainSpec(cfg=cfg, plan=plan, n_micro=n_micro, remat=remat,
-                     ce_chunk=ce_chunk, hoist_varying=hoist_varying)
+                     ce_chunk=ce_chunk, hoist_varying=hoist_varying,
+                     stage_periods=stage_periods)
     optimizer = optimizer or AdamW(lr=1e-3)
 
     # --- specs (built against an abstract param tree) ----------------------
-    abstract = jax.eval_shape(lambda k: prepare_params(k, cfg, plan),
-                              jax.random.PRNGKey(0))
+    abstract = jax.eval_shape(
+        lambda k: prepare_params(k, cfg, plan, stage_periods),
+        jax.random.PRNGKey(0))
     kv_repl = cfg.attn is not None and cfg.attn.n_kv_heads % plan.tp != 0
     layout = dataclasses.replace(TRAIN_LAYOUT, kv_replicated=kv_repl)
     pspecs = param_pspecs(abstract, layout)
     bspecs = batch_pspecs(cfg)
 
     spmd = spmd_loss_fn(spec)
-    sharded_loss = jax.shard_map(spmd, mesh=mesh,
-                                 in_specs=(pspecs, bspecs),
-                                 out_specs=(P(), {"ce": P(), "aux": P(),
-                                                  "mtp": P(), "tokens": P()}))
+    sharded_loss = shard_map(spmd, mesh=mesh,
+                             in_specs=(pspecs, bspecs),
+                             out_specs=(P(), {"ce": P(), "aux": P(),
+                                              "mtp": P(), "tokens": P()}))
 
     def loss_fn(params, batch):
         return sharded_loss(params, batch)
@@ -186,10 +215,11 @@ def init_train_state(key, ts: TrainStep, optimizer: AdamW | None = None):
     optimizer = optimizer or AdamW(lr=1e-3)
     cfg, plan = ts.spec.cfg, ts.spec.plan
     shardings = named(ts.mesh, ts.param_specs)
-    params = jax.jit(lambda k: prepare_params(k, cfg, plan),
-                     out_shardings=shardings)(key)
-    opt_state = jax.jit(optimizer.init,
-                        out_shardings=_opt_shardings(optimizer,
-                                                     jax.eval_shape(lambda: params),
-                                                     shardings))(params)
+    params = sharded_init(lambda k: prepare_params(k, cfg, plan,
+                                                   ts.spec.stage_periods),
+                          shardings)(key)
+    opt_state = sharded_init(optimizer.init,
+                             _opt_shardings(optimizer,
+                                            jax.eval_shape(lambda: params),
+                                            shardings))(params)
     return params, opt_state

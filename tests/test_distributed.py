@@ -41,6 +41,13 @@ def test_train_parity_hybrid():
 
 
 @pytest.mark.slow
+def test_train_planned_lowering():
+    """Algorithm 2 plan -> core.lowering -> runtime: parity + 1F1B step,
+    including a heterogeneous (3 periods | 1 period) stage split."""
+    _run(["--plan", "phi3-mini-3.8b"])
+
+
+@pytest.mark.slow
 def test_serve_parity():
     _run(["--serve", "phi3-mini-3.8b", "gemma-2b"])
 

@@ -1,11 +1,14 @@
 """Pallas kernel correctness: shape/dtype sweeps + hypothesis properties,
 asserting allclose against the pure-jnp oracles (interpret=True on CPU)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the 'test' extra")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.kernels.decode_attention import flash_decode

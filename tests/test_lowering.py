@@ -1,0 +1,138 @@
+"""Plan -> runtime lowering: round-trip invariants and simulator
+consistency (pure-python; the jax end-to-end path is covered by
+tests/test_distributed.py::test_train_planned_lowering)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.costmodel import kp_policy
+from repro.core.hardware import env_b, env_d
+from repro.core.lowering import (LoweringError, check_against_simulator,
+                                 lower_plan)
+from repro.core.planner import plan_gpipe, plan_hpp
+from repro.core.profiler import LayerTable, Profile
+from repro.core.schedule import max_inflight, schedule_orders
+from repro.core.simulator import simulate
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", n_layers=8, d_model=256, vocab_size=8000,
+                      d_ff=1024,
+                      attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=64),
+                      pattern=(LayerSpec(),))
+    table = LayerTable.from_model_config(cfg, seq_len=128)
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=32)
+    plan = plan_hpp(prof, 64, 8, arch="t")
+    return cfg, prof, plan
+
+
+def test_round_trip_invariants(setup):
+    cfg, prof, plan = setup
+    low = lower_plan(plan, cfg)
+    P = len(plan.stages)
+    n_periods = cfg.n_layers // len(cfg.pattern)
+
+    # stage period ranges partition [0, n_periods)
+    assert low.stage_periods[0][0] == 0
+    assert low.stage_periods[-1][1] == n_periods
+    for (a, b), (c, d) in zip(low.stage_periods[:-1], low.stage_periods[1:]):
+        assert b == c and a < b and c < d
+
+    # allocations: per-stage sums = micro-batch; rounds cover the batch
+    for alloc in low.micro_alloc:
+        assert sum(alloc) == low.micro_batch
+    assert low.n_micro * low.micro_batch == plan.global_batch == low.global_batch
+
+    # warm-up depths come from the schedule policy and match the plan
+    assert low.warmup == tuple(kp_policy(P, p) for p in range(P))
+    assert low.warmup == tuple(st.k_p for st in plan.stages)
+
+    # runtime tick counts
+    assert low.forward_ticks == low.n_micro + P - 1
+    assert low.total_ticks == 2 * low.forward_ticks
+
+
+def test_lowered_orders_match_schedule(setup):
+    cfg, prof, plan = setup
+    low = lower_plan(plan, cfg)
+    assert low.orders() == schedule_orders(low.stage, low.n_micro, "ours")
+    assert low.peak_inflight() == tuple(
+        max_inflight(o) for o in low.orders())
+    # 1F1B bounds resident activations by K_p; GPipe by M
+    assert all(i <= min(max(1, k), low.n_micro)
+               for i, k in zip(low.peak_inflight(), low.warmup))
+    assert all(i == low.n_micro for i in low.peak_inflight("gpipe"))
+
+
+def test_simulator_consistency(setup):
+    cfg, prof, plan = setup
+    # asserts: per-stage op counts, unit-cost makespan == tick_makespan,
+    # peak in-flight == min(max(1, K_p), M), Eq. 3 memory bound
+    sim = check_against_simulator(lower_plan(plan, cfg), plan, prof)
+    assert sim.makespan > 0
+
+
+def test_gpipe_ticks_equal_runtime_scan(setup):
+    """The runtime executes a GPipe-ordered scan: M + P - 1 forward ticks
+    and the grad-reversed backward, 2(M + P - 1) in total — the unit-cost
+    GPipe schedule has the same makespan."""
+    cfg, prof, plan = setup
+    low = lower_plan(plan, cfg)
+    assert low.tick_makespan("gpipe") == low.total_ticks
+
+
+def test_memory_bound_tracks_simulator(setup):
+    cfg, prof, plan = setup
+    low = lower_plan(plan, cfg)
+    sim = simulate(plan, prof)
+    bound = low.memory_bound(prof)
+    assert set(bound) == set(sim.peak_mem)
+    for d in bound:
+        assert sim.peak_mem[d] <= bound[d] * (1 + 1e-6)
+
+
+def test_infeasible_mesh_raises(setup):
+    cfg, prof, plan = setup
+    P = len(plan.stages)
+    bad_axis = P + 1 if P > 1 else 3       # never divisible by P... unless P=1
+    if P == 1:
+        pytest.skip("single-stage plan divides everything")
+    assert bad_axis % P != 0
+    with pytest.raises(LoweringError):
+        lower_plan(plan, cfg, model_axis=bad_axis)
+
+
+def test_too_many_stages_raises(setup):
+    cfg, prof, plan = setup
+    small = cfg.replace(n_layers=1)        # 1 period < plan stages
+    if len(plan.stages) == 1:
+        pytest.skip("single-stage plan fits any model")
+    with pytest.raises(LoweringError):
+        lower_plan(plan, small)
+
+
+def test_warmup_mismatch_raises(setup):
+    cfg, prof, plan = setup
+    if len(plan.stages) == 1:
+        pytest.skip("K_p is trivially 1")
+    bad = dataclasses.replace(
+        plan, stages=tuple(
+            dataclasses.replace(st, k_p=st.k_p + 1) for st in plan.stages))
+    with pytest.raises(LoweringError):
+        lower_plan(bad, cfg)
+
+
+def test_heterogeneous_cluster_envs(setup):
+    """Lowering holds across planners and environments."""
+    cfg, _, _ = setup
+    table = LayerTable.from_model_config(cfg, seq_len=128)
+    for env in (env_b, env_d):
+        prof = Profile.analytic(table, env().sorted_by_memory(), max_batch=32)
+        for mk in (lambda: plan_hpp(prof, 64, 8, arch="t"),
+                   lambda: plan_gpipe(prof, 64, 8, arch="t", n_stages=2)):
+            plan = mk()
+            low = lower_plan(plan, cfg)
+            check_against_simulator(low, plan, prof)

@@ -2,11 +2,14 @@
 
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the 'test' extra")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.models.moe import MoEConfig, init_moe, moe

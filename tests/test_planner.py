@@ -1,8 +1,11 @@
 """Planner unit + property tests: Algorithm 1/2, cost model, schedules."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the 'test' extra")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.allocation import AllocationError, allocate_microbatch
