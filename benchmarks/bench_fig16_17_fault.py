@@ -4,31 +4,37 @@ Paper: on Env D (1x TX2 + 3x Nano, EfficientNet-B1), the lightweight replay
 recovers ~14x faster than heavy rescheduling while keeping ~90% of its
 post-recovery throughput.  Heavy rescheduling's re-planning runs on the most
 powerful remaining device — our planner executes on this host, so its wall
-time is additionally scaled to Jetson-NX speed for the derived ratio
-(factor = host/NX planner throughput, calibrated at 8x; the raw host time
-is reported too)."""
+time is additionally scaled to Jetson-NX speed (``JETSON_REPLAN_SCALE``,
+shared with ``core.replay``'s default; the raw host time is reported too).
+
+``run_structured`` also returns machine-readable records (one per dropped
+device) which ``benchmarks.run`` serializes to ``BENCH_fault.json`` so the
+recovery-time / post-recovery-throughput trajectory is tracked across PRs.
+``quick=True`` uses the coarse 25-layer EfficientNet table and a single
+micro-batch candidate (CI-friendly; the fine 213-layer table is what makes
+full re-planning expensive and the paper ratio large)."""
 
 from __future__ import annotations
 
 from repro.core.hardware import env_d
 from repro.core.planner import auto_microbatch
 from repro.core.profiler import Profile
-from repro.core.replay import heavy_rescheduling, lightweight_replay
-from repro.configs.paper_models import efficientnet_b1_fine
+from repro.core.replay import (JETSON_REPLAN_SCALE, heavy_rescheduling,
+                               lightweight_replay)
+from repro.configs.paper_models import efficientnet_b1, efficientnet_b1_fine
 
 from .common import row
 
-JETSON_REPLAN_SCALE = 8.0
 
-
-def run() -> list[str]:
-    rows = []
+def run_structured(quick: bool = False) -> tuple[list[str], list[dict]]:
+    rows: list[str] = []
+    records: list[dict] = []
     # fine-grained table: the paper plans EfficientNet-B1 at 213-layer
     # granularity, which is what makes full re-planning expensive
-    prof = Profile.analytic(efficientnet_b1_fine(),
-                            env_d().sorted_by_memory(), max_batch=64)
+    table = efficientnet_b1(32) if quick else efficientnet_b1_fine()
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=64)
     plan = auto_microbatch(prof, 512, arch="efficientnet-b1",
-                           candidates=(16, 32))
+                           candidates=(32,) if quick else (16, 32))
     base_tput = plan.throughput
     for fail_rank in sorted({st.group[0] for st in plan.stages}):
         light = lightweight_replay(plan, prof, fail_rank)
@@ -38,6 +44,24 @@ def run() -> list[str]:
         # both mechanisms), matching the paper's Fig. 17 definition
         light_rec = light.total_s - light.detection_s
         heavy_rec = heavy.total_s - heavy.detection_s
+        records.append({
+            "scenario": f"drop_dev{fail_rank}",
+            "failed_rank": fail_rank,
+            "light_recovery_s": light_rec,
+            "heavy_recovery_s": heavy_rec,
+            "recovery_speedup": heavy_rec / light_rec,
+            "light_migration_s": light.migration_s,
+            "light_restore_s": light.restore_s,
+            "tput_light": light.new_plan.throughput,
+            "tput_heavy": heavy.new_plan.throughput,
+            "tput_keep": (light.new_plan.throughput
+                          / max(heavy.new_plan.throughput, 1e-9)),
+            "base_tput": base_tput,
+            "boundary_moves": [
+                {"boundary": m.boundary, "layers": [m.lo, m.hi],
+                 "nbytes": m.nbytes, "link_bw": m.link_bw}
+                for m in light.boundary_moves],
+        })
         rows.append(row(
             f"fig16/drop_dev{fail_rank}", light_rec,
             light_s=f"{light_rec:.2f}",
@@ -47,4 +71,8 @@ def run() -> list[str]:
             tput_heavy=f"{heavy.new_plan.throughput:.1f}",
             tput_keep=f"{light.new_plan.throughput / max(heavy.new_plan.throughput, 1e-9):.2f}",
             base_tput=f"{base_tput:.1f}"))
-    return rows
+    return rows, records
+
+
+def run(quick: bool = False) -> list[str]:
+    return run_structured(quick)[0]

@@ -3,11 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV.  Usage:
 
     PYTHONPATH=src python -m benchmarks.run [--only table4 fig13 ...]
+        [--quick] [--json-out BENCH_fault.json]
+
+The fault suite (fig16) additionally writes a machine-readable
+``BENCH_fault.json`` (recovery times + post-recovery throughput for
+lightweight vs heavy) so the perf trajectory is recorded across PRs;
+``--quick`` runs it on the coarse layer table (CI-friendly).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -34,6 +41,10 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None, choices=list(SUITES))
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced problem sizes where supported (fig16)")
+    ap.add_argument("--json-out", default="BENCH_fault.json",
+                    help="where the fault suite writes its JSON record")
     args = ap.parse_args()
     names = args.only or list(SUITES)
     print("name,us_per_call,derived")
@@ -41,7 +52,15 @@ def main() -> None:
     for name in names:
         t0 = time.perf_counter()
         try:
-            for line in SUITES[name]():
+            if name == "fig16":
+                lines, records = bench_fig16_17_fault.run_structured(args.quick)
+                with open(args.json_out, "w") as f:
+                    json.dump({"suite": "fig16", "quick": args.quick,
+                               "records": records}, f, indent=2)
+                print(f"# fig16 records -> {args.json_out}", file=sys.stderr)
+            else:
+                lines = SUITES[name]()
+            for line in lines:
                 print(line)
         except Exception as e:  # pragma: no cover
             failures += 1

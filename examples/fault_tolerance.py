@@ -1,125 +1,164 @@
-"""Fault-tolerant pipeline replay, live (§3.4 end-to-end).
+"""Fault-tolerant pipeline replay, live (§3.4 end-to-end) — on the REAL
+distributed runtime.
 
-Trains a small LM as an Asteroid HPP pipeline over a *simulated* edge
-cluster (each "device" owns a stage partition of the params, executed
-locally), with:
+A ``PipelineSession`` (repro.runtime.session) trains a small LM as an
+Asteroid HPP pipeline under shard_map on 8 host devices, then survives a
+mid-training device failure without re-initializing:
 
-  1. heartbeat-guided failure detection (simulated clock),
-  2. topology-driven stage replication (single-device stages checkpoint to a
-     backup node in the next stage),
-  3. layer-wise lightweight re-planning + concurrent layer migration,
+  1. heartbeat-guided failure detection (``ReplayCoordinator`` state
+     machine: heartbeat -> probe -> confirm -> replan -> migrate -> resume),
+  2. topology-driven stage replication (single-device stages push period
+     rows to a backup node on a step cadence),
+  3. layer-wise lightweight re-planning, then a *pure index migration* of
+     the stacked period params + optimizer moments onto the re-lowered
+     plan (``core.lowering.migrate_params``), restore of the failed stage
+     from its backup, and a re-jitted train step.
 
-then *continues training* after a device failure and shows the loss keeps
-improving and the recovered weights are bit-identical where untouched.
+Two scenarios:
+
+  * **migration** — a device in a multi-device stage dies; the stage
+    survives with its DP peer, boundary periods migrate toward the other
+    stage, and ``reconcile_migration`` asserts the bytes moved equal the
+    analytical ``RecoveryReport``'s migration inputs *exactly*.
+  * **restore** — a single-device stage dies entirely; the pipeline
+    collapses to one stage (tp widens to the full model axis), its periods
+    are restored bit-identically from the backup replica.
+
+In both, periods untouched by migration/restore stay bit-identical and the
+loss keeps improving after recovery.
 
     PYTHONPATH=src python examples/fault_tolerance.py
 """
 
-import numpy as np
+import os
 
-import jax
-import jax.numpy as jnp
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from repro.checkpoint import StageBackupStore
-from repro.configs import get_smoke_config
-from repro.core.hardware import env_d
-from repro.core.planner import plan_hpp
-from repro.core.profiler import LayerTable, Profile
-from repro.core.replay import (assign_backups, detection_latency,
-                               lightweight_replay)
-from repro.data import SyntheticLM
-from repro.models.model import init_model, loss_fn
-from repro.models.module import tree_bytes
-from repro.optim import AdamW
+import numpy as np  # noqa: E402
 
-# ---------------------------------------------------------------------------
-# Setup: plan a pipeline for the smoke model on Env D (1x TX2 + 3x Nano)
-# ---------------------------------------------------------------------------
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
 
-cfg = get_smoke_config("phi3-mini-3.8b").replace(n_layers=4)
-table = LayerTable.from_model_config(cfg, seq_len=64)
-profile = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=32)
-plan = plan_hpp(profile, global_batch=32, micro_batch=8, arch=cfg.name)
-print(f"plan: {[(s.layers, s.group) for s in plan.stages]}")
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core.hardware import Cluster, env_d  # noqa: E402
+from repro.core.lowering import period_positions  # noqa: E402
+from repro.core.planner import plan_hpp  # noqa: E402
+from repro.core.profiler import LayerTable, Profile  # noqa: E402
+from repro.data import SyntheticLM  # noqa: E402
+from repro.runtime.session import PipelineSession  # noqa: E402
 
-# the simulated cluster: params live as one tree; each stage's layer range
-# maps to period indices (embed/head belong to first/last stage)
-key = jax.random.PRNGKey(0)
-params = init_model(key, cfg)
-opt = AdamW(lr=1e-3)
-opt_state = opt.init(params)
-ds = SyntheticLM(cfg.vocab_size, 64)
+B, S = 8, 64
+cfg = get_smoke_config("phi3-mini-3.8b").replace(n_layers=8)
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+table = LayerTable.from_model_config(cfg, S)
+ds = SyntheticLM(cfg.vocab_size, S)
 
 
-@jax.jit
-def train_step(params, opt_state, batch):
-    (loss, _), grads = jax.value_and_grad(
-        lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
-    new_params, new_opt = opt.update(grads, opt_state, params)
-    return new_params, new_opt, loss
+def run_scenario(name: str, cluster: Cluster, fail_pick, allowed_stages,
+                 expect_mode: str) -> None:
+    print(f"\n=== scenario: {name} ===")
+    prof = Profile.analytic(table, cluster.sorted_by_memory(), max_batch=B)
+    plan = plan_hpp(prof, B, micro_batch=2, arch=cfg.name,
+                    allowed_stages=allowed_stages)
+    session = PipelineSession(cfg, mesh, plan, prof, backup_every=2)
+    session.init(jax.random.PRNGKey(0))
+    print(f"plan: {[(st.layers, st.group) for st in session.plan.stages]} "
+          f"periods={session.lowered.stage_periods} "
+          f"M={session.lowered.n_micro}")
+
+    losses = [session.step(ds.batch(s, B))[0] for s in range(6)]
+
+    # snapshot the arranged period stack before the failure
+    old_pos = period_positions(session.lowered)
+    pre = [np.asarray(jax.device_get(x))
+           for x in jax.tree.leaves(session.params["periods"])]
+
+    failed_rank = fail_pick(session.plan)
+    print(f"step {session.step_count}: device {failed_rank} FAILS "
+          f"(heartbeats stop at t={session.clock:.1f}s)")
+    session.fail(failed_rank)
+    out = session.recover_now()
+
+    assert out.mode == expect_mode, (out.mode, expect_mode)
+    rep = out.report
+    print(f"  coordinator: "
+          f"{' -> '.join(s for s, _, _ in session.coordinator.events[-6:])}")
+    print(f"  detected in {out.detection_observed_s:.2f}s (analytical "
+          f"{rep.detection_s:.2f}s), {out.mode} replay: replan "
+          f"{rep.replan_s * 1e3:.1f}ms + migrate {rep.migration_s:.2f}s + "
+          f"restore {rep.restore_s:.2f}s")
+    print(f"  new plan: {[(st.layers, st.group) for st in session.plan.stages]}"
+          f" periods={session.lowered.stage_periods} "
+          f"tp={session.ts.spec.plan.tp}")
+    print(f"  migrated periods {out.migration.moved_periods} "
+          f"({out.migration.total_bytes / 1e6:.1f} MB), restored "
+          f"{out.restored_periods} from stage {out.restored_stage} backup")
+
+    # 1) runtime migration bytes == analytical RecoveryReport inputs: the
+    #    moved periods re-priced with the profiler's layer table must equal
+    #    the analytical bytes exactly (actual array bytes shown alongside)
+    if out.reconciliation is not None:
+        for b, rec in out.reconciliation.items():
+            assert rec["table_bytes"] == rec["analytic_bytes"], rec
+            print(f"  boundary {b}: moved periods price to "
+                  f"{rec['table_bytes'] / 1e6:.2f} MB == analytical "
+                  f"{rec['analytic_bytes'] / 1e6:.2f} MB "
+                  f"(array bytes {rec['runtime_bytes'] / 1e6:.2f} MB)  OK")
+
+    # 2) periods untouched by migration/restore are bit-identical
+    new_pos = period_positions(session.lowered)
+    post = [np.asarray(jax.device_get(x))
+            for x in jax.tree.leaves(session.params["periods"])]
+    touched = set(out.migration.moved_periods) | set(out.restored_periods)
+    untouched = [t for t in range(session.lowered.n_periods)
+                 if t not in touched]
+    for t in untouched:
+        for a, b in zip(pre, post):
+            assert np.array_equal(a[old_pos[t]], b[new_pos[t]]), \
+                f"period {t} changed bits across the migration"
+    print(f"  untouched periods {untouched} bit-identical  OK")
+
+    # 3) training continues to improve on the replayed pipeline
+    losses += [session.step(ds.batch(s, B))[0] for s in range(6, 18)]
+    print(f"  loss: start {losses[0]:.3f} -> pre-failure {losses[5]:.3f} "
+          f"-> final {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "training did not continue improving"
+    print(f"  OK: {name} recovery kept the pipeline converging")
 
 
-# ---------------------------------------------------------------------------
-# Replication: single-device stages back up to the next stage's device
-# ---------------------------------------------------------------------------
-
-assign = assign_backups(plan, profile)
-store = StageBackupStore()
-print(f"backup topology: {assign.backup_of_stage} "
-      f"(stage -> backup device rank)")
+def pick_multi_device_rank(plan):
+    """A device whose stage has a DP peer -> pure-migration recovery."""
+    st = max(plan.stages, key=lambda s: len(s.group))
+    return st.group[-1]
 
 
-def stage_params_slice(params, stage):
-    """The period slice owned by a pipeline stage (model layers only)."""
-    i, j = stage.layers
-    lo = max(i - 1, 0)                 # table layer 0 is the embedding
-    hi = min(j - 1, cfg.n_periods)
-    sl = jax.tree.map(lambda x: x[lo:hi], params["periods"])
-    return sl, (lo, hi)
+def pick_single_device_rank(plan):
+    """The device of a single-device stage -> backup-restore recovery."""
+    st = next(s for s in plan.stages if len(s.group) == 1)
+    return st.group[0]
 
 
-losses = []
-CLOCK = 0.0
-FAIL_AT = 12
+# Env D (1x TX2 + 3x Nano), 2 stages: one stage gets multiple devices —
+# failing one member keeps the stage alive and shifts the boundary, so the
+# recovery is a pure lightweight migration (with byte reconciliation).
+run_scenario("migration (DP peer survives)", env_d(),
+             pick_multi_device_rank, allowed_stages={2},
+             expect_mode="lightweight")
 
+# Two devices, one per stage: failing one kills a whole stage — the
+# pipeline collapses to a single stage (tp widens 2 -> 4) and the lost
+# periods are restored from the backup node, stale by <= backup_every.
+cl = env_d().sorted_by_memory()
+run_scenario("restore (whole stage lost)",
+             Cluster(cl.devices[:2], cl.bandwidth), pick_single_device_rank,
+             allowed_stages={2}, expect_mode="lightweight")
 
-def heartbeat_ok(step, failed):
-    return not (failed and step >= FAIL_AT)
+# 4 single-device stages: a failure leaves 3 survivors, which does not
+# divide the mesh model axis — the session falls back to heavy
+# rescheduling (Algorithm 2 from scratch) restricted to lowerable stage
+# counts, still migrating/restoring state instead of re-initializing.
+run_scenario("heavy fallback (survivor count not lowerable)", env_d(),
+             pick_single_device_rank, allowed_stages={4},
+             expect_mode="heavy")
 
-
-failed_rank = plan.stages[-1].group[0]
-for step in range(25):
-    batch = {k: jnp.asarray(v) for k, v in ds.batch(step, 32).items()}
-    # periodic topology-driven replication (every 5 rounds)
-    if step % 5 == 0:
-        for p, st in enumerate(plan.stages):
-            if p in assign.backup_of_stage:
-                sl, _ = stage_params_slice(params, st)
-                store.backup(p, sl)
-    if step == FAIL_AT:
-        # --- device failure: heartbeats stop ---------------------------
-        det = detection_latency(fail_time=float(step))
-        rep = lightweight_replay(plan, profile, failed_rank)
-        print(f"step {step}: device {failed_rank} FAILED — detected in "
-              f"{det:.2f}s, lightweight replay re-planned "
-              f"{len(rep.new_plan.stages)} stages in {rep.total_s:.2f}s "
-              f"(vs heavy rescheduling; see benchmarks/fig16)")
-        # restore the failed stage's weights from its backup node
-        for p, st in enumerate(plan.stages):
-            if failed_rank in st.group and p in assign.backup_of_stage:
-                restored = store.restore(p)
-                sl, (lo, hi) = stage_params_slice(params, st)
-                same = all(bool(jnp.allclose(a, b)) for a, b in zip(
-                    jax.tree.leaves(restored), jax.tree.leaves(sl)))
-                print(f"  stage {p} weights restored from backup rank "
-                      f"{assign.backup_of_stage[p]} "
-                      f"({tree_bytes(restored)/1e6:.1f} MB, "
-                      f"{'stale-by-<=5-steps' if not same else 'exact'})")
-        plan = rep.new_plan
-    params, opt_state, loss = train_step(params, opt_state, batch)
-    losses.append(float(loss))
-
-print(f"loss: start {losses[0]:.3f} -> pre-failure {losses[FAIL_AT-1]:.3f} "
-      f"-> final {losses[-1]:.3f}")
-assert losses[-1] < losses[0], "training did not continue improving"
-print("OK: training survived the device failure and kept converging")
+print("\nOK: training survived all three device failures without restarting")

@@ -94,15 +94,23 @@ def restore(path: str, name: str, like):
 
 class StageBackupStore:
     """In-memory topology-driven replica store: stage -> snapshot on the
-    backup node (here: host memory standing in for the next-stage device)."""
+    backup node (here: host memory standing in for the next-stage device).
+
+    ``meta`` rides along with each snapshot (e.g. the canonical period range
+    the rows cover and the training step they were captured at) so a replay
+    session can scatter a restored stage back into a *re-arranged* period
+    stack after a plan swap.
+    """
 
     def __init__(self):
         self._store: dict[int, object] = {}
+        self._meta: dict[int, dict] = {}
         self.bytes_transferred = 0
 
-    def backup(self, stage: int, params) -> None:
+    def backup(self, stage: int, params, meta: dict | None = None) -> None:
         snap = jax.tree.map(lambda x: np.asarray(x).copy(), params)
         self._store[stage] = snap
+        self._meta[stage] = dict(meta or {})
         self.bytes_transferred += sum(a.nbytes for a in jax.tree.leaves(snap))
 
     def restore(self, stage: int):
@@ -110,5 +118,14 @@ class StageBackupStore:
             raise KeyError(f"no backup for stage {stage}")
         return jax.tree.map(jnp.asarray, self._store[stage])
 
+    def meta(self, stage: int) -> dict:
+        if stage not in self._store:
+            raise KeyError(f"no backup for stage {stage}")
+        return dict(self._meta.get(stage, {}))
+
     def has(self, stage: int) -> bool:
         return stage in self._store
+
+    def drop(self, stage: int) -> None:
+        self._store.pop(stage, None)
+        self._meta.pop(stage, None)

@@ -22,6 +22,14 @@ ppermute pipeline.
 ``check_against_simulator`` cross-checks the lowered schedule against the
 discrete-event simulator: per-stage op counts, the unit-cost makespan in
 ticks, and the O(K_p) resident-activation bound (DESIGN.md §2–3).
+
+The *replay* half of the module makes a lowered pipeline re-lowerable while
+training (DESIGN.md §6): ``relower`` lowers a replacement ``Plan`` against
+an existing ``LoweredPlan``'s runtime, ``migrate_params`` /
+``migrate_opt_state`` re-arrange the stacked period params (and optimizer
+moments, with the same index map) from the old stage split to the new one,
+and ``reconcile_migration`` checks the resulting per-boundary bytes against
+the analytical ``RecoveryReport`` a ``lightweight_replay`` produced.
 """
 
 from __future__ import annotations
@@ -252,6 +260,220 @@ def check_against_simulator(lowered: LoweredPlan, plan: Plan,
 
 
 # ---------------------------------------------------------------------------
+# Live replay: re-lowering and parameter migration
+# ---------------------------------------------------------------------------
+
+
+def relower(old: LoweredPlan, new_plan: Plan, cfg,
+            model_axis: int | None = None) -> LoweredPlan:
+    """Lower ``new_plan`` as a replacement for ``old`` on the same runtime.
+
+    Beyond ``lower_plan``'s own checks, validates that the two lowered plans
+    describe the same model and micro-batch structure, so the stacked period
+    params (and optimizer state) can be migrated rather than re-initialized.
+    """
+    if old.arch and new_plan.arch and old.arch != new_plan.arch:
+        raise LoweringError(f"arch changed across replay: {old.arch!r} -> "
+                            f"{new_plan.arch!r}")
+    new = lower_plan(new_plan, cfg, model_axis)
+    if new.n_periods != old.n_periods:
+        raise LoweringError(f"period count changed: {old.n_periods} -> "
+                            f"{new.n_periods}")
+    if new.global_batch != old.global_batch or new.n_micro != old.n_micro:
+        raise LoweringError(
+            f"batch structure changed: (B={old.global_batch}, M={old.n_micro})"
+            f" -> (B={new.global_batch}, M={new.n_micro})")
+    return new
+
+
+def snap_plan(plan: Plan, lowered: LoweredPlan, L: int) -> Plan:
+    """``plan`` with stage layer ranges snapped to what was deployed.
+
+    Lowering snaps layer cuts to period boundaries; the plan the runtime
+    actually executes therefore owns the *snapped* ranges.  The returned
+    plan (stage ranges and exec-step ranges rewritten; costs kept as the
+    planner's estimates) is what a session should feed back into
+    ``lightweight_replay`` so old-ownership accounting matches reality.
+    """
+    plen = (L - 2) // lowered.n_periods
+    cuts = [0] + [1 + j * plen for _, j in lowered.stage_periods[:-1]] + [L]
+    ranges = [(cuts[p], cuts[p + 1]) for p in range(lowered.stage)]
+    stages = tuple(dataclasses.replace(st, layers=r)
+                   for st, r in zip(plan.stages, ranges))
+    ex = iter(ranges)
+    steps = tuple(dataclasses.replace(s, layers=next(ex))
+                  if s.kind == "exec" else s for s in plan.steps)
+    return dataclasses.replace(plan, stages=stages, steps=steps)
+
+
+def period_owner(lp: LoweredPlan) -> tuple[int, ...]:
+    """Owning stage of each canonical period under ``lp``'s split."""
+    out = [0] * lp.n_periods
+    for p, (i, j) in enumerate(lp.stage_periods):
+        for t in range(i, j):
+            out[t] = p
+    return tuple(out)
+
+
+def period_positions(lp: LoweredPlan) -> dict[int, int]:
+    """canonical period -> row in ``lp``'s arranged period stack.
+
+    The single source of truth for the ``runtime.pipeline.arrange_periods``
+    layout (stage p's uniform slice ``[p*k, (p+1)*k)`` holds its assigned
+    periods then zero padding) — migration, backup scatter/restore, and the
+    bit-identicality checks all index through it.
+    """
+    pos: dict[int, int] = {}
+    k = lp.k_per_stage
+    for p, (i, j) in enumerate(lp.stage_periods):
+        for t in range(i, j):
+            pos[t] = p * k + (t - i)
+    return pos
+
+
+def migration_index(old: LoweredPlan, new: LoweredPlan):
+    """Gather index mapping the OLD arranged period stack onto the NEW one.
+
+    Returns ``(take, mask)`` such that
+    ``new_leaf = where(mask, old_leaf[take], 0)``.
+    """
+    pos = period_positions(old)
+    k_new = new.k_per_stage
+    take: list[int] = []
+    mask: list[float] = []
+    for i, j in new.stage_periods:
+        take += [pos[t] for t in range(i, j)] + [0] * (k_new - (j - i))
+        mask += [1.0] * (j - i) + [0.0] * (k_new - (j - i))
+    return take, mask
+
+
+def _period_migrator(old: LoweredPlan, new: LoweredPlan):
+    """leaf -> leaf gather realizing ``migration_index`` (pure jnp)."""
+    import jax.numpy as jnp
+
+    take, mask = migration_index(old, new)
+    idx = jnp.asarray(take)
+    m = jnp.asarray(mask, jnp.float32)
+
+    def f(x):
+        g = x[idx]
+        keep = (m > 0).reshape(-1, *([1] * (g.ndim - 1)))
+        return jnp.where(keep, g, jnp.zeros_like(g))
+
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationReport:
+    """What ``migrate_params`` moved, per boundary of the NEW plan."""
+
+    moved_periods: tuple[int, ...]            # canonical indices that moved
+    restored_periods: tuple[int, ...]         # restored from backup instead
+    boundary_periods: tuple[tuple[int, ...], ...]   # per new-plan boundary
+    boundary_bytes: tuple[float, ...]         # actual array bytes crossing
+    period_bytes: float                       # bytes of one period's params
+    total_bytes: float
+
+
+def migrate_params(params, old: LoweredPlan, new: LoweredPlan, *,
+                   old_owner=None):
+    """Pure migration of the stacked period params across a plan swap.
+
+    ``old_owner``: per-canonical-period owner in the NEW plan's survivor
+    stage coordinates; ``None`` entries mark periods restored from a backup
+    (excluded from boundary accounting).  Defaults to the old plan's own
+    stage indices, which is exact when the stage count is unchanged.
+
+    Returns ``(migrated_params, MigrationReport)``.  Leaves outside
+    ``params["periods"]`` are returned untouched (vocab re-padding for a tp
+    change is the session layer's job).
+    """
+    import jax
+
+    f = _period_migrator(old, new)
+    out = dict(params)
+    out["periods"] = jax.tree.map(f, params["periods"])
+
+    if old_owner is None:
+        old_owner = period_owner(old)
+    new_own = period_owner(new)
+    moved = tuple(t for t in range(new.n_periods)
+                  if old_owner[t] is not None and old_owner[t] != new_own[t])
+    restored = tuple(t for t in range(new.n_periods) if old_owner[t] is None)
+    period_bytes = sum(leaf.nbytes / leaf.shape[0]
+                       for leaf in jax.tree.leaves(params["periods"]))
+    boundary_periods: list[tuple[int, ...]] = []
+    boundary_bytes: list[float] = []
+    for p in range(new.stage - 1):
+        crossing = tuple(t for t in moved
+                         if min(old_owner[t], new_own[t]) <= p
+                         < max(old_owner[t], new_own[t]))
+        boundary_periods.append(crossing)
+        boundary_bytes.append(period_bytes * len(crossing))
+    report = MigrationReport(moved, restored, tuple(boundary_periods),
+                             tuple(boundary_bytes), period_bytes,
+                             period_bytes * len(moved))
+    return out, report
+
+
+def migrate_opt_state(opt_state, old: LoweredPlan, new: LoweredPlan):
+    """Optimizer moments follow the params through the SAME index map."""
+    import jax
+
+    from repro.optim import AdamWState, SGDState
+
+    f = _period_migrator(old, new)
+
+    def mig(tree):
+        out = dict(tree)
+        out["periods"] = jax.tree.map(f, tree["periods"])
+        return out
+
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(opt_state.step, mig(opt_state.m), mig(opt_state.v))
+    if isinstance(opt_state, SGDState):
+        return SGDState(opt_state.step, mig(opt_state.mom))
+    raise TypeError(type(opt_state))
+
+
+def reconcile_migration(mig: MigrationReport, report, new: LoweredPlan,
+                        table, pattern_len: int,
+                        rel_tol: float = 1e-6) -> dict:
+    """Assert ``migrate_params``'s boundary bytes match the analytical
+    ``RecoveryReport`` migration inputs (``lightweight_replay`` run with
+    ``layer_quantum=pattern_len`` so its cuts are period-aligned).
+
+    Returns per-boundary ``{analytic_bytes, table_bytes, runtime_bytes}``
+    where ``table_bytes`` re-prices the runtime's moved periods with the
+    profiler's layer table — the quantity that must equal the analytical
+    bytes exactly.
+    """
+    analytic = {bm.boundary: bm for bm in report.boundary_moves}
+    out: dict[int, dict[str, float]] = {}
+    for p in range(new.stage - 1):
+        periods = mig.boundary_periods[p]
+        bm = analytic.get(p)
+        if bm is None:
+            assert not periods, (
+                f"runtime moved periods {periods} across boundary {p} but "
+                f"the recovery report shows no migration there")
+            continue
+        hull = set(range((bm.lo - 1) // pattern_len,
+                         -(-(bm.hi - 1) // pattern_len)))
+        assert set(periods) <= hull, (p, periods, sorted(hull))
+        table_bytes = sum(
+            table.param_bytes(1 + t * pattern_len, 1 + (t + 1) * pattern_len)
+            for t in periods)
+        assert abs(table_bytes - bm.nbytes) <= rel_tol * max(table_bytes, 1.0), (
+            f"boundary {p}: runtime periods {periods} price to "
+            f"{table_bytes:.0f} B in the layer table, but the recovery "
+            f"report migrated {bm.nbytes:.0f} B")
+        out[p] = {"analytic_bytes": bm.nbytes, "table_bytes": table_bytes,
+                  "runtime_bytes": mig.boundary_bytes[p]}
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Runtime bridge
 # ---------------------------------------------------------------------------
 
@@ -269,7 +491,7 @@ def plan_to_train_step(plan: Plan, profile: Profile | None, cfg,
     import numpy as np
     from jax.sharding import Mesh
 
-    from repro.runtime.train import build_train_step
+    from repro.runtime.train import build_train_step_from_lowered
 
     if production_mesh is None:
         devs = jax.devices()
@@ -279,15 +501,8 @@ def plan_to_train_step(plan: Plan, profile: Profile | None, cfg,
     if check and profile is not None:
         check_against_simulator(lowered, plan, profile)
 
-    dp = (production_mesh.shape.get("pod", 1) *
-          production_mesh.shape["data"])
-    if lowered.global_batch % dp or (lowered.global_batch // dp) % lowered.n_micro:
-        raise LoweringError(
-            f"global batch {lowered.global_batch} not divisible into "
-            f"{lowered.n_micro} micro-batches per {dp} data shards")
-
-    ts = build_train_step(cfg, production_mesh,
-                          global_batch=lowered.global_batch,
-                          stage=lowered.stage, n_micro=lowered.n_micro,
-                          stage_periods=lowered.stage_periods, **kw)
+    try:
+        ts = build_train_step_from_lowered(cfg, production_mesh, lowered, **kw)
+    except ValueError as e:
+        raise LoweringError(str(e)) from e
     return ts, lowered

@@ -4,8 +4,10 @@ Three modules, faithful to the paper:
 
 1. **Heartbeat-guided failure detection** — every device emits heartbeats to
    the coordinator; a missed deadline triggers a probe; an unanswered probe
-   confirms the failure.  (Simulated clock; the same state machine drives the
-   live JAX demo in examples/fault_tolerance.py.)
+   confirms the failure.  ``ReplayCoordinator`` is the state machine
+   (heartbeat -> probe -> confirm -> replan -> migrate -> resume); it drives
+   a live executor (``repro.runtime.session.PipelineSession``) through the
+   same transitions the analytical model charges time for.
 
 2. **Topology-driven model replication** — single-device stages back up
    their stage model to a *backup node* in the next stage (last stage wraps
@@ -16,7 +18,7 @@ Three modules, faithful to the paper:
    Algorithm 2, the surviving stages re-split the layer range proportionally
    to their aggregate computing capacity (FLOPs-based), and adjacent stages
    migrate boundary layers *concurrently*; weights owned by the failed
-   device are restored from its backup.
+   device are restored from its backup directly to their new owner stages.
 
 The heavy-rescheduling baseline (aggregate → re-plan → redistribute) is also
 implemented for the Fig. 16/17 comparison.
@@ -25,8 +27,12 @@ implemented for the Fig. 16/17 comparison.
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 
-from .allocation import allocate_microbatch
+import numpy as np
+
+from .allocation import AllocationError, allocate_microbatch
 from .costmodel import Step, allreduce_time, kp_policy, round_latency
 from .planner import Plan, StagePlan, _comm_step, plan_hpp
 from .profiler import Profile
@@ -34,6 +40,11 @@ from .profiler import Profile
 HEARTBEAT_PERIOD = 0.5        # s
 HEARTBEAT_TIMEOUT = 2.0       # missed-deadline threshold
 PROBE_TIMEOUT = 1.0
+
+# Heavy rescheduling re-plans on the strongest *surviving* edge device; our
+# planner executes on this host, so its wall time is scaled to Jetson-NX
+# speed (calibrated at 8x host/NX planner throughput) for derived ratios.
+JETSON_REPLAN_SCALE = 8.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,15 +87,102 @@ def detection_latency(fail_time: float, heartbeat_period: float = HEARTBEAT_PERI
                       probe_timeout: float = PROBE_TIMEOUT) -> float:
     """Time from failure to confirmed detection."""
     # last heartbeat was at the period boundary before the failure
-    import math
     last_beat = math.floor(fail_time / heartbeat_period) * heartbeat_period
     deadline = last_beat + heartbeat_period + timeout
     return (deadline - fail_time) + probe_timeout
 
 
+class ReplayCoordinator:
+    """Failure-handling state machine over a simulated clock.
+
+    monitoring --missed deadline--> probing --probe timeout--> confirmed
+    --> replanning --> migrating --> resuming --> monitoring
+
+    Callers feed ``heartbeat(rank, now)`` and advance detection with
+    ``poll(now)``; once a failure is confirmed, ``run_recovery`` drives an
+    *executor* — any object with ``replan(failed_rank) -> RecoveryReport``,
+    ``migrate(report)`` and ``resume(report, migration)`` — through the
+    replay, stamping each transition with the report's own component costs.
+    The live executor is ``repro.runtime.session.PipelineSession``; tests
+    drive the machine with a scripted clock.
+    """
+
+    def __init__(self, ranks, heartbeat_period: float = HEARTBEAT_PERIOD,
+                 timeout: float = HEARTBEAT_TIMEOUT,
+                 probe_timeout: float = PROBE_TIMEOUT, now: float = 0.0):
+        self.heartbeat_period = heartbeat_period
+        self.timeout = timeout
+        self.probe_timeout = probe_timeout
+        self.last_beat = {r: now for r in ranks}
+        self.state = "monitoring"
+        self.suspect: int | None = None
+        self._probe_sent = 0.0
+        self.events: list[tuple[str, float, int | None]] = [
+            ("monitoring", now, None)]
+
+    def _transition(self, state: str, now: float, rank: int | None = None):
+        self.state = state
+        self.events.append((state, now, rank))
+
+    def heartbeat(self, rank: int, now: float) -> None:
+        if rank in self.last_beat:
+            self.last_beat[rank] = max(self.last_beat[rank], now)
+
+    def poll(self, now: float) -> int | None:
+        """Advance failure detection; returns a rank once it is confirmed."""
+        if self.state == "monitoring":
+            for r, t in sorted(self.last_beat.items()):
+                if now - t > self.heartbeat_period + self.timeout:
+                    self.suspect, self._probe_sent = r, now
+                    self._transition("probing", now, r)
+                    break
+        if self.state == "probing":
+            if self.last_beat[self.suspect] > self._probe_sent:
+                self._transition("monitoring", now)   # probe answered
+                self.suspect = None
+            elif now - self._probe_sent >= self.probe_timeout:
+                rank = self.suspect
+                self._transition("confirmed", now, rank)
+                return rank
+        return None
+
+    def run_recovery(self, failed_rank: int, executor, now: float = 0.0):
+        """Drive replan -> migrate -> resume on ``executor``.
+
+        Returns ``(RecoveryReport, migration)`` where ``migration`` is
+        whatever ``executor.migrate`` produced.
+        """
+        if self.state != "confirmed":
+            raise RuntimeError(f"recovery requires a confirmed failure "
+                               f"(state={self.state})")
+        self.last_beat.pop(failed_rank, None)
+        self.suspect = None
+        self._transition("replanning", now, failed_rank)
+        report = executor.replan(failed_rank)
+        t = now + report.replan_s
+        self._transition("migrating", t, failed_rank)
+        migration = executor.migrate(report)
+        t += report.migration_s + report.restore_s
+        self._transition("resuming", t, failed_rank)
+        executor.resume(report, migration)
+        self._transition("monitoring", t, None)
+        return report, migration
+
+
 # ---------------------------------------------------------------------------
 # Lightweight layer-wise re-planning
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryMove:
+    """Weights crossing one boundary of the *new* plan during migration."""
+
+    boundary: int                  # between new stages boundary, boundary+1
+    lo: int                        # table-layer hull [lo, hi) of moved layers
+    hi: int
+    nbytes: float                  # exact bytes crossing this boundary
+    link_bw: float                 # D2D bandwidth of the boundary link
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +193,7 @@ class RecoveryReport:
     restore_s: float
     new_plan: Plan
     mode: str
+    boundary_moves: tuple[BoundaryMove, ...] = ()
 
     @property
     def total_s(self) -> float:
@@ -106,59 +205,124 @@ def _stage_capacity(profile: Profile, group, i: int, j: int, mb: int) -> float:
     return sum(1.0 / max(profile.t_both(d, mb, i, j), 1e-12) for d in group)
 
 
-def lightweight_replay(plan: Plan, profile: Profile, failed_rank: int,
-                       fail_time: float = 10.0) -> RecoveryReport:
-    """Layer-wise lightweight re-planning after ``failed_rank`` exits."""
-    import time as _time
+def _snap_cuts(cuts: list[int], quantum: int, L: int) -> list[int]:
+    """Snap interior table-layer cuts to period boundaries.
 
-    t0 = _time.perf_counter()
+    Mirrors ``lowering._snap_to_periods`` (table layer 1 + r*quantum is the
+    boundary after real-layer period r) so a snapped plan lowers to exactly
+    these cuts.  Kept strictly monotone with >= 1 period per stage.
+    """
+    n_layers = L - 2                       # embed + real layers + head
+    n_per = n_layers // quantum
+    P = len(cuts) - 1
+    if P > n_per:
+        raise AllocationError(f"{P} stages but only {n_per} periods")
+    pers = [0]
+    for p in range(P - 1):
+        r = min(max(cuts[p + 1] - 1, 0), n_layers)
+        per = round(r / quantum)
+        per = max(per, pers[-1] + 1)
+        per = min(per, n_per - (P - 1 - p))
+        pers.append(per)
+    return [0] + [1 + per * quantum for per in pers[1:]] + [L]
+
+
+def lightweight_replay(plan: Plan, profile: Profile, failed_rank: int,
+                       fail_time: float = 10.0,
+                       layer_quantum: int | None = None) -> RecoveryReport:
+    """Layer-wise lightweight re-planning after ``failed_rank`` exits.
+
+    ``layer_quantum``: when re-planning for the period-granular runtime
+    (``core.lowering``), snap the new cuts to period boundaries (= the
+    model's pattern length in table layers) so the analytical migration
+    inputs coincide exactly with what ``migrate_params`` moves.
+    """
+    t0 = time.perf_counter()
     table = profile.table
     stages = list(plan.stages)
     mb = plan.micro_batch
+    L = table.L
 
-    # 1) drop the failed device; a stage left empty is merged away below.
+    # 1) drop the failed device, remembering each original stage's survivor
+    #    index (None = the whole stage failed: restored, not migrated).
     survivors: list[StagePlan] = []
-    for st in stages:
+    surv_of_orig: dict[int, int] = {}
+    for q, st in enumerate(stages):
         group = tuple(d for d in st.group if d != failed_rank)
         if group:
+            surv_of_orig[q] = len(survivors)
             survivors.append(StagePlan(st.layers, group, st.alloc, st.k_p))
-        # fully-failed stage: its layer range is redistributed among the rest
     P = len(survivors)
     if P == 0:
         raise RuntimeError("no surviving devices")
 
     # 2) FLOPs-proportional re-partition over surviving stages' capacities
-    caps = [_stage_capacity(profile, st.group, 0, table.L, mb) for st in survivors]
+    caps = [_stage_capacity(profile, st.group, 0, L, mb) for st in survivors]
     total_cap = sum(caps)
-    total_flops = table.flops(0, table.L)
+    total_flops = table.flops(0, L)
     cuts = [0]
     acc = 0.0
     li = 0
     for p in range(P - 1):
         acc += total_flops * caps[p] / total_cap
-        while li < table.L and table.flops(0, li) < acc:
+        while li < L and table.flops(0, li) < acc:
             li += 1
-        cuts.append(min(li, table.L - (P - 1 - p)))
-    cuts.append(table.L)
+        cuts.append(min(li, L - (P - 1 - p)))
+    cuts.append(L)
+    if layer_quantum:
+        cuts = _snap_cuts(cuts, layer_quantum, L)
 
-    # 3) concurrent layer migration between adjacent stages
-    #    bytes moved on each boundary = weights of layers that switch stages
-    old_cuts = [0] + [st.layers[1] for st in survivors[:-1]] + [table.L]
+    # 3) per-layer ownership among the *survivors*.  Old ownership follows
+    #    the ORIGINAL plan partition (so a fully-failed stage's range is not
+    #    silently attributed to a neighbour); its layers have no surviving
+    #    owner — they are restored from backup, not migrated.
+    old_owner: list[int | None] = [None] * L
+    for q, st in enumerate(stages):
+        so = surv_of_orig.get(q)
+        for l in range(*st.layers):
+            old_owner[l] = so
+    new_owner = [0] * L
+    for p in range(P):
+        for l in range(cuts[p], cuts[p + 1]):
+            new_owner[l] = p
+
+    # 4) concurrent layer migration between adjacent stages: a layer's
+    #    weights cross boundary p iff its old->new owner path does.
     migration = 0.0
+    moves: list[BoundaryMove] = []
     for p in range(P - 1):
-        lo, hi = sorted((old_cuts[p + 1], cuts[p + 1]))
-        nbytes = table.param_bytes(lo, hi)
-        link_bw = profile.cluster.bw(survivors[p].group[0], survivors[p + 1].group[0])
-        migration = max(migration, nbytes / link_bw)   # concurrent transfers
+        crossing = [l for l in range(L) if old_owner[l] is not None
+                    and min(old_owner[l], new_owner[l]) <= p
+                    < max(old_owner[l], new_owner[l])]
+        link_bw = profile.cluster.bw(survivors[p].group[0],
+                                     survivors[p + 1].group[0])
+        if crossing:
+            nbytes = sum(table.layers[l].param_bytes for l in crossing)
+            moves.append(BoundaryMove(p, min(crossing), max(crossing) + 1,
+                                      nbytes, link_bw))
+            migration = max(migration, nbytes / link_bw)   # concurrent
 
-    # 4) restore the failed device's weights from its backup node
+    # 5) restore a fully-failed single-device stage's weights from its
+    #    backup node *directly to their new owners*, over the actual backup
+    #    links (concurrent pushes; a push to the backup holder's own new
+    #    stage is local and free).
     assign = assign_backups(plan, profile)
     restore = 0.0
-    for p, st in enumerate(plan.stages):
+    for q, st in enumerate(stages):
         if failed_rank in st.group and len(st.group) == 1:
-            restore = table.param_bytes(*st.layers) / profile.cluster.bandwidth
+            backup_rank = assign.backup_of_stage.get(q)
+            if backup_rank is None:
+                continue
+            for p in range(P):
+                lo = max(st.layers[0], cuts[p])
+                hi = min(st.layers[1], cuts[p + 1])
+                if lo >= hi or backup_rank in survivors[p].group:
+                    continue
+                nbytes = table.param_bytes(lo, hi)
+                bw = profile.cluster.bw(backup_rank, survivors[p].group[0])
+                restore = max(restore, nbytes / bw)
 
-    # 5) build the new plan (re-run Algorithm 1 within each stage)
+    # 6) build the new plan (re-run Algorithm 1 within each stage)
     new_stages = []
     steps: list[Step] = []
     for p in range(P):
@@ -177,18 +341,20 @@ def lightweight_replay(plan: Plan, profile: Profile, failed_rank: int,
     lat = round_latency(tuple(steps), plan.n_micro)
     new_plan = Plan(plan.arch, tuple(new_stages), tuple(steps), mb,
                     plan.n_micro, lat, "replay")
-    replan_s = _time.perf_counter() - t0
+    replan_s = time.perf_counter() - t0
     return RecoveryReport(detection_latency(fail_time), replan_s, migration,
-                          restore, new_plan, "lightweight")
+                          restore, new_plan, "lightweight", tuple(moves))
 
 
 def heavy_rescheduling(plan: Plan, profile: Profile, failed_rank: int,
                        fail_time: float = 10.0,
-                       replan_compute_scale: float = 1.0) -> RecoveryReport:
+                       replan_compute_scale: float = JETSON_REPLAN_SCALE,
+                       allowed_stages=None) -> RecoveryReport:
     """Straw-man baseline: aggregate stage models to the coordinator, re-run
-    Algorithm 2 from scratch, redistribute all weights."""
-    import numpy as np
+    Algorithm 2 from scratch, redistribute all weights.
 
+    ``allowed_stages`` restricts the re-planned stage count (e.g. divisors
+    of a runtime mesh's model axis, so the result stays lowerable)."""
     from .hardware import Cluster
 
     table = profile.table
@@ -201,11 +367,20 @@ def heavy_rescheduling(plan: Plan, profile: Profile, failed_rank: int,
     devs = [d for i, d in enumerate(profile.cluster.devices) if i != failed_rank]
     sub_cluster = Cluster(tuple(devs), profile.cluster.bandwidth)
     sub_profile = Profile.analytic(table, sub_cluster, profile.max_batch)
-    import time as _time
-    t0 = _time.perf_counter()
+    t0 = time.perf_counter()
     new_plan = plan_hpp(sub_profile, plan.global_batch, plan.micro_batch,
-                        arch=plan.arch)
-    replan = (_time.perf_counter() - t0) * replan_compute_scale
+                        arch=plan.arch, allowed_stages=allowed_stages)
+    replan = (time.perf_counter() - t0) * replan_compute_scale
+
+    # sub-cluster ranks -> the original cluster's rank space, so the new
+    # plan stays addressable by the same device identities as the old one
+    remap = {i: r for i, r in enumerate(
+        r for r in range(len(profile.cluster.devices)) if r != failed_rank)}
+    stages = tuple(dataclasses.replace(st, group=tuple(remap[g] for g in st.group))
+                   for st in new_plan.stages)
+    steps = tuple(dataclasses.replace(s, group=tuple(remap[g] for g in s.group))
+                  if s.group else s for s in new_plan.steps)
+    new_plan = dataclasses.replace(new_plan, stages=stages, steps=steps)
 
     # 3) redistribute all stage weights
     redistribute = sum(table.param_bytes(*st.layers) for st in new_plan.stages) / bw

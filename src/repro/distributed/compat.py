@@ -141,8 +141,42 @@ def _patch_04x_transpose() -> None:
     ad.primitive_transposes[_sm.shard_map_p] = fixed_transpose
 
 
+def _patch_04x_scan_check() -> None:
+    """Fix jax 0.4.x's ``_scan_check`` rejecting literal scan-carry inits.
+
+    In the 0.4.x replication *checker* a trace-time constant reads as rep
+    ``None``, and ``_scan_check`` compares carry reps with strict equality —
+    so a literal carry init (e.g. the pipeline's ``0.0`` aux accumulator)
+    mismatches the body's computed rep even though the *rewrite* machinery
+    (which decides where pbroadcasts are actually needed) already treats
+    ``None`` as fully replicated.  Normalize exactly as the rewrite does —
+    the behavior of the >= 0.5 vma implementation, where constants are
+    replicated by construction.  Surfaced by single-stage (P=1) pipelines,
+    whose carries stay constant up to the scan.
+    """
+    import jax.experimental.shard_map as _sm
+    from jax._src.lax.control_flow import loops
+    from jax._src.util import split_list
+
+    def fixed_scan_check(mesh, *in_rep, jaxpr, num_consts, num_carry, **_):
+        full = set(mesh.axis_names)
+        in_rep = [full if r is None else r for r in in_rep]
+        _, carry_rep_in, _ = split_list(in_rep, [num_consts, num_carry])
+        out_rep = _sm._check_rep(mesh, jaxpr.jaxpr, in_rep)
+        carry_rep_out, _ = split_list(
+            [full if r is None else r for r in out_rep], [num_carry])
+        if carry_rep_in != carry_rep_out:
+            raise Exception(
+                "Scan carry input and output got mismatched replication "
+                f"types {carry_rep_in} and {carry_rep_out}.")
+        return out_rep
+
+    _sm._check_rules[loops.scan_p] = fixed_scan_check
+
+
 if not HAS_NATIVE_SHARD_MAP:
     _patch_04x_transpose()
+    _patch_04x_scan_check()
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

@@ -150,6 +150,93 @@ def run_arch_planned(arch: str, devices) -> float:
     return diff
 
 
+def run_replay(arch: str, devices) -> float:
+    """Live pipeline replay (§3.4) end-to-end on the real runtime.
+
+    Plan -> session -> train -> kill a rank mid-training -> lightweight
+    replay -> keep training.  Asserts: untouched periods bit-identical
+    across the migration, runtime boundary bytes reconcile exactly with the
+    analytical RecoveryReport, the re-lowered step matches a
+    fresh-from-scratch lowering of the new plan on identical params, and
+    the loss keeps improving after recovery."""
+    import numpy as _np
+
+    from repro.configs import get_smoke_config
+    from repro.core.hardware import env_d
+    from repro.core.lowering import period_positions as positions
+    from repro.core.planner import plan_hpp
+    from repro.core.profiler import LayerTable, Profile
+    from repro.data import SyntheticLM, shard_batch
+    from repro.runtime.session import PipelineSession
+    from repro.runtime.train import build_train_step_from_lowered
+
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    cfg = cfg.replace(n_layers=8 * len(cfg.pattern))   # 8 periods
+    B, S = 8, 64
+    mesh = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    table = LayerTable.from_model_config(cfg, S)
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=B)
+    plan = plan_hpp(prof, B, micro_batch=2, arch=arch, allowed_stages={2})
+
+    session = PipelineSession(cfg, mesh, plan, prof, backup_every=2)
+    session.init(jax.random.PRNGKey(0))
+    ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len)
+    losses = [session.step(ds.batch(s, B))[0] for s in range(4)]
+
+    old_pos = positions(session.lowered)
+    pre = [_np.asarray(jax.device_get(x))
+           for x in jax.tree.leaves(session.params["periods"])]
+
+    # fail a member of the multi-device stage: the stage survives with its
+    # DP peers, so the recovery is a pure lightweight migration
+    st = max(session.plan.stages, key=lambda s: len(s.group))
+    assert len(st.group) > 1, session.plan.stages
+    session.fail(st.group[-1])
+    out = session.recover_now()
+    assert out.mode == "lightweight", out.mode
+
+    # 1) runtime boundary bytes == analytical migration inputs (exact)
+    assert out.reconciliation is not None
+    for rec in out.reconciliation.values():
+        assert rec["table_bytes"] == rec["analytic_bytes"], rec
+
+    # 2) untouched periods bit-identical across the arrangement swap
+    new_pos = positions(session.lowered)
+    post = [_np.asarray(jax.device_get(x))
+            for x in jax.tree.leaves(session.params["periods"])]
+    touched = set(out.migration.moved_periods) | set(out.restored_periods)
+    for t in range(session.lowered.n_periods):
+        if t in touched:
+            continue
+        for a, b in zip(pre, post):
+            assert _np.array_equal(a[old_pos[t]], b[new_pos[t]]), t
+
+    # 3) the session's re-lowered step == a fresh lowering of the new plan
+    #    on identical params
+    fresh = build_train_step_from_lowered(cfg, mesh, session.lowered)
+    batch_np = ds.batch(100, B)
+    batch = shard_batch(batch_np, session.ts.mesh, session.ts.batch_specs)
+    l_sess, m_sess = session.ts.loss_fn(session.params, batch)
+    l_fresh, m_fresh = fresh.loss_fn(session.params, batch)
+    d_fresh = abs(float(l_sess) - float(l_fresh))
+    assert d_fresh < 1e-6, (float(l_sess), float(l_fresh))
+
+    # 4) training keeps improving on the replayed pipeline
+    losses += [session.step(ds.batch(s, B))[0] for s in range(4, 12)]
+    ok = losses[-1] < losses[0]
+    print(f"{arch:26s} [replay] moved={out.migration.moved_periods} "
+          f"stages {len(plan.stages)}->{session.lowered.stage} "
+          f"fresh-lowering diff={d_fresh:.1e} loss {losses[0]:.4f}->"
+          f"{losses[-1]:.4f} {'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch}: loss did not improve after replay "
+                         f"({losses})")
+    return d_fresh
+
+
 def run_serve(arch: str, devices, seq_shard: bool = False, stage=None) -> float:
     """Distributed serve_step vs single-device decode logits parity."""
     from repro.configs import get_smoke_config
@@ -200,6 +287,7 @@ def main():
     serve = "--serve" in sys.argv
     seq_shard = "--seq-shard" in sys.argv
     planned = "--plan" in sys.argv
+    replay = "--replay" in sys.argv
     archs = args or DEFAULT_ARCHS
     devices = jax.devices()
     assert len(devices) >= 8, "needs 8 host devices"
@@ -208,6 +296,8 @@ def main():
             run_serve(arch, devices[:8], seq_shard=seq_shard)
         elif planned:
             run_arch_planned(arch, devices[:8])
+        elif replay:
+            run_replay(arch, devices[:8])
         else:
             run_arch(arch, devices[:8])
     print("ALL OK")

@@ -54,7 +54,18 @@ def main():
                          "Asteroid planner (Algorithm 2) and lower it")
     ap.add_argument("--env", default="D", choices=list("ABCD"),
                     help="edge environment profiled for --plan")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="kill a rank before this step and recover through "
+                         "the live replay session (requires --plan)")
+    ap.add_argument("--fail-rank", type=int, default=None,
+                    help="edge-cluster rank to kill (default: last stage's "
+                         "lead device)")
+    ap.add_argument("--backup-every", type=int, default=5,
+                    help="stage-replication cadence in steps (with --fail-at)")
     args = ap.parse_args()
+    if args.fail_at is not None and not args.plan:
+        raise SystemExit("--fail-at requires --plan (the replay session "
+                         "recovers by re-lowering a planner Plan)")
 
     from repro import checkpoint
     from repro.configs import get_config, get_smoke_config
@@ -106,6 +117,15 @@ def main():
             mb = args.global_batch // m
         plan = plan_hpp(prof, args.global_batch, mb, arch=cfg.name,
                         allowed_stages=divisors)
+        if args.fail_at is not None:
+            from repro.runtime.session import PipelineSession
+            session = PipelineSession(cfg, mesh, plan, prof, optimizer=opt,
+                                      backup_every=args.backup_every)
+            lowered = session.lowered
+            print(f"asteroid plan: {lowered.stage} stages periods="
+                  f"{lowered.stage_periods} M={lowered.n_micro} "
+                  f"K_p={lowered.warmup} predicted latency {plan.latency:.3f}s")
+            return _run_session(session, cfg, args)
         ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt)
         print(f"asteroid plan: {lowered.stage} stages periods="
               f"{lowered.stage_periods} M={lowered.n_micro} "
@@ -138,6 +158,51 @@ def main():
         print(f"checkpoint saved to {args.checkpoint_dir}")
     print("done")
     return float(loss)
+
+
+def _run_session(session, cfg, args) -> float:
+    """Drive a live replay session: train, kill a rank, keep training."""
+    import time
+
+    from repro.data import SyntheticLM
+    from repro.models.frontend import frontend_dim
+
+    key = jax.random.PRNGKey(0)
+    session.init(key)
+    ds = SyntheticLM(cfg.vocab_size, args.seq, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    loss = float("nan")
+    seen_recoveries = 0
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        if step == args.fail_at:
+            rank = args.fail_rank
+            if rank is None:
+                rank = session.plan.stages[-1].group[0]
+            print(f"step {step}: killing rank {rank}")
+            session.fail(rank)
+        loss, metrics = session.step(ds.batch(step, args.global_batch))
+        if len(session.recoveries) > seen_recoveries:
+            seen_recoveries = len(session.recoveries)
+            out = session.recoveries[-1]
+            rep = out.report
+            print(f"  recovered ({out.mode}): detect {rep.detection_s:.2f}s "
+                  f"replan {rep.replan_s * 1e3:.1f}ms migrate "
+                  f"{rep.migration_s:.2f}s restore {rep.restore_s:.2f}s | "
+                  f"moved periods {out.migration.moved_periods} restored "
+                  f"{out.restored_periods} | new stages "
+                  f"{[(st.layers, st.group) for st in session.plan.stages]}")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tput = args.global_batch * args.seq * (step + 1) / dt
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"ce {float(metrics['ce']):.4f} tok/s {tput:,.0f}")
+    if args.checkpoint_dir:
+        from repro import checkpoint
+        checkpoint.save(args.checkpoint_dir, "final", session.params)
+        print(f"checkpoint saved to {args.checkpoint_dir}")
+    print("done")
+    return loss
 
 
 if __name__ == "__main__":

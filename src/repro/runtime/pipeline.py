@@ -149,13 +149,10 @@ def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
     """
     M = x_micro.shape[0]
     P_st = n_stages
-    if P_st == 1:
-        def one(mb_x):
-            return _stage_fn(periods_local, period_mask_local, mb_x, positions,
-                             cfg_local, ctx, remat)
-        outs, auxs = lax.map(one, x_micro)
-        return outs, auxs.sum()
-
+    # P_st == 1 runs the same tick scan (M ticks, identity ppermute): a
+    # dedicated lax.map fast path trips jax 0.4.x's scan replication
+    # checker (its carry-less scan infers mismatched reps), and a single
+    # stage is exactly the degenerate case of the circular pipeline.
     stage = lax.axis_index("stage")
     perm = [(i, (i + 1) % P_st) for i in range(P_st)]
 

@@ -1,0 +1,374 @@
+"""Live pipeline replay: a session layer over the lowered runtime (§3.4).
+
+``PipelineSession`` makes a running pipeline a first-class, re-lowerable
+object.  It owns the full chain
+
+    Plan -> LoweredPlan -> TrainStep -> (params, opt_state)
+
+and keeps training through a device failure without restarting:
+
+1. every ``step()`` advances a simulated cluster clock and feeds heartbeats
+   to a ``core.replay.ReplayCoordinator``;
+2. on a failure (``fail(rank)``), the coordinator walks its state machine
+   (missed heartbeat -> probe -> confirm) and then drives this session as
+   its executor: ``replan`` (lightweight layer-wise replay, falling back to
+   heavy rescheduling when the survivor stage count is not mesh-feasible),
+   ``migrate`` (pure ``core.lowering.migrate_params`` index migration of
+   the stacked period params *and* the optimizer moments, plus restore of
+   the failed stage from its ``StageBackupStore`` replica), ``resume``
+   (re-jitted step on the re-lowered plan);
+3. single-device stages push period-row backups to their topology-assigned
+   backup node on a step cadence, so a fully-failed stage is recoverable.
+
+Across a swap the *weights are dynamic* (migrated / restored, bit-identical
+where untouched) while the *step is static* (recompiled for the new stage
+split); ``reconcile_migration`` asserts the bytes the migration moved match
+the analytical ``RecoveryReport`` the planner-side replay predicted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+
+from repro.checkpoint import StageBackupStore
+from repro.core.allocation import AllocationError
+from repro.core.lowering import (LoweredPlan, LoweringError, MigrationReport,
+                                 check_against_simulator, lower_plan,
+                                 migrate_opt_state, migrate_params,
+                                 period_owner, period_positions,
+                                 reconcile_migration, relower, snap_plan)
+from repro.core.planner import Plan
+from repro.core.profiler import Profile
+from repro.core.replay import (RecoveryReport, ReplayCoordinator,
+                               assign_backups, heavy_rescheduling,
+                               lightweight_replay)
+from repro.data import shard_batch
+from repro.distributed.sharding import named
+from repro.models.config import ModelConfig
+from repro.optim import AdamW, AdamWState, SGDState
+
+from .train import (_opt_shardings, build_train_step_from_lowered,
+                    init_train_state, pad_vocab_leaf, pad_vocab_params,
+                    strip_vocab_leaf, vocab_axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryOutcome:
+    """Everything one recovery produced, for inspection and assertions."""
+
+    report: RecoveryReport              # analytical timings + new plan
+    migration: MigrationReport          # what migrate_params actually moved
+    reconciliation: dict | None         # per-boundary byte agreement
+    restored_stage: int | None          # old stage restored from backup
+    restored_periods: tuple[int, ...]   # canonical periods it covered
+    mode: str                           # "lightweight" | "heavy"
+    detection_observed_s: float         # coordinator wall vs report.detection_s
+    missing_backup_stages: tuple[int, ...] = ()   # lost with no replica yet
+
+
+def _repad_vocab(tree: dict, cfg: ModelConfig, new_tp: int) -> dict:
+    """Strip the old tp's vocab padding from embed/head and re-pad for
+    ``new_tp`` (a stage-count change on a fixed model axis changes tp)."""
+    axes = vocab_axes(cfg)
+    out = dict(tree)
+    out["embed"] = strip_vocab_leaf(out["embed"], axes["embed"], cfg)
+    if "head" in out:
+        out["head"] = strip_vocab_leaf(out["head"], axes["head"], cfg)
+    return pad_vocab_params(out, cfg, new_tp)
+
+
+def _repad_opt(opt_state, cfg: ModelConfig, new_tp: int):
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(opt_state.step, _repad_vocab(opt_state.m, cfg, new_tp),
+                          _repad_vocab(opt_state.v, cfg, new_tp))
+    if isinstance(opt_state, SGDState):
+        return SGDState(opt_state.step, _repad_vocab(opt_state.mom, cfg, new_tp))
+    raise TypeError(type(opt_state))
+
+
+class PipelineSession:
+    """A re-lowerable training pipeline with live failure recovery."""
+
+    def __init__(self, cfg: ModelConfig, production_mesh, plan: Plan,
+                 profile: Profile, *, optimizer: AdamW | None = None,
+                 backup_every: int = 5, check: bool = True, **spec_kw):
+        self.cfg = cfg
+        self.production_mesh = production_mesh
+        self.profile = profile
+        self.optimizer = optimizer or AdamW(lr=1e-3)
+        self.backup_every = backup_every
+        self.spec_kw = spec_kw
+        self.model_axis = production_mesh.shape["model"]
+
+        lowered = lower_plan(plan, cfg, self.model_axis)
+        if check:
+            check_against_simulator(lowered, plan, profile)
+        self._install(plan, lowered)
+
+        self.store = StageBackupStore()
+        self.params = None
+        self.opt_state = None
+        self.step_count = 0
+        self.clock = 0.0
+        self._failed: set[int] = set()
+        self._pending_failure: int | None = None
+        self.coordinator = ReplayCoordinator(sorted(
+            d for st in self.plan.stages for d in st.group))
+        self.recoveries: list[RecoveryOutcome] = []
+        # recovery-in-flight scratch (set by replan, read by migrate)
+        self._recovering_rank: int | None = None
+        self._next_lowered: LoweredPlan | None = None
+        self._next_mode = ""
+        self._detect_wall = 0.0
+
+    # -- installation ------------------------------------------------------
+
+    def _install(self, plan: Plan, lowered: LoweredPlan) -> None:
+        self.lowered = lowered
+        # the deployed plan owns the *snapped* layer ranges — replaying from
+        # it keeps the analytical old-ownership aligned with the runtime
+        self.plan = snap_plan(plan, lowered, self.profile.table.L)
+        self.ts = build_train_step_from_lowered(
+            self.cfg, self.production_mesh, lowered,
+            optimizer=self.optimizer, **self.spec_kw)
+
+    def init(self, key):
+        self.params, self.opt_state = init_train_state(key, self.ts,
+                                                       self.optimizer)
+        return self.params
+
+    # -- training loop -----------------------------------------------------
+
+    @property
+    def live_ranks(self) -> tuple[int, ...]:
+        return tuple(sorted(d for st in self.plan.stages for d in st.group
+                            if d not in self._failed))
+
+    def step(self, batch_np: dict):
+        """One training step (recovering first if a failure is pending)."""
+        if self._pending_failure is not None:
+            self.recover_now()
+        batch = shard_batch(batch_np, self.ts.mesh, self.ts.batch_specs)
+        self.params, self.opt_state, loss, metrics = self.ts.step_fn(
+            self.params, self.opt_state, batch)
+        self.step_count += 1
+        self.clock += max(self.plan.latency, self.coordinator.heartbeat_period)
+        for r in self.live_ranks:
+            self.coordinator.heartbeat(r, self.clock)
+        if self.backup_every and self.step_count % self.backup_every == 0:
+            self.backup_now()
+        return float(loss), metrics
+
+    # -- replication -------------------------------------------------------
+
+    def backup_now(self) -> None:
+        """Push single-device stages' canonical period rows — plus the
+        embed/head-side leaves the first/last stage own — to their
+        topology-assigned backup nodes (DP peers replicate the rest)."""
+        assign = assign_backups(self.plan, self.profile)
+        k = self.lowered.k_per_stage
+        for p, backup_rank in assign.backup_of_stage.items():
+            i, j = self.lowered.stage_periods[p]
+            rows = jax.tree.map(lambda x: x[p * k:p * k + (j - i)],
+                                self.params["periods"])
+            self.store.backup(p, {"rows": rows, "extras": self._edge_extras(p)},
+                              meta={"periods": (i, j),
+                                    "step": self.step_count,
+                                    "backup_rank": backup_rank})
+
+    def _edge_extras(self, p: int) -> dict:
+        """Non-period leaves owned by an edge stage: the embedding side for
+        stage 0, the head side for the last stage — the analytic layer
+        table charges their bytes to those stages' checkpoint/restore
+        traffic.  Vocab padding is stripped so a restore can re-pad for
+        whatever tp the post-replay mesh uses."""
+        cfg = self.cfg
+        axes = vocab_axes(cfg)
+        out: dict = {}
+        if p == 0:
+            out["embed"] = strip_vocab_leaf(self.params["embed"],
+                                            axes["embed"], cfg)
+            if "prefix_proj" in self.params:
+                out["prefix_proj"] = self.params["prefix_proj"]
+        if p == len(self.plan.stages) - 1:
+            if "head" in self.params:
+                out["head"] = strip_vocab_leaf(self.params["head"],
+                                               axes["head"], cfg)
+            out["final_norm"] = self.params["final_norm"]
+            if "mtp" in self.params:
+                out["mtp"] = self.params["mtp"]
+        return out
+
+    # -- failure injection + recovery --------------------------------------
+
+    def fail(self, rank: int) -> None:
+        """Simulate ``rank`` dying: its heartbeats stop; the next ``step()``
+        (or ``recover_now()``) detects and recovers through the replay."""
+        if rank not in self.live_ranks:
+            raise ValueError(f"rank {rank} is not a live device "
+                             f"({self.live_ranks})")
+        self._failed.add(rank)
+        self._pending_failure = rank
+
+    def recover_now(self) -> RecoveryOutcome:
+        failed = self._pending_failure
+        if failed is None:
+            raise RuntimeError("no pending failure")
+        self._pending_failure = None
+        self._fail_time = self.clock
+        # advance the simulated clock: survivors keep heartbeating, the
+        # failed rank is silent, the coordinator probes and confirms
+        t = self.clock
+        confirmed = None
+        while confirmed is None:
+            t += self.coordinator.heartbeat_period
+            for r in self.live_ranks:
+                self.coordinator.heartbeat(r, t)
+            confirmed = self.coordinator.poll(t)
+        assert confirmed == failed, (confirmed, failed)
+        self._detect_wall = t - self._fail_time
+        self._recovering_rank = failed
+        _, outcome = self.coordinator.run_recovery(failed, self, now=t)
+        self.clock = self.coordinator.events[-1][1]
+        self._recovering_rank = None
+        self.recoveries.append(outcome)
+        return outcome
+
+    # -- ReplayCoordinator executor protocol -------------------------------
+
+    def replan(self, failed_rank: int) -> RecoveryReport:
+        quantum = len(self.cfg.pattern)
+        try:
+            rep = lightweight_replay(self.plan, self.profile, failed_rank,
+                                     fail_time=self._fail_time,
+                                     layer_quantum=quantum)
+            self._next_lowered = relower(self.lowered, rep.new_plan, self.cfg,
+                                         self.model_axis)
+            self._next_mode = "lightweight"
+            return rep
+        except (LoweringError, AllocationError):
+            # survivor stage count not mesh-feasible (or infeasible alloc):
+            # heavy rescheduling restricted to lowerable stage counts
+            divisors = {d for d in range(1, self.model_axis + 1)
+                        if self.model_axis % d == 0
+                        and d <= self.lowered.n_periods}
+            rep = heavy_rescheduling(self.plan, self.profile, failed_rank,
+                                     fail_time=self._fail_time,
+                                     allowed_stages=divisors)
+            self._next_lowered = relower(self.lowered, rep.new_plan, self.cfg,
+                                         self.model_axis)
+            self._next_mode = "heavy"
+            return rep
+
+    def migrate(self, report: RecoveryReport) -> RecoveryOutcome:
+        old_lp, new_lp = self.lowered, self._next_lowered
+        failed = self._recovering_rank
+        old_owner = self._device_owner(failed, report.new_plan, new_lp)
+        new_params, mig = migrate_params(self.params, old_lp, new_lp,
+                                         old_owner=old_owner)
+        new_opt = migrate_opt_state(self.opt_state, old_lp, new_lp)
+
+        old_tp = self.ts.spec.plan.tp
+        new_tp = self.model_axis // new_lp.stage
+        if new_tp != old_tp:
+            new_params = _repad_vocab(new_params, self.cfg, new_tp)
+            new_opt = _repad_opt(new_opt, self.cfg, new_tp)
+
+        # a fully-failed single-device stage: overwrite its (physically
+        # lost) period rows with the backup replica, stale by < backup_every
+        restored_stage = None
+        restored_periods: tuple[int, ...] = ()
+        missing: list[int] = []
+        for q, st in enumerate(self.plan.stages):
+            if failed in st.group and len(st.group) == 1:
+                if self.store.has(q):
+                    new_params, restored_periods = self._restore_stage(
+                        new_params, q, new_lp)
+                    restored_stage = q
+                else:
+                    missing.append(q)
+        if missing:
+            warnings.warn(
+                f"stage(s) {missing} failed before any backup was pushed: "
+                "no replica to restore from — continuing with the "
+                "in-process values (on real hardware this state would be "
+                "lost; lower backup_every or call backup_now() earlier)")
+
+        reconciliation = None
+        if self._next_mode == "lightweight":
+            reconciliation = reconcile_migration(
+                mig, report, new_lp, self.profile.table, len(self.cfg.pattern))
+
+        # swap in the re-lowered runtime, re-sharding the migrated state
+        self._install(report.new_plan, new_lp)
+        shardings = named(self.ts.mesh, self.ts.param_specs)
+        self.params = jax.device_put(new_params, shardings)
+        opt_sh = _opt_shardings(self.optimizer,
+                                jax.eval_shape(lambda: new_params), shardings)
+        self.opt_state = jax.device_put(new_opt, opt_sh)
+        # backups are keyed by the old stage split — re-seed on new topology
+        for q in range(len(old_lp.stage_periods)):
+            self.store.drop(q)
+        return RecoveryOutcome(report, mig, reconciliation, restored_stage,
+                               restored_periods, self._next_mode,
+                               self._detect_wall, tuple(missing))
+
+    def resume(self, report: RecoveryReport, outcome: RecoveryOutcome) -> None:
+        if self.backup_every:
+            self.backup_now()
+
+    # -- helpers -----------------------------------------------------------
+
+    def _device_owner(self, failed_rank: int, new_plan: Plan,
+                      new_lp: LoweredPlan):
+        """Per-canonical-period owner in NEW-plan stage coordinates, by
+        *device identity*: a period is already resident on its new owner
+        stage when some surviving device of its old stage belongs to that
+        stage's new group; otherwise its owner is the new stage holding a
+        surviving old holder.  ``None`` marks a fully-failed stage's
+        periods (restored from backup, not migrated).  For a lightweight
+        replay (survivors keep their order) this reduces to the survivor
+        index map that the analytical boundary accounting uses; for the
+        heavy fallback it keeps moved/resident reporting truthful across a
+        stage-count change."""
+        new_of_rank = {d: p for p, st in enumerate(new_plan.stages)
+                       for d in st.group}
+        new_own = period_owner(new_lp)
+        owner: list[int | None] = []
+        for q, (i, j) in enumerate(self.lowered.stage_periods):
+            holders = [d for d in self.plan.stages[q].group
+                       if d != failed_rank]
+            for t in range(i, j):
+                if any(d in new_plan.stages[new_own[t]].group
+                       for d in holders):
+                    owner.append(new_own[t])     # already resident
+                elif holders:
+                    owner.append(new_of_rank.get(holders[0]))
+                else:
+                    owner.append(None)           # whole stage lost
+        return owner
+
+    def _restore_stage(self, tree: dict, q: int, new_lp: LoweredPlan):
+        snap = self.store.restore(q)
+        rows, extras = snap["rows"], snap["extras"]
+        i, j = self.store.meta(q)["periods"]
+        pos = period_positions(new_lp)
+
+        def scatter(dest, src):
+            for t in range(i, j):
+                dest = dest.at[pos[t]].set(src[t - i].astype(dest.dtype))
+            return dest
+
+        out = dict(tree)
+        out["periods"] = jax.tree.map(scatter, tree["periods"], rows)
+        new_tp = self.model_axis // new_lp.stage
+        axes = vocab_axes(self.cfg)
+        for key, leaf in extras.items():
+            if key in axes:
+                out[key] = pad_vocab_leaf(leaf, axes[key], self.cfg, new_tp)
+            else:
+                out[key] = leaf
+        return out, tuple(range(i, j))

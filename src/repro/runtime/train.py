@@ -30,22 +30,37 @@ from .pipeline import (TrainSpec, arrange_periods, batch_pspecs, pad_periods,
                        spmd_loss_fn)
 
 
-def pad_vocab_params(params, cfg: ModelConfig, tp: int):
-    """Pad embed/head vocab dims to a multiple of tp (CE masks the pad)."""
+def vocab_axes(cfg: ModelConfig) -> dict:
+    """Axis carrying the vocab dimension in each vocab-parallel leaf."""
+    return {"embed": 0 if cfg.n_codebooks == 1 else 1,
+            "head": 1 if cfg.n_codebooks == 1 else 2}
+
+
+def pad_vocab_leaf(a, axis: int, cfg: ModelConfig, tp: int):
+    """Zero-pad one leaf's vocab dim to a multiple of tp."""
     v = cfg.vocab_size
     v_pad = -(-v // tp) * tp - v
     if v_pad == 0:
-        return params
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, v_pad)
+    return jnp.pad(a, widths)
+
+
+def strip_vocab_leaf(a, axis: int, cfg: ModelConfig):
+    """Inverse of ``pad_vocab_leaf``: slice back to the true vocab size."""
+    sl = [slice(None)] * a.ndim
+    sl[axis] = slice(0, cfg.vocab_size)
+    return a[tuple(sl)]
+
+
+def pad_vocab_params(params, cfg: ModelConfig, tp: int):
+    """Pad embed/head vocab dims to a multiple of tp (CE masks the pad)."""
+    axes = vocab_axes(cfg)
     out = dict(params)
-
-    def pad(a, axis):
-        widths = [(0, 0)] * a.ndim
-        widths[axis] = (0, v_pad)
-        return jnp.pad(a, widths)
-
-    out["embed"] = pad(params["embed"], 0 if cfg.n_codebooks == 1 else 1)
+    out["embed"] = pad_vocab_leaf(params["embed"], axes["embed"], cfg, tp)
     if "head" in params:
-        out["head"] = pad(params["head"], 1 if cfg.n_codebooks == 1 else 2)
+        out["head"] = pad_vocab_leaf(params["head"], axes["head"], cfg, tp)
     return out
 
 
@@ -91,6 +106,24 @@ class TrainStep:
     loss_fn: object                 # jitted (params, batch) -> (loss, metrics)
 
 
+def _check_stage_periods(stage_periods, plan: MeshPlan, cfg: ModelConfig):
+    stage_periods = tuple(tuple(r) for r in stage_periods)
+    if len(stage_periods) != plan.stage:
+        raise ValueError(f"stage_periods {stage_periods} has "
+                         f"{len(stage_periods)} ranges for {plan.stage} stages")
+    prev = 0
+    for i, j in stage_periods:
+        if i != prev or j <= i:
+            raise ValueError(f"stage_periods {stage_periods} must be "
+                             f"contiguous non-empty ranges from 0")
+        prev = j
+    if prev != cfg.n_periods:
+        raise ValueError(f"stage_periods {stage_periods} covers "
+                         f"[0, {prev}) but the model has "
+                         f"{cfg.n_periods} periods")
+    return stage_periods
+
+
 def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      global_batch: int, *, stage: int | None = None,
                      n_micro: int | None = None, optimizer: AdamW | None = None,
@@ -103,28 +136,59 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
     if stage is None:
         stage = pick_stage_count(cfg.n_layers, len(cfg.pattern), model_axis,
                                  n_heads)
-    mesh = refine_mesh(production_mesh, stage)
     plan = mesh_plan(production_mesh, stage)
     if n_micro is None:
         n_micro = default_n_micro(cfg, plan, global_batch)
     if stage_periods is not None:
-        stage_periods = tuple(tuple(r) for r in stage_periods)
-        if len(stage_periods) != plan.stage:
-            raise ValueError(f"stage_periods {stage_periods} has "
-                             f"{len(stage_periods)} ranges for {plan.stage} stages")
-        prev = 0
-        for i, j in stage_periods:
-            if i != prev or j <= i:
-                raise ValueError(f"stage_periods {stage_periods} must be "
-                                 f"contiguous non-empty ranges from 0")
-            prev = j
-        if prev != cfg.n_periods:
-            raise ValueError(f"stage_periods {stage_periods} covers "
-                             f"[0, {prev}) but the model has "
-                             f"{cfg.n_periods} periods")
+        stage_periods = _check_stage_periods(stage_periods, plan, cfg)
     spec = TrainSpec(cfg=cfg, plan=plan, n_micro=n_micro, remat=remat,
                      ce_chunk=ce_chunk, hoist_varying=hoist_varying,
                      stage_periods=stage_periods)
+    return _assemble_train_step(cfg, production_mesh, spec, optimizer,
+                                zero_opt)
+
+
+def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
+                            *, remat: bool = True, ce_chunk: int = 1024,
+                            hoist_varying: bool = True) -> TrainSpec:
+    """Derive the static step configuration from a ``core.lowering``
+    ``LoweredPlan`` (duck-typed: ``stage``/``n_micro``/``stage_periods``/
+    ``global_batch`` attributes), validating mesh feasibility."""
+    model_axis = production_mesh.shape["model"]
+    if model_axis % lowered.stage:
+        raise ValueError(f"stage count {lowered.stage} does not divide the "
+                         f"mesh model axis {model_axis}")
+    plan = mesh_plan(production_mesh, lowered.stage)
+    dp = plan.dp_shards
+    if (lowered.global_batch % dp
+            or (lowered.global_batch // dp) % lowered.n_micro):
+        raise ValueError(
+            f"global batch {lowered.global_batch} not divisible into "
+            f"{lowered.n_micro} micro-batches per {dp} data shards")
+    stage_periods = _check_stage_periods(lowered.stage_periods, plan, cfg)
+    return TrainSpec(cfg=cfg, plan=plan, n_micro=lowered.n_micro, remat=remat,
+                     ce_chunk=ce_chunk, hoist_varying=hoist_varying,
+                     stage_periods=stage_periods)
+
+
+def build_train_step_from_lowered(cfg: ModelConfig, production_mesh: Mesh,
+                                  lowered, *, optimizer: AdamW | None = None,
+                                  zero_opt: bool = False,
+                                  **spec_kw) -> TrainStep:
+    """Build (or, after a plan swap, re-build) the jitted step for a
+    ``LoweredPlan`` — the session layer's entry point: params and optimizer
+    state survive across calls, only the compiled step is replaced."""
+    spec = train_spec_from_lowered(cfg, production_mesh, lowered, **spec_kw)
+    return _assemble_train_step(cfg, production_mesh, spec, optimizer,
+                                zero_opt)
+
+
+def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
+                         spec: TrainSpec, optimizer: AdamW | None,
+                         zero_opt: bool) -> TrainStep:
+    plan = spec.plan
+    stage_periods = spec.stage_periods
+    mesh = refine_mesh(production_mesh, plan.stage)
     optimizer = optimizer or AdamW(lr=1e-3)
 
     # --- specs (built against an abstract param tree) ----------------------

@@ -48,6 +48,15 @@ def test_train_planned_lowering():
 
 
 @pytest.mark.slow
+def test_replay_session():
+    """Live pipeline replay (runtime.session): kill a rank mid-training,
+    recover through lightweight replay + param migration, keep training —
+    untouched periods bit-identical, boundary bytes reconcile with the
+    analytical RecoveryReport, re-lowered step == fresh lowering."""
+    _run(["--replay", "phi3-mini-3.8b"])
+
+
+@pytest.mark.slow
 def test_serve_parity():
     _run(["--serve", "phi3-mini-3.8b", "gemma-2b"])
 

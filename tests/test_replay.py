@@ -2,8 +2,9 @@
 
 import pytest
 
-from repro.core.hardware import env_c, env_d
-from repro.core.planner import plan_hpp
+from repro.core.costmodel import kp_policy
+from repro.core.hardware import JETSON_NX, Cluster, env_c, env_d
+from repro.core.planner import Plan, StagePlan, plan_hpp
 from repro.core.profiler import LayerTable, Profile
 from repro.core.replay import (assign_backups, detection_latency,
                                heavy_rescheduling, lightweight_replay)
@@ -73,3 +74,96 @@ def test_replay_any_stage(setup, fail_stage):
     rep = lightweight_replay(plan, profile, fail)
     assert rep.total_s > 0
     assert rep.new_plan.latency > 0
+
+
+# ---------------------------------------------------------------------------
+# Fully-failed stage accounting (regression) + backup link bandwidths
+# ---------------------------------------------------------------------------
+
+
+def _single_device_plan(bw_matrix=None, bandwidth=None):
+    """3 single-device stages over 3 identical devices, 12 real layers."""
+    cfg = ModelConfig(name="t", n_layers=12, d_model=256, vocab_size=8000,
+                      d_ff=1024,
+                      attn=AttentionConfig(n_heads=4, n_kv_heads=4,
+                                           head_dim=64),
+                      pattern=(LayerSpec(),))
+    table = LayerTable.from_model_config(cfg, seq_len=64)
+    kw = {}
+    if bandwidth is not None:
+        kw["bandwidth"] = bandwidth
+    cluster = Cluster((JETSON_NX,) * 3, bw_matrix=bw_matrix, **kw)
+    profile = Profile.analytic(table, cluster, max_batch=16)
+    stages = (StagePlan((0, 5), (0,), (16,), kp_policy(3, 0)),
+              StagePlan((5, 10), (1,), (16,), kp_policy(3, 1)),
+              StagePlan((10, 14), (2,), (16,), kp_policy(3, 2)))
+    return table, profile, Plan("t", stages, (), 16, 4, 1.0)
+
+
+def test_fully_failed_stage_not_counted_as_migration():
+    """Regression: a fully-failed stage's layer range used to silently drop
+    out of the old-cut accounting, charging its (backup-restored) layers to
+    boundary migration against misaligned survivor boundaries.  Old
+    ownership now follows the ORIGINAL plan partition: the failed range is
+    restored, never migrated, and survivors only migrate layers whose own
+    assignment moved."""
+    table, profile, plan = _single_device_plan()
+    rep = lightweight_replay(plan, profile, failed_rank=1)
+
+    # the new plan still covers everything with the two survivors
+    stages = rep.new_plan.stages
+    assert len(stages) == 2
+    assert stages[0].layers[0] == 0 and stages[-1].layers[1] == table.L
+    for a, b in zip(stages, stages[1:]):
+        assert a.layers[1] == b.layers[0]
+
+    # no boundary move may include a layer of the failed stage's range
+    failed_lo, failed_hi = plan.stages[1].layers
+    for m in rep.boundary_moves:
+        assert m.hi <= failed_lo or m.lo >= failed_hi, (m, (failed_lo, failed_hi))
+    # identical devices split the work at the failed range's midpoint: the
+    # survivors' own layers keep their owners, so nothing migrates at all —
+    # the failed range is restored from backup instead
+    assert rep.migration_s == 0.0
+    assert rep.restore_s > 0.0
+
+
+def test_restore_uses_backup_link_bandwidth():
+    """Regression: restore cost used the cluster-wide bandwidth; it must be
+    priced on the actual backup link bw(backup_rank, new_owner_rank), and a
+    restore to the backup holder's own stage is local (free)."""
+    bw = [[0.0, 1e6, 2e6],
+          [1e6, 0.0, 4e6],
+          [5e5, 4e6, 0.0]]
+    table, profile, plan = _single_device_plan(
+        bw_matrix=tuple(map(tuple, bw)), bandwidth=1e9)
+    rep = lightweight_replay(plan, profile, failed_rank=1)
+
+    assign = assign_backups(plan, profile)
+    backup_rank = assign.backup_of_stage[1]
+    assert backup_rank == 2                      # next stage's lead device
+    failed_lo, failed_hi = plan.stages[1].layers
+    expect = 0.0
+    for st in rep.new_plan.stages:
+        lo = max(failed_lo, st.layers[0])
+        hi = min(failed_hi, st.layers[1])
+        if lo >= hi or backup_rank in st.group:
+            continue                             # local to the backup holder
+        expect = max(expect,
+                     table.param_bytes(lo, hi) / bw[backup_rank][st.group[0]])
+    assert expect > 0                            # scenario does restore remotely
+    assert rep.restore_s == pytest.approx(expect)
+    # the cluster-wide bandwidth (1 GB/s) would give a far smaller number
+    assert rep.restore_s > table.param_bytes(failed_lo, failed_hi) / 1e9
+
+
+def test_boundary_moves_power_migration_time():
+    """migration_s == the max over boundary moves of bytes / link bw."""
+    profile_plan = _single_device_plan()
+    table, profile, plan = profile_plan
+    rep = lightweight_replay(plan, profile, failed_rank=plan.stages[0].group[0])
+    if rep.boundary_moves:
+        assert rep.migration_s == pytest.approx(
+            max(m.nbytes / m.link_bw for m in rep.boundary_moves))
+    else:
+        assert rep.migration_s == 0.0

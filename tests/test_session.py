@@ -1,0 +1,267 @@
+"""Live pipeline replay: migration index maps, coordinator state machine,
+and analytical/runtime migration reconciliation (pure CPU — the distributed
+end-to-end path is tests/test_distributed.py::test_replay_session)."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.costmodel import kp_policy
+from repro.core.hardware import JETSON_NX, Cluster
+from repro.core.lowering import (LoweredPlan, lower_plan, migrate_opt_state,
+                                 migrate_params, migration_index,
+                                 period_owner, reconcile_migration, relower,
+                                 snap_plan)
+from repro.core.planner import Plan, StagePlan
+from repro.core.profiler import LayerTable, Profile
+from repro.core.replay import ReplayCoordinator, lightweight_replay
+from repro.models.model import init_model
+from repro.optim import AdamW
+from repro.runtime.pipeline import arrange_periods
+
+
+def _lp(stage_periods, n_periods=8):
+    P = len(stage_periods)
+    return LoweredPlan(arch="t", stage=P, n_micro=4, micro_batch=2,
+                       global_batch=8, n_periods=n_periods,
+                       stage_periods=stage_periods,
+                       stage_layers=tuple((0, 0) for _ in range(P)),
+                       device_groups=tuple((p,) for p in range(P)),
+                       micro_alloc=tuple((2,) for _ in range(P)),
+                       warmup=tuple(kp_policy(P, p) for p in range(P)))
+
+
+@pytest.fixture(scope="module")
+def arranged():
+    cfg = get_smoke_config("phi3-mini-3.8b").replace(n_layers=8)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# migrate_params / migrate_opt_state
+# ---------------------------------------------------------------------------
+
+
+def _arrange(params, lp):
+    out = dict(params)
+    out["periods"], _ = arrange_periods(params["periods"], lp.stage_periods)
+    return out
+
+
+def test_migration_round_trip_is_identity(arranged):
+    """Migrate A -> B -> A returns the arranged stack bit-identically."""
+    cfg, params = arranged
+    A, B = _lp(((0, 3), (3, 8))), _lp(((0, 6), (6, 8)))
+    pA = _arrange(params, A)
+    pB, _ = migrate_params(pA, A, B)
+    pA2, _ = migrate_params(pB, B, A)
+    for a, b in zip(jax.tree.leaves(pA["periods"]),
+                    jax.tree.leaves(pA2["periods"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # non-period leaves pass through untouched
+    assert pA2["embed"] is pB["embed"] is pA["embed"]
+
+
+def test_migration_matches_direct_arrangement(arranged):
+    """Migrating an arranged stack == arranging the canonical stack."""
+    cfg, params = arranged
+    A, B = _lp(((0, 4), (4, 8))), _lp(((0, 2), (2, 5), (5, 8)))
+    pA = _arrange(params, A)
+    pB, _ = migrate_params(pA, A, B)
+    direct = _arrange(params, B)
+    for a, b in zip(jax.tree.leaves(pB["periods"]),
+                    jax.tree.leaves(direct["periods"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_opt_state_uses_same_index_map(arranged):
+    """Moments follow exactly the index map the params moved through."""
+    cfg, params = arranged
+    A, B = _lp(((0, 5), (5, 8))), _lp(((0, 3), (3, 8)))
+    pA = _arrange(params, A)
+    opt = AdamW(lr=1e-3)
+    state = opt.init(pA)
+    # stamp each moment row with its arranged position to track moves
+    m = dict(state.m)
+    m["periods"] = jax.tree.map(
+        lambda x: (np.arange(x.shape[0], dtype=np.float32)
+                   .reshape(-1, *([1] * (x.ndim - 1)))
+                   * np.ones_like(np.asarray(x))),
+        state.m["periods"])
+    state = state._replace(m=m)
+    migrated = migrate_opt_state(state, A, B)
+    take, mask = migration_index(A, B)
+    for leaf in jax.tree.leaves(migrated.m["periods"]):
+        arr = np.asarray(leaf)
+        for row, (src, keep) in enumerate(zip(take, mask)):
+            expect = float(src) if keep else 0.0
+            assert np.all(arr[row] == expect), (row, src, keep)
+    assert migrated.step is state.step
+
+
+def test_migration_report_boundary_accounting(arranged):
+    cfg, params = arranged
+    A, B = _lp(((0, 5), (5, 8))), _lp(((0, 3), (3, 8)))
+    pA = _arrange(params, A)
+    _, rep = migrate_params(pA, A, B)
+    assert rep.moved_periods == (3, 4)
+    assert rep.boundary_periods == ((3, 4),)
+    assert rep.restored_periods == ()
+    assert rep.total_bytes == rep.period_bytes * 2
+    assert rep.boundary_bytes[0] == rep.total_bytes
+    # restored periods (owner None) are excluded from boundary accounting
+    owner = [None if t in (3, 4) else o
+             for t, o in enumerate(period_owner(A))]
+    _, rep2 = migrate_params(pA, A, B, old_owner=owner)
+    assert rep2.restored_periods == (3, 4)
+    assert rep2.moved_periods == ()
+    assert rep2.boundary_bytes == (0.0,)
+
+
+# ---------------------------------------------------------------------------
+# relower + analytical/runtime reconciliation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def replayable():
+    """A 3-stage plan (one multi-device stage) on a small transformer whose
+    table layers == periods (pattern length 1), so cuts align exactly."""
+    from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+    cfg = ModelConfig(name="t", n_layers=12, d_model=64, vocab_size=256,
+                      d_ff=128,
+                      attn=AttentionConfig(n_heads=2, n_kv_heads=2,
+                                           head_dim=32),
+                      pattern=(LayerSpec(),))
+    table = LayerTable.from_model_config(cfg, seq_len=32)
+    cluster = Cluster((JETSON_NX,) * 4)
+    prof = Profile.analytic(table, cluster, max_batch=16)
+    stages = (StagePlan((0, 5), (0, 1), (8, 8), kp_policy(3, 0)),
+              StagePlan((5, 10), (2,), (16,), kp_policy(3, 1)),
+              StagePlan((10, 14), (3,), (16,), kp_policy(3, 2)))
+    plan = Plan("t", stages, (), 16, 4, 1.0)
+    return cfg, table, prof, plan
+
+
+def test_relower_and_reconcile_migration(replayable):
+    """End-to-end analytical/runtime agreement: lightweight_replay with
+    layer_quantum -> relower -> migrate_params -> reconcile (exact bytes)."""
+    cfg, table, prof, plan = replayable
+    old_lp = lower_plan(plan, cfg)
+    plan = snap_plan(plan, old_lp, table.L)
+    rep = lightweight_replay(plan, prof, failed_rank=1, layer_quantum=1)
+    assert rep.mode == "lightweight"
+    new_lp = relower(old_lp, rep.new_plan, cfg)
+
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    pA = dict(params)
+    pA["periods"], _ = arrange_periods(params["periods"],
+                                       old_lp.stage_periods)
+    _, mig = migrate_params(pA, old_lp, new_lp)
+    recon = reconcile_migration(mig, rep, new_lp, table, pattern_len=1)
+    for rec in recon.values():
+        assert rec["table_bytes"] == rec["analytic_bytes"]
+    # every analytical boundary move is visible in the reconciliation
+    assert set(recon) == {m.boundary for m in rep.boundary_moves}
+
+
+def test_relower_rejects_structure_changes(replayable):
+    import dataclasses
+
+    from repro.core.lowering import LoweringError
+
+    cfg, table, prof, plan = replayable
+    old_lp = lower_plan(plan, cfg)
+    rep = lightweight_replay(plan, prof, failed_rank=1, layer_quantum=1)
+    bad = dataclasses.replace(rep.new_plan, micro_batch=8)
+    with pytest.raises(LoweringError):
+        relower(old_lp, bad, cfg)
+    with pytest.raises(LoweringError):
+        relower(old_lp, dataclasses.replace(rep.new_plan, arch="other"), cfg)
+
+
+def test_snap_plan_reflects_lowered_cuts(replayable):
+    cfg, table, prof, plan = replayable
+    low = lower_plan(plan, cfg)
+    snapped = snap_plan(plan, low, table.L)
+    # pattern length 1: period r ends at table layer 1 + r
+    for st, (i, j) in zip(snapped.stages, low.stage_periods):
+        assert st.layers[1] in (1 + j, table.L)
+    assert snapped.stages[0].layers[0] == 0
+    assert snapped.stages[-1].layers[1] == table.L
+
+
+# ---------------------------------------------------------------------------
+# ReplayCoordinator
+# ---------------------------------------------------------------------------
+
+
+def test_coordinator_detects_and_recovers():
+    c = ReplayCoordinator([0, 1, 2])
+    t = 0.0
+    while t < 1.0:
+        t = round(t + 0.5, 3)
+        for r in (0, 1, 2):
+            c.heartbeat(r, t)
+        assert c.poll(t) is None
+    # rank 2 dies at t=1.0; survivors keep beating
+    confirmed, detect_t = None, None
+    while confirmed is None:
+        t = round(t + 0.5, 3)
+        for r in (0, 1):
+            c.heartbeat(r, t)
+        confirmed = c.poll(t)
+        if confirmed is not None:
+            detect_t = t
+    assert confirmed == 2
+    # probe fired after the missed deadline, confirmed a probe-timeout later
+    assert detect_t - 1.0 >= c.heartbeat_period + c.timeout + c.probe_timeout
+    states = [s for s, _, _ in c.events]
+    assert states == ["monitoring", "probing", "confirmed"]
+
+    calls = []
+
+    class Exec:
+        def replan(self, rank):
+            calls.append(("replan", rank))
+            from repro.core.replay import RecoveryReport
+            return RecoveryReport(1.0, 0.1, 0.2, 0.3, None, "lightweight")
+
+        def migrate(self, report):
+            calls.append(("migrate",))
+            return "mig"
+
+        def resume(self, report, migration):
+            calls.append(("resume", migration))
+
+    report, mig = c.run_recovery(2, Exec(), now=detect_t)
+    assert mig == "mig"
+    assert calls == [("replan", 2), ("migrate",), ("resume", "mig")]
+    assert [s for s, _, _ in c.events] == [
+        "monitoring", "probing", "confirmed", "replanning", "migrating",
+        "resuming", "monitoring"]
+    assert 2 not in c.last_beat
+    # recovery timeline is stamped with the report's own component costs
+    times = {s: t for s, t, _ in c.events}
+    assert times["resuming"] - times["migrating"] == pytest.approx(0.5)
+
+
+def test_coordinator_probe_answered_resumes_monitoring():
+    c = ReplayCoordinator([0, 1], heartbeat_period=0.5, timeout=1.0,
+                          probe_timeout=1.0)
+    c.heartbeat(0, 3.0)
+    assert c.poll(3.0) is None       # rank 1 silent since t=0
+    assert c.state == "probing" and c.suspect == 1
+    c.heartbeat(1, 3.5)              # the probe is answered in time
+    assert c.poll(3.6) is None
+    assert c.state == "monitoring" and c.suspect is None
+
+
+def test_coordinator_requires_confirmation():
+    c = ReplayCoordinator([0, 1])
+    with pytest.raises(RuntimeError):
+        c.run_recovery(1, object())
