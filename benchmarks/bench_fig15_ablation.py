@@ -4,7 +4,14 @@
     + inter-stage planning -> + intra-stage planning (full Asteroid).
 (b) 1F1B micro-batch scheduling: per-stage peak memory and throughput for
     K_p policies a / b / c / ours / gpipe — ours must have the smallest
-    peak memory at comparable throughput."""
+    peak memory at comparable throughput.
+
+The analytic (a) rows here predict the intra-stage gain; since the runtime
+executes the lowered allocation (``TrainSpec.shard_alloc``), the same
+ablation is also *measured* on the real shard_map pipeline by
+``bench_table4_throughput._runtime_ablation`` (run via
+``benchmarks/run.py --only table4 --quick``, which writes the
+``BENCH_throughput.json`` CI artifact)."""
 
 from __future__ import annotations
 

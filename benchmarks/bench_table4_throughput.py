@@ -2,12 +2,26 @@
 
 Paper: 2.1x-6.8x over DP, 1.3x-12.2x over PP across Env A (100Mbps),
 Env B (100Mbps), Env B (1000Mbps) for EfficientNet-B1 / MobileNetV2 /
-ResNet-50 / BERT-small."""
+ResNet-50 / BERT-small.
+
+``run_structured`` additionally emits machine-readable records — the
+Table 4 planner throughputs, the Fig. 15a intra-stage-planning ablation
+(Algorithm 1 Phase 2 on/off, predicted), and a *measured* ablation on the
+real shard_map runtime (``repro.launch.train --plan [--no-offload]`` in a
+subprocess with 8 host devices) — which ``benchmarks/run.py`` writes to
+``BENCH_throughput.json`` so the throughput trajectory is recorded across
+PRs (CI artifact).
+"""
 
 from __future__ import annotations
 
-from repro.core.hardware import MBPS_100, MBPS_1000, env_a, env_b
-from repro.core.planner import auto_microbatch, plan_dp, plan_gpipe
+import os
+import re
+import subprocess
+import sys
+
+from repro.core.hardware import MBPS_100, MBPS_1000, env_a, env_b, env_c
+from repro.core.planner import auto_microbatch, plan_dp, plan_gpipe, plan_hpp
 from repro.core.profiler import Profile
 from repro.configs.paper_models import PAPER_BATCH, PAPER_MODELS
 
@@ -17,12 +31,14 @@ ENVS = [("A_100Mbps", lambda: env_a()),
         ("B_100Mbps", lambda: env_b(MBPS_100)),
         ("B_1000Mbps", lambda: env_b(MBPS_1000))]
 
+ALL_MODELS = ("efficientnet-b1", "mobilenetv2", "resnet50", "bert-small")
 
-def run(models=("efficientnet-b1", "mobilenetv2", "resnet50", "bert-small")) -> list[str]:
-    rows = []
+
+def _table4(models, envs):
+    lines, records = [], []
     for model in models:
         B = PAPER_BATCH[model]
-        for env_name, mk in ENVS:
+        for env_name, mk in envs:
             cluster = mk().sorted_by_memory()
             prof = Profile.analytic(PAPER_MODELS[model](), cluster, max_batch=64)
             ours = auto_microbatch(prof, B, arch=model)
@@ -31,11 +47,93 @@ def run(models=("efficientnet-b1", "mobilenetv2", "resnet50", "bert-small")) -> 
             pp = plan_gpipe(prof, B, mb)
             # single strongest device (rank 0 after the memory sort)
             dev_t = prof.t_both(0, mb, 0, prof.table.L) * (B // mb)
-            rows.append(row(
+            lines.append(row(
                 f"table4/{model}/{env_name}", ours.latency,
                 tput=f"{ours.throughput:.1f}",
                 stages=len(ours.stages),
                 speedup_device=f"{dev_t / ours.latency:.1f}x",
                 speedup_dp=f"{dp.latency / ours.latency:.1f}x",
                 speedup_pp=f"{pp.latency / ours.latency:.1f}x"))
-    return rows
+            records.append({
+                "suite": "table4", "model": model, "env": env_name,
+                "tput_samples_s": ours.throughput, "stages": len(ours.stages),
+                "speedup_vs_device": dev_t / ours.latency,
+                "speedup_vs_dp": dp.latency / ours.latency,
+                "speedup_vs_pp": pp.latency / ours.latency})
+    return lines, records
+
+
+def _fig15a_quick(models):
+    """Fig. 15a intra-stage ablation, predicted: Algorithm 1 with and
+    without Phase 2 (straggler workload offloading)."""
+    lines, records = [], []
+    for model in models:
+        prof = Profile.analytic(PAPER_MODELS[model](),
+                                env_c().sorted_by_memory(), max_batch=64)
+        B = 2048
+        full = plan_hpp(prof, B, 32, intra_opt=True)
+        no_off = plan_hpp(prof, B, 32, intra_opt=False)
+        lines.append(row(
+            f"fig15a_quick/{model}", full.latency,
+            full_tput=f"{full.throughput:.1f}",
+            no_offload_tput=f"{no_off.throughput:.1f}",
+            offload_gain=f"{no_off.latency / full.latency:.3f}x"))
+        records.append({
+            "suite": "fig15a", "model": model,
+            "full_tput_samples_s": full.throughput,
+            "no_offload_tput_samples_s": no_off.throughput,
+            "offload_gain": no_off.latency / full.latency})
+    return lines, records
+
+
+def _runtime_ablation(quick: bool):
+    """Measured Fig. 15a on the real runtime: the planner's allocation with
+    and without Phase 2, executed by the shard_map pipeline (heterogeneous
+    shard_alloc padding + weighted reduce) on 8 host devices."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    steps = "6" if quick else "20"
+    lines, records = [], []
+    for offload in (True, False):
+        args = [sys.executable, "-m", "repro.launch.train", "--smoke",
+                "--devices", "8", "--plan", "--steps", steps,
+                "--global-batch", "8", "--seq", "64"]
+        if not offload:
+            args.append("--no-offload")
+        proc = subprocess.run(args, capture_output=True, text=True,
+                              timeout=1200, env=env, cwd=root)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"runtime ablation (offload={offload}) failed:\n"
+                f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+        m = re.search(r"FINAL tok_s=([0-9.]+) loss=([0-9.]+)", proc.stdout)
+        assert m, proc.stdout[-2000:]
+        tok_s, loss = float(m.group(1)), float(m.group(2))
+        tag = "offload" if offload else "no_offload"
+        lines.append(row(f"fig15a_runtime/{tag}", 1.0 / max(tok_s, 1e-9),
+                         tok_s=f"{tok_s:.1f}", loss=f"{loss:.4f}"))
+        records.append({"suite": "fig15a_runtime", "offload": offload,
+                        "tok_s": tok_s, "loss": loss, "steps": int(steps)})
+    return lines, records
+
+
+def run_structured(quick: bool = False, runtime: bool = True):
+    models = ALL_MODELS[:1] if quick else ALL_MODELS
+    envs = ENVS[:1] if quick else ENVS
+    lines, records = _table4(models, envs)
+    l2, r2 = _fig15a_quick(models)
+    lines += l2
+    records += r2
+    if runtime:
+        l3, r3 = _runtime_ablation(quick)
+        lines += l3
+        records += r3
+    return lines, records
+
+
+def run(models=ALL_MODELS) -> list[str]:
+    # analytic-only view for the plain CSV aggregator path
+    lines, _ = _table4(models, ENVS)
+    return lines

@@ -42,9 +42,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None, choices=list(SUITES))
     ap.add_argument("--quick", action="store_true",
-                    help="reduced problem sizes where supported (fig16)")
+                    help="reduced problem sizes where supported "
+                         "(fig16, table4)")
     ap.add_argument("--json-out", default="BENCH_fault.json",
                     help="where the fault suite writes its JSON record")
+    ap.add_argument("--throughput-json-out", default="BENCH_throughput.json",
+                    help="where the throughput suite (table4 + Fig. 15a "
+                         "variants + measured runtime ablation) writes its "
+                         "JSON record")
+    ap.add_argument("--runtime-bench", action="store_true",
+                    help="include the measured runtime ablation (two "
+                         "8-host-device subprocess trainings) in table4 "
+                         "even without --quick")
     args = ap.parse_args()
     names = args.only or list(SUITES)
     print("name,us_per_call,derived")
@@ -58,6 +67,17 @@ def main() -> None:
                     json.dump({"suite": "fig16", "quick": args.quick,
                                "records": records}, f, indent=2)
                 print(f"# fig16 records -> {args.json_out}", file=sys.stderr)
+            elif name == "table4":
+                # the measured (subprocess) ablation only under --quick (CI
+                # sizes) or by explicit request — the plain analytic sweep
+                # stays cheap
+                lines, records = bench_table4_throughput.run_structured(
+                    args.quick, runtime=args.quick or args.runtime_bench)
+                with open(args.throughput_json_out, "w") as f:
+                    json.dump({"suite": "throughput", "quick": args.quick,
+                               "records": records}, f, indent=2)
+                print(f"# throughput records -> {args.throughput_json_out}",
+                      file=sys.stderr)
             else:
                 lines = SUITES[name]()
             for line in lines:

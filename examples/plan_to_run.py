@@ -26,7 +26,7 @@ from repro.core.hardware import env_d  # noqa: E402
 from repro.core.lowering import plan_to_train_step  # noqa: E402
 from repro.core.planner import plan_hpp  # noqa: E402
 from repro.core.profiler import LayerTable, Profile  # noqa: E402
-from repro.data import SyntheticLM, shard_batch  # noqa: E402
+from repro.data import SyntheticLM  # noqa: E402
 from repro.runtime.train import init_train_state  # noqa: E402
 
 B, S, STEPS = 8, 64, 5
@@ -52,17 +52,21 @@ for p, st in enumerate(plan.stages):
           f"{'+'.join(cluster.devices[d].name for d in st.group)} "
           f"alloc={st.alloc} K_p={st.k_p}")
 
-# 3. lower (validates vs the simulator) and build the train step
+# 3. lower (validates vs the simulator) and build the train step.  The
+#    per-stage Algorithm 1 sample allocations collapse onto the data axis:
+#    with an unbalanced collapse, batches are packed/padded to B_max per
+#    shard and the loss is weighted by the true per-shard counts.
 ts, lowered = plan_to_train_step(plan, prof, cfg, mesh)
 print(f"lowered: period split {lowered.stage_periods}, M={lowered.n_micro}, "
-      f"ticks fwd={lowered.forward_ticks} total={lowered.total_ticks}")
+      f"ticks fwd={lowered.forward_ticks} total={lowered.total_ticks}, "
+      f"shard alloc {ts.spec.shard_alloc or 'uniform'}")
 
-# 4. train
+# 4. train (ts.shard_batch packs for the lowered allocation, if any)
 key = jax.random.PRNGKey(0)
 params, opt_state = init_train_state(key, ts)
 ds = SyntheticLM(cfg.vocab_size, S)
 for step in range(STEPS):
-    batch = shard_batch(ds.batch(step, B), ts.mesh, ts.batch_specs)
+    batch = ts.shard_batch(ds.batch(step, B))
     params, opt_state, loss, metrics = ts.step_fn(params, opt_state, batch)
     print(f"step {step} loss {float(loss):.4f} ce {float(metrics['ce']):.4f}")
 print("done")

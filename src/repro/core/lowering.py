@@ -16,7 +16,14 @@ ppermute pipeline.
                         boundaries (periods are the runtime's atomic unit),
 * ``Plan.n_micro``   -> the runtime's micro-batch count ``M``,
 * per-stage warm-up  -> K_p from ``core.schedule`` (validated against the
-                        plan's own ``StagePlan.k_p``).
+                        plan's own ``StagePlan.k_p``),
+* ``micro_alloc``    -> per-data-shard sample counts (``lower_micro_alloc``):
+                        Algorithm 1's heterogeneous intra-stage allocation,
+                        realized by padding every shard's micro-batch to
+                        ``B_max = max_d y_d`` with a static validity mask —
+                        the batch-dimension analogue of how
+                        ``arrange_periods`` realizes heterogeneous layer
+                        splits.
 
 ``plan_to_train_step`` then builds the runnable distributed train step, and
 ``check_against_simulator`` cross-checks the lowered schedule against the
@@ -210,6 +217,69 @@ def lower_plan(plan: Plan, cfg, model_axis: int | None = None) -> LoweredPlan:
 
 
 # ---------------------------------------------------------------------------
+# Micro-batch allocation -> data-shard coordinates
+# ---------------------------------------------------------------------------
+
+
+def _project_alloc(alloc: tuple[int, ...], dp: int) -> tuple[int, ...]:
+    """Project one stage's per-device allocation onto ``dp`` data shards.
+
+    Devices keep the planner's order.  With more devices than shards,
+    contiguous device blocks aggregate onto one shard; with fewer, each
+    device's share is split evenly across its block of shards (that device's
+    work is data-parallel over several mesh columns).
+    """
+    G = len(alloc)
+    if G == dp:
+        return tuple(alloc)
+    if G > dp:
+        bounds = [s * G // dp for s in range(dp + 1)]
+        return tuple(sum(alloc[bounds[s]:bounds[s + 1]]) for s in range(dp))
+    out = [0] * dp
+    for g, y in enumerate(alloc):
+        lo, hi = g * dp // G, (g + 1) * dp // G
+        q, r = divmod(y, hi - lo)
+        for k in range(hi - lo):
+            out[lo + k] = q + (1 if k < r else 0)
+    return tuple(out)
+
+
+def lower_micro_alloc(lowered: LoweredPlan, dp_shards: int) -> tuple[int, ...]:
+    """Collapse the plan's per-stage device allocations into the single
+    per-data-shard sample allocation the shard_map runtime executes.
+
+    In mesh coordinates every stage's intra-stage group is the *same* set of
+    ``dp_shards`` data columns (the mesh is rectangular), and the circular
+    pipeline never re-splits samples across the data axis between stages —
+    so Algorithm 1's per-stage allocations are projected onto ``dp_shards``
+    slots (``_project_alloc``) and, when stages disagree, combined by
+    largest-remainder rounding of their mean.  When every stage projects to
+    the same vector the result is exact; the returned counts always sum to
+    ``lowered.micro_batch``.
+    """
+    if dp_shards < 1:
+        raise LoweringError(f"dp_shards must be >= 1, got {dp_shards}")
+    mb = lowered.micro_batch
+    projs = [_project_alloc(a, dp_shards) for a in lowered.micro_alloc]
+    if all(p == projs[0] for p in projs):
+        out = projs[0]
+    else:
+        mean = [sum(p[d] for p in projs) / len(projs)
+                for d in range(dp_shards)]
+        base = [int(x) for x in mean]
+        rem = mb - sum(base)
+        order = sorted(range(dp_shards), key=lambda d: (base[d] - mean[d], d))
+        for d in order[:rem]:
+            base[d] += 1
+        out = tuple(base)
+    if sum(out) != mb or any(y < 0 for y in out):
+        raise LoweringError(
+            f"collapsed allocation {out} does not partition the micro-batch "
+            f"{mb} over {dp_shards} data shards")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Simulator cross-check
 # ---------------------------------------------------------------------------
 
@@ -233,7 +303,13 @@ def check_against_simulator(lowered: LoweredPlan, plan: Plan,
        the same dependency rules),
     3. peak resident activations per stage equal ``min(max(1, K_p), M)`` —
        the O(K_p) 1F1B memory bound — and the simulator's per-device peak
-       bytes stay within the Eq. (3) budget the lowering derives.
+       bytes stay within the Eq. (3) budget the lowering derives,
+    4. the plan's stage latencies are Eq. (8): the max over the group of
+       per-device times priced at the *allocated* sample counts (catches
+       plans whose steps went stale against their allocations),
+    5. the simulator's per-device busy times scale with allocated samples —
+       ``M * (t_f(d, y_d) + t_b(d, y_d))`` exactly — and never exceed the
+       lockstep stage busy time.
     Returns the (real-cost) simulation for further inspection.
     """
     M, P = lowered.n_micro, lowered.stage
@@ -256,6 +332,20 @@ def check_against_simulator(lowered: LoweredPlan, plan: Plan,
     bound = lowered.memory_bound(profile)
     for d, peak in sim.peak_mem.items():
         assert peak <= bound[d] * (1 + rel_tol), (d, peak, bound[d])
+
+    exec_steps = [s for s in plan.steps if s.kind == "exec"]
+    for p, st in enumerate(exec_steps):
+        i, j = st.layers
+        ef = max(profile.t_fwd(d, y, i, j) for d, y in zip(st.group, st.alloc))
+        eb = max(profile.t_bwd(d, y, i, j) for d, y in zip(st.group, st.alloc))
+        assert abs(st.ef - ef) <= rel_tol * max(ef, 1e-12), (p, st.ef, ef)
+        assert abs(st.eb - eb) <= rel_tol * max(eb, 1e-12), (p, st.eb, eb)
+        for d, y in zip(st.group, st.alloc):
+            t_dev = M * (profile.t_fwd(d, y, i, j) + profile.t_bwd(d, y, i, j))
+            assert abs(sim.device_busy[d] - t_dev) <= \
+                rel_tol * max(t_dev, 1e-12), (d, sim.device_busy[d], t_dev)
+            assert sim.device_busy[d] <= sim.stage_busy[p] * (1 + rel_tol), \
+                (d, p, sim.device_busy[d], sim.stage_busy[p])
     return sim
 
 

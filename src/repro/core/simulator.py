@@ -29,13 +29,21 @@ from .schedule import Op, schedule_orders
 class SimResult:
     makespan: float
     peak_mem: dict[int, float]          # device rank -> bytes
-    stage_busy: list[float]             # busy seconds per stage
+    stage_busy: list[float]             # busy seconds per stage (lockstep max)
     bubble_frac: list[float]
     trace: list[tuple]                  # (t_start, t_end, stage, op)
+    # per-device compute seconds at the *allocated* sample count y_d — the
+    # Eq. (8) decomposition of each stage's lockstep op time (a device whose
+    # allocation is below the stage max idles for the difference)
+    device_busy: dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
     def max_peak_mem(self) -> float:
         return max(self.peak_mem.values())
+
+    def device_util(self, d: int) -> float:
+        """Fraction of the round this device computes (vs idles/bubbles)."""
+        return self.device_busy[d] / self.makespan if self.makespan else 0.0
 
 
 def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
@@ -46,6 +54,15 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
     assert len(exec_steps) == P and len(comm_steps) == P - 1
 
     orders = schedule_orders(P, M, policy)
+
+    # per-device op times at the allocated sample counts (Eq. 8 terms)
+    dev_times: list[tuple[tuple[int, float, float], ...]] = []
+    for st in stages:
+        i, j = st.layers
+        dev_times.append(tuple(
+            (d, profile.t_fwd(d, y, i, j), profile.t_bwd(d, y, i, j))
+            for d, y in zip(st.group, st.alloc)))
+    device_busy = {d: 0.0 for st in stages for d in st.group}
 
     # --- readiness state -------------------------------------------------
     f_done = [[False] * M for _ in range(P)]        # F(p, m) finished
@@ -90,6 +107,8 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
         stage_free_at[p] = end
         op_idx[p] += 1
         busy[p] += dur
+        for d, tf, tb in dev_times[p]:
+            device_busy[d] += tf if op.kind == "F" else tb
         trace.append((start, end, p, f"{op.kind}{op.micro}"))
         push(end, "exec_done", (p, op))
 
@@ -159,4 +178,4 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
 
     span = max(stage_free_at)
     bubble = [1.0 - busy[p] / span if span > 0 else 0.0 for p in range(P)]
-    return SimResult(makespan, peak_mem, busy, bubble, trace)
+    return SimResult(makespan, peak_mem, busy, bubble, trace, device_busy)

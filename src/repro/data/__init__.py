@@ -6,6 +6,10 @@ architectures are LMs, so the pipeline produces language-model token batches:
 * ``SyntheticLM`` — a deterministic Zipf-ish Markov stream (seeded, resumable
   by step index, so data-parallel hosts and restarts agree),
 * ``delay_pattern`` — MusicGen's codebook delay interleave,
+* ``pack_batch`` — realizes a heterogeneous per-data-shard sample allocation
+  (Algorithm 1, lowered by ``core.lowering.lower_micro_alloc``) by splitting
+  each micro-batch unevenly across shards and zero-padding every shard to
+  ``B_max = max_d y_d``; the runtime masks the padding back out,
 * ``shard_batch`` — places a host batch onto the mesh with the train specs.
 
 For the one-device examples it doubles as a real (tiny) corpus generator with
@@ -68,6 +72,51 @@ def delay_pattern(tokens: np.ndarray, pad_id: int = 0) -> np.ndarray:
     out = np.full_like(tokens, pad_id)
     for k in range(CB):
         out[:, k, k:] = tokens[:, k, : S - k]
+    return out
+
+
+def pack_indices(shard_alloc, n_micro: int):
+    """Gather indices + validity realizing a heterogeneous batch packing.
+
+    Returns ``(idx, valid)`` of shape ``(dp, n_micro, B_max)``: shard ``d``'s
+    row ``m * B_max + b`` holds input row ``idx[d, m, b]`` when
+    ``valid[d, m, b]`` (micro-batch ``m`` = input rows
+    ``[m * micro_batch, (m+1) * micro_batch)``, split consecutively across
+    shards per ``shard_alloc``), and zero padding otherwise.
+    """
+    alloc = [int(y) for y in shard_alloc]
+    if any(y < 0 for y in alloc) or sum(alloc) <= 0:
+        raise ValueError(f"invalid shard allocation {shard_alloc}")
+    micro_batch, b_max = sum(alloc), max(alloc)
+    offs = np.cumsum([0] + alloc[:-1])
+    idx = np.zeros((len(alloc), n_micro, b_max), np.int64)
+    valid = np.zeros((len(alloc), n_micro, b_max), bool)
+    for d, (y, o) in enumerate(zip(alloc, offs)):
+        for m in range(n_micro):
+            idx[d, m, :y] = m * micro_batch + o + np.arange(y)
+            valid[d, m, :y] = True
+    return idx, valid
+
+
+def pack_batch(batch: dict, shard_alloc, n_micro: int) -> dict:
+    """Re-lay a host batch for a heterogeneous per-shard sample allocation.
+
+    Input arrays are ``(n_micro * sum(shard_alloc), ...)``; the output is
+    ``(dp * n_micro * B_max, ...)`` (shard-major, then micro-batch, then
+    sample slot) with invalid slots zeroed — ready for the train specs'
+    ``(pod, data)`` batch sharding.  Every input sample appears exactly once.
+    """
+    idx, valid = pack_indices(shard_alloc, n_micro)
+    flat_idx, flat_valid = idx.reshape(-1), valid.reshape(-1)
+    out = {}
+    for k, v in batch.items():
+        a = np.asarray(v)
+        if a.shape[0] != n_micro * sum(int(y) for y in shard_alloc):
+            raise ValueError(f"batch[{k!r}] has {a.shape[0]} rows; expected "
+                             f"{n_micro} micro-batches of {sum(shard_alloc)}")
+        g = a[flat_idx].copy()
+        g[~flat_valid] = 0
+        out[k] = g
     return out
 
 

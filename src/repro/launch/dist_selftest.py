@@ -40,7 +40,7 @@ TOL = 2e-3
 
 def run_arch(arch: str, devices) -> float:
     from repro.configs import get_smoke_config
-    from repro.data import SyntheticLM, shard_batch
+    from repro.data import SyntheticLM
     from repro.models.frontend import frontend_dim
     from repro.models.model import init_model, loss_fn as local_loss_fn
     from repro.runtime.train import build_train_step, init_train_state
@@ -58,7 +58,7 @@ def run_arch(arch: str, devices) -> float:
     ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
                      prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
     batch_np = ds.batch(0, B)
-    batch = shard_batch(batch_np, ts.mesh, ts.batch_specs)
+    batch = ts.shard_batch(batch_np)
     params, opt_state = init_train_state(key, ts)
 
     loss_d, metrics = ts.loss_fn(params, batch)
@@ -85,6 +85,115 @@ def run_arch(arch: str, devices) -> float:
     return diff
 
 
+def run_arch_hetero(arch: str, devices) -> float:
+    """Heterogeneous intra-stage allocation (Algorithm 1) on the real
+    runtime: a y=(3,1) sample split across the 2-wide data axis, padded to
+    B_max=3 with static validity masks.  Asserts loss parity vs the
+    single-device reference, *gradient* parity vs the uniform-allocation
+    baseline on the same global batch (dense models; MoE aux statistics are
+    per-shard estimates, so only CE is compared there), bit-identical param
+    shapes, and a loss-reducing optimizer step through the padded pipeline."""
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticLM
+    from repro.models.frontend import frontend_dim
+    from repro.models.model import init_model, loss_fn as local_loss_fn
+    from repro.runtime.train import build_train_step, init_train_state
+
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    cfg = cfg.replace(n_layers=4 * len(cfg.pattern))       # 4 periods
+    B, S, M = 16, 64, 4
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    ts_u = build_train_step(cfg, mesh_prod, global_batch=B, stage=2, n_micro=M)
+    ts_h = build_train_step(cfg, mesh_prod, global_batch=B, stage=2, n_micro=M,
+                            shard_alloc=(3, 1))
+    assert ts_h.spec.shard_alloc == (3, 1)
+
+    key = jax.random.PRNGKey(0)
+    ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    batch_np = ds.batch(0, B)
+    batch_u = ts_u.shard_batch(batch_np)
+    batch_h = ts_h.shard_batch(batch_np)
+    params_u, opt_u = init_train_state(key, ts_u)
+    params_h, opt_h = init_train_state(key, ts_h)
+
+    ref_params = init_model(key, cfg)
+    _, metrics_r = jax.jit(lambda p, b: local_loss_fn(p, b, cfg, ce_chunk=1024))(
+        ref_params, {k: jnp.asarray(v) for k, v in batch_np.items()})
+    (_, metrics_u), grads_u = ts_u.grad_fn(params_u, batch_u)
+    (_, metrics_h), grads_h = ts_h.grad_fn(params_h, batch_h)
+    diff_ref = abs(float(metrics_h["ce"]) - float(metrics_r["ce"]))
+    diff_u = abs(float(metrics_h["ce"]) - float(metrics_u["ce"]))
+    assert float(metrics_h["tokens"]) == float(metrics_u["tokens"])
+
+    # gradient parity: same global batch, unbalanced vs uniform allocation
+    worst_grad = 0.0
+    for gu, gh in zip(jax.tree.leaves(grads_u), jax.tree.leaves(grads_h)):
+        assert gu.shape == gh.shape and gu.dtype == gh.dtype
+        if cfg.moe is None:
+            d = float(jnp.max(jnp.abs(gu - gh)))
+            scale = max(float(jnp.max(jnp.abs(gu))), 1e-12)
+            worst_grad = max(worst_grad, d / scale)
+
+    new_h, _, l0, _ = ts_h.step_fn(params_h, opt_h, batch_h)
+    l1, _ = ts_h.loss_fn(new_h, batch_h)
+    improved = float(l1) < float(l0)
+
+    # the same unbalanced allocation as a full planner Plan, lowered through
+    # plan_to_train_step (check_against_simulator validates the Eq. 8
+    # allocation-scaled per-device times before anything compiles)
+    ts_p = _hetero_plan_step(cfg, mesh_prod, micro_batch=B // M, n_micro=M)
+    assert ts_p.spec.shard_alloc == (3, 1), ts_p.spec.shard_alloc
+    params_p, _ = init_train_state(key, ts_p)
+    _, metrics_p = ts_p.loss_fn(params_p, ts_p.shard_batch(batch_np))
+    diff_p = abs(float(metrics_p["ce"]) - float(metrics_r["ce"]))
+
+    ok = (diff_ref < TOL and diff_u < TOL and diff_p < TOL
+          and worst_grad < 1e-4 and improved)
+    print(f"{arch:26s} [hetero] y={ts_h.spec.shard_alloc} ref diff="
+          f"{diff_ref:.2e} uniform diff={diff_u:.2e} plan diff={diff_p:.2e} "
+          f"grad rel={worst_grad:.2e} step {float(l0):.4f}->{float(l1):.4f} "
+          f"{'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch}: hetero allocation parity ref={diff_ref} "
+                         f"uniform={diff_u} plan={diff_p} grad={worst_grad} "
+                         f"improved={improved}")
+    return max(diff_ref, diff_u)
+
+
+def _hetero_plan_step(cfg, mesh_prod, micro_batch: int, n_micro: int):
+    """A 2-stage Plan whose every stage allocates y=(3,1) across its
+    two-device group (a TX2 paired with a nano), lowered end-to-end."""
+    from repro.core.costmodel import Step, allreduce_time, kp_policy, \
+        round_latency
+    from repro.core.hardware import JETSON_NANO, JETSON_TX2, Cluster
+    from repro.core.lowering import plan_to_train_step
+    from repro.core.planner import Plan, StagePlan, _comm_step
+    from repro.core.profiler import LayerTable, Profile
+
+    table = LayerTable.from_model_config(cfg, 64)
+    cluster = Cluster((JETSON_TX2, JETSON_NANO, JETSON_TX2, JETSON_NANO))
+    prof = Profile.analytic(table, cluster, max_batch=micro_batch * n_micro)
+    cut = 1 + (table.L - 2) // 2                           # period boundary
+    y = (3, 1)
+    assert sum(y) == micro_batch, (y, micro_batch)
+    stages, steps = [], []
+    for p, (i, j, group) in enumerate([(0, cut, (0, 1)), (cut, table.L, (2, 3))]):
+        ef = max(prof.t_fwd(d, yy, i, j) for d, yy in zip(group, y))
+        eb = max(prof.t_bwd(d, yy, i, j) for d, yy in zip(group, y))
+        ta = allreduce_time(table.param_bytes(i, j), group, prof.cluster)
+        steps.append(Step("exec", ef, eb, ta, group, (i, j), y))
+        stages.append(StagePlan((i, j), group, y, kp_policy(2, p)))
+        if p == 0:
+            steps.append(_comm_step(prof, micro_batch, cut, (0, 1), (2, 3)))
+    plan = Plan(cfg.name, tuple(stages), tuple(steps), micro_batch, n_micro,
+                round_latency(tuple(steps), n_micro), "hand")
+    ts, _ = plan_to_train_step(plan, prof, cfg, mesh_prod)
+    return ts
+
+
 def run_arch_planned(arch: str, devices) -> float:
     """Full planner->lowering->runtime path: profile an edge cluster, run
     Algorithm 2 restricted to mesh-feasible stage counts, lower the plan
@@ -95,7 +204,7 @@ def run_arch_planned(arch: str, devices) -> float:
     from repro.core.lowering import plan_to_train_step
     from repro.core.planner import plan_hpp
     from repro.core.profiler import LayerTable, Profile
-    from repro.data import SyntheticLM, shard_batch
+    from repro.data import SyntheticLM
     from repro.models.frontend import frontend_dim
     from repro.models.model import init_model, loss_fn as local_loss_fn
     from repro.runtime.train import build_train_step, init_train_state
@@ -121,7 +230,7 @@ def run_arch_planned(arch: str, devices) -> float:
     loss_r, metrics_r = jax.jit(lambda p, b: local_loss_fn(p, b, cfg, ce_chunk=1024))(
         ref_params, {k: jnp.asarray(v) for k, v in batch_np.items()})
 
-    batch = shard_batch(batch_np, ts.mesh, ts.batch_specs)
+    batch = ts.shard_batch(batch_np)
     params, opt_state = init_train_state(key, ts)
     loss_d, metrics = ts.loss_fn(params, batch)
     diff = abs(float(metrics["ce"]) - float(metrics_r["ce"]))
@@ -134,14 +243,15 @@ def run_arch_planned(arch: str, devices) -> float:
     # skewed heterogeneous one (3 periods | 1 period) explicitly
     ts2 = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
                            n_micro=4, stage_periods=((0, 3), (3, 4)))
-    batch2 = shard_batch(batch_np, ts2.mesh, ts2.batch_specs)
+    batch2 = ts2.shard_batch(batch_np)
     params2, _ = init_train_state(key, ts2)
     _, metrics2 = ts2.loss_fn(params2, batch2)
     diff2 = abs(float(metrics2["ce"]) - float(metrics_r["ce"]))
 
     ok = diff < TOL and diff2 < TOL and improved
     print(f"{arch:26s} [plan] periods={lowered.stage_periods} "
-          f"M={lowered.n_micro} K_p={lowered.warmup} diff={diff:.2e} "
+          f"M={lowered.n_micro} K_p={lowered.warmup} "
+          f"y={ts.spec.shard_alloc or 'uniform'} diff={diff:.2e} "
           f"het(3|1) diff={diff2:.2e} step {float(l0):.4f}->{float(l1):.4f} "
           f"{'OK' if ok else 'FAIL'}", flush=True)
     if not ok:
@@ -166,7 +276,7 @@ def run_replay(arch: str, devices) -> float:
     from repro.core.lowering import period_positions as positions
     from repro.core.planner import plan_hpp
     from repro.core.profiler import LayerTable, Profile
-    from repro.data import SyntheticLM, shard_batch
+    from repro.data import SyntheticLM
     from repro.runtime.session import PipelineSession
     from repro.runtime.train import build_train_step_from_lowered
 
@@ -217,8 +327,9 @@ def run_replay(arch: str, devices) -> float:
     # 3) the session's re-lowered step == a fresh lowering of the new plan
     #    on identical params
     fresh = build_train_step_from_lowered(cfg, mesh, session.lowered)
+    assert fresh.spec.shard_alloc == session.ts.spec.shard_alloc
     batch_np = ds.batch(100, B)
-    batch = shard_batch(batch_np, session.ts.mesh, session.ts.batch_specs)
+    batch = session.ts.shard_batch(batch_np)
     l_sess, m_sess = session.ts.loss_fn(session.params, batch)
     l_fresh, m_fresh = fresh.loss_fn(session.params, batch)
     d_fresh = abs(float(l_sess) - float(l_fresh))
@@ -288,6 +399,7 @@ def main():
     seq_shard = "--seq-shard" in sys.argv
     planned = "--plan" in sys.argv
     replay = "--replay" in sys.argv
+    hetero = "--hetero" in sys.argv
     archs = args or DEFAULT_ARCHS
     devices = jax.devices()
     assert len(devices) >= 8, "needs 8 host devices"
@@ -298,6 +410,8 @@ def main():
             run_arch_planned(arch, devices[:8])
         elif replay:
             run_replay(arch, devices[:8])
+        elif hetero:
+            run_arch_hetero(arch, devices[:8])
         else:
             run_arch(arch, devices[:8])
     print("ALL OK")

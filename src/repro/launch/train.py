@@ -52,6 +52,9 @@ def main():
     ap.add_argument("--plan", action="store_true",
                     help="derive stage split / n_micro / K_p from the "
                          "Asteroid planner (Algorithm 2) and lower it")
+    ap.add_argument("--no-offload", action="store_true",
+                    help="disable Algorithm 1 Phase 2 (straggler workload "
+                         "offloading) when planning — the Fig. 15a ablation")
     ap.add_argument("--env", default="D", choices=list("ABCD"),
                     help="edge environment profiled for --plan")
     ap.add_argument("--fail-at", type=int, default=None,
@@ -69,7 +72,7 @@ def main():
 
     from repro import checkpoint
     from repro.configs import get_config, get_smoke_config
-    from repro.data import SyntheticLM, shard_batch
+    from repro.data import SyntheticLM
     from repro.models.frontend import frontend_dim
     from repro.optim import AdamW, cosine_schedule
     from repro.runtime.train import build_train_step, init_train_state
@@ -116,7 +119,8 @@ def main():
             m = next(m for m in (4, 2, 1) if args.global_batch % m == 0)
             mb = args.global_batch // m
         plan = plan_hpp(prof, args.global_batch, mb, arch=cfg.name,
-                        allowed_stages=divisors)
+                        allowed_stages=divisors,
+                        intra_opt=not args.no_offload)
         if args.fail_at is not None:
             from repro.runtime.session import PipelineSession
             session = PipelineSession(cfg, mesh, plan, prof, optimizer=opt,
@@ -129,13 +133,15 @@ def main():
         ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt)
         print(f"asteroid plan: {lowered.stage} stages periods="
               f"{lowered.stage_periods} M={lowered.n_micro} "
-              f"K_p={lowered.warmup} predicted latency {plan.latency:.3f}s")
+              f"K_p={lowered.warmup} alloc={lowered.micro_alloc} "
+              f"predicted latency {plan.latency:.3f}s")
     else:
         ts = build_train_step(cfg, mesh, global_batch=args.global_batch,
                               stage=args.stage, n_micro=args.n_micro,
                               optimizer=opt)
     print(f"plan: stage={ts.spec.plan.stage} tp={ts.spec.plan.tp} "
-          f"M={ts.spec.n_micro}")
+          f"M={ts.spec.n_micro} shard_alloc="
+          f"{ts.spec.shard_alloc or 'uniform'}")
 
     key = jax.random.PRNGKey(0)
     params, opt_state = init_train_state(key, ts, opt)
@@ -144,18 +150,31 @@ def main():
 
     import time
     t0 = time.perf_counter()
+    t_warm = None
+    loss = float("nan")
     for step in range(args.steps):
-        batch = shard_batch(ds.batch(step, args.global_batch), ts.mesh,
-                            ts.batch_specs)
+        batch = ts.shard_batch(ds.batch(step, args.global_batch))
         params, opt_state, loss, metrics = ts.step_fn(params, opt_state, batch)
+        if step == 0:
+            jax.block_until_ready(params)
+            t_warm = time.perf_counter()      # exclude compile from FINAL
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.perf_counter() - t0
             tput = args.global_batch * args.seq * (step + 1) / dt
             print(f"step {step:5d} loss {float(loss):.4f} "
                   f"ce {float(metrics['ce']):.4f} tok/s {tput:,.0f}")
+    jax.block_until_ready(params)
+    if args.steps > 1:
+        # steady-state rate: steps after the first (compile) step
+        steady = args.global_batch * args.seq * (args.steps - 1) / max(
+            time.perf_counter() - t_warm, 1e-9)
+    else:
+        steady = args.global_batch * args.seq * args.steps / max(
+            time.perf_counter() - t0, 1e-9)
     if args.checkpoint_dir:
         checkpoint.save(args.checkpoint_dir, "final", params)
         print(f"checkpoint saved to {args.checkpoint_dir}")
+    print(f"FINAL tok_s={steady:.1f} loss={float(loss):.4f}")
     print("done")
     return float(loss)
 
@@ -174,6 +193,7 @@ def _run_session(session, cfg, args) -> float:
     loss = float("nan")
     seen_recoveries = 0
     t0 = time.perf_counter()
+    t_warm = None
     for step in range(args.steps):
         if step == args.fail_at:
             rank = args.fail_rank
@@ -182,6 +202,9 @@ def _run_session(session, cfg, args) -> float:
             print(f"step {step}: killing rank {rank}")
             session.fail(rank)
         loss, metrics = session.step(ds.batch(step, args.global_batch))
+        if step == 0:
+            jax.block_until_ready(session.params)
+            t_warm = time.perf_counter()      # exclude compile from FINAL
         if len(session.recoveries) > seen_recoveries:
             seen_recoveries = len(session.recoveries)
             out = session.recoveries[-1]
@@ -197,10 +220,20 @@ def _run_session(session, cfg, args) -> float:
             tput = args.global_batch * args.seq * (step + 1) / dt
             print(f"step {step:5d} loss {loss:.4f} "
                   f"ce {float(metrics['ce']):.4f} tok/s {tput:,.0f}")
+    jax.block_until_ready(session.params)
     if args.checkpoint_dir:
         from repro import checkpoint
         checkpoint.save(args.checkpoint_dir, "final", session.params)
         print(f"checkpoint saved to {args.checkpoint_dir}")
+    # same steady-state definition as the main path: steps after the first
+    # (compile) step — FINAL lines stay comparable across the two paths
+    if args.steps > 1 and t_warm is not None:
+        tput = args.global_batch * args.seq * (args.steps - 1) / max(
+            time.perf_counter() - t_warm, 1e-9)
+    else:
+        tput = args.global_batch * args.seq * args.steps / max(
+            time.perf_counter() - t0, 1e-9)
+    print(f"FINAL tok_s={tput:.1f} loss={loss:.4f}")
     print("done")
     return loss
 

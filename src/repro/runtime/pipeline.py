@@ -9,6 +9,10 @@ Asteroid's hybrid pipeline parallelism on the refined TPU mesh
   micro-batches) — jax.grad of the scan yields the reverse pipeline;
 * intra-stage parallelism = data parallelism over ``(pod, data)`` plus
   Megatron tensor parallelism over ``tp`` (explicit psums inside layers);
+  Algorithm 1's *heterogeneous* sample allocation is realized by padding
+  every data shard's micro-batch to ``B_max = max_d y_d``
+  (``TrainSpec.shard_alloc``, packed host-side by ``data.pack_batch``) with
+  a static validity mask weighting the loss reduction by true counts;
 * MoE experts are expert-parallel over ``data`` (all_to_all dispatch);
 * embedding and LM head are vocab-parallel over ``tp``; after the pipeline,
   last-stage outputs are *redistributed across stages* so the CE/head work
@@ -201,6 +205,14 @@ class TrainSpec:
     # Planner-lowered heterogeneous stage split: per-stage period ranges
     # [i, j) partitioning [0, n_periods) (core.lowering).  None = uniform.
     stage_periods: tuple[tuple[int, int], ...] | None = None
+    # Planner-lowered heterogeneous intra-stage allocation (Algorithm 1 via
+    # core.lowering.lower_micro_alloc): per-data-shard samples per
+    # micro-batch, summing to the global micro-batch.  The batch arrives
+    # packed (data.pack_batch): every shard padded to B_max = max_d y_d,
+    # and a static validity mask keeps the padding out of the loss, so the
+    # loss/gradient all-reduces are weighted by true per-shard counts.
+    # None = uniform dp split (legacy layout, no padding).
+    shard_alloc: tuple[int, ...] | None = None
     # Perf iteration 1 (EXPERIMENTS.md): hoist replicated->varying casts
     # (and hence the gradient all-reduces their transposes create) out of
     # the pipeline loops.  False reproduces the paper-faithful baseline.
@@ -236,8 +248,20 @@ def spmd_loss_fn(spec: TrainSpec):
         tokens = batch["tokens"]
         B_loc = tokens.shape[0]
         S = tokens.shape[-1]
-        assert B_loc % M == 0, (B_loc, M)
-        mb = B_loc // M
+        if spec.shard_alloc is not None:
+            # heterogeneous allocation: every shard is padded to B_max
+            # samples per micro-batch; this shard's true count y_d selects
+            # the static validity prefix (pack_batch's layout).
+            mb = max(spec.shard_alloc)
+            assert B_loc == M * mb, (B_loc, M, spec.shard_alloc)
+            shard = (lax.axis_index("pod") * plan.data
+                     + lax.axis_index("data"))
+            y_here = jnp.asarray(spec.shard_alloc, jnp.int32)[shard]
+            sample_valid = (jnp.arange(mb) < y_here).astype(jnp.float32)
+        else:
+            assert B_loc % M == 0, (B_loc, M)
+            mb = B_loc // M
+            sample_valid = None
 
         # ---- embed (vocab-parallel over tp) -----------------------------
         if cfg.n_codebooks > 1:
@@ -330,6 +354,11 @@ def spmd_loss_fn(spec: TrainSpec):
             return w[cb] if cb is not None else w
 
         row_mask = own_rows.astype(jnp.float32)
+        if sample_valid is not None:
+            # rows are (micro-batch chunk, sample slot): slots past this
+            # shard's y_d are padding and contribute nothing to loss, count,
+            # or (through the masked CE's transpose) gradients
+            row_mask = row_mask * jnp.tile(sample_valid, chunk)
         if cfg.n_codebooks > 1:
             loss_sum = jnp.zeros((), jnp.float32)
             cnt_sum = jnp.zeros((), jnp.float32)

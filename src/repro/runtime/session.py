@@ -23,7 +23,12 @@ and keeps training through a device failure without restarting:
 Across a swap the *weights are dynamic* (migrated / restored, bit-identical
 where untouched) while the *step is static* (recompiled for the new stage
 split); ``reconcile_migration`` asserts the bytes the migration moved match
-the analytical ``RecoveryReport`` the planner-side replay predicted.
+the analytical ``RecoveryReport`` the planner-side replay predicted.  The
+intra-stage sample allocation is re-lowered with the step: the new plan's
+Algorithm 1 allocation over the survivors becomes a fresh
+``TrainSpec.shard_alloc``, and ``ts.shard_batch`` re-packs (re-pads)
+subsequent batches for it — batch-side only, never touching the migrated
+params or moments.
 """
 
 from __future__ import annotations
@@ -45,7 +50,6 @@ from repro.core.profiler import Profile
 from repro.core.replay import (RecoveryReport, ReplayCoordinator,
                                assign_backups, heavy_rescheduling,
                                lightweight_replay)
-from repro.data import shard_batch
 from repro.distributed.sharding import named
 from repro.models.config import ModelConfig
 from repro.optim import AdamW, AdamWState, SGDState
@@ -151,7 +155,9 @@ class PipelineSession:
         """One training step (recovering first if a failure is pending)."""
         if self._pending_failure is not None:
             self.recover_now()
-        batch = shard_batch(batch_np, self.ts.mesh, self.ts.batch_specs)
+        # ts.shard_batch re-packs for the current plan's (possibly
+        # heterogeneous, possibly just-replayed) per-shard allocation
+        batch = self.ts.shard_batch(batch_np)
         self.params, self.opt_state, loss, metrics = self.ts.step_fn(
             self.params, self.opt_state, batch)
         self.step_count += 1

@@ -12,6 +12,7 @@ the dry-run path (no allocation).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -104,6 +105,45 @@ class TrainStep:
     batch_specs: dict
     step_fn: object                 # jitted (params, opt_state, batch) -> ...
     loss_fn: object                 # jitted (params, batch) -> (loss, metrics)
+    grad_fn: object = None          # jitted (params, batch) ->
+                                    #   ((loss, metrics), grads)
+
+    def shard_batch(self, batch_np: dict) -> dict:
+        """Place a host batch on the mesh, first packing it for the spec's
+        heterogeneous per-shard allocation (padding to B_max) if one is
+        lowered.  The single batch-ingestion entry point — a replayed
+        session's re-lowered step re-packs for the survivors' allocation
+        with no change at the call site."""
+        from repro.data import pack_batch, shard_batch
+        if self.spec.shard_alloc is not None:
+            batch_np = pack_batch(batch_np, self.spec.shard_alloc,
+                                  self.spec.n_micro)
+        return shard_batch(batch_np, self.mesh, self.batch_specs)
+
+
+def _check_shard_alloc(shard_alloc, plan: MeshPlan, n_micro: int,
+                       global_batch: int, cfg: ModelConfig | None = None):
+    shard_alloc = tuple(int(y) for y in shard_alloc)
+    if len(shard_alloc) != plan.dp_shards:
+        raise ValueError(f"shard_alloc {shard_alloc} has {len(shard_alloc)} "
+                         f"entries for {plan.dp_shards} data shards")
+    if min(shard_alloc) < 0 or max(shard_alloc) == 0:
+        raise ValueError(f"shard_alloc {shard_alloc} must be non-negative "
+                         f"with at least one positive entry")
+    if n_micro * sum(shard_alloc) != global_batch:
+        raise ValueError(
+            f"shard_alloc {shard_alloc} allocates {sum(shard_alloc)} samples "
+            f"per micro-batch; {n_micro} micro-batches do not cover the "
+            f"global batch {global_batch}")
+    if cfg is not None and cfg.moe is not None \
+            and len(set(shard_alloc)) > 1:
+        warnings.warn(
+            f"heterogeneous shard_alloc {shard_alloc} with an MoE config: "
+            "zero-padded sample slots still route through the experts, so "
+            "they consume router capacity (displacing real tokens unless "
+            "capacity_factor has headroom) and enter the aux load-balance "
+            "statistics (DESIGN.md §2.1)")
+    return shard_alloc
 
 
 def _check_stage_periods(stage_periods, plan: MeshPlan, cfg: ModelConfig):
@@ -129,7 +169,7 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      n_micro: int | None = None, optimizer: AdamW | None = None,
                      remat: bool = True, ce_chunk: int = 1024,
                      hoist_varying: bool = True, zero_opt: bool = False,
-                     stage_periods=None) -> TrainStep:
+                     stage_periods=None, shard_alloc=None) -> TrainStep:
     n_heads = cfg.attn.n_heads if cfg.attn is not None else (
         cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else cfg.d_model)
     model_axis = production_mesh.shape["model"]
@@ -138,12 +178,17 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                                  n_heads)
     plan = mesh_plan(production_mesh, stage)
     if n_micro is None:
+        if shard_alloc is not None:
+            raise ValueError("shard_alloc requires an explicit n_micro")
         n_micro = default_n_micro(cfg, plan, global_batch)
     if stage_periods is not None:
         stage_periods = _check_stage_periods(stage_periods, plan, cfg)
+    if shard_alloc is not None:
+        shard_alloc = _check_shard_alloc(shard_alloc, plan, n_micro,
+                                         global_batch, cfg)
     spec = TrainSpec(cfg=cfg, plan=plan, n_micro=n_micro, remat=remat,
                      ce_chunk=ce_chunk, hoist_varying=hoist_varying,
-                     stage_periods=stage_periods)
+                     stage_periods=stage_periods, shard_alloc=shard_alloc)
     return _assemble_train_step(cfg, production_mesh, spec, optimizer,
                                 zero_opt)
 
@@ -153,14 +198,30 @@ def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
                             hoist_varying: bool = True) -> TrainSpec:
     """Derive the static step configuration from a ``core.lowering``
     ``LoweredPlan`` (duck-typed: ``stage``/``n_micro``/``stage_periods``/
-    ``global_batch`` attributes), validating mesh feasibility."""
+    ``global_batch``/``micro_alloc`` attributes), validating mesh
+    feasibility.  A heterogeneous ``micro_alloc`` is collapsed to the
+    per-data-shard allocation the runtime executes
+    (``core.lowering.lower_micro_alloc``); a uniform one keeps the legacy
+    unpadded batch layout."""
     model_axis = production_mesh.shape["model"]
     if model_axis % lowered.stage:
         raise ValueError(f"stage count {lowered.stage} does not divide the "
                          f"mesh model axis {model_axis}")
     plan = mesh_plan(production_mesh, lowered.stage)
     dp = plan.dp_shards
-    if (lowered.global_batch % dp
+
+    shard_alloc = None
+    if getattr(lowered, "micro_alloc", None):
+        from repro.core.lowering import lower_micro_alloc
+        shard_alloc = lower_micro_alloc(lowered, dp)
+        if len(set(shard_alloc)) == 1:
+            shard_alloc = None           # uniform: no padding needed
+        else:
+            shard_alloc = _check_shard_alloc(shard_alloc, plan,
+                                            lowered.n_micro,
+                                            lowered.global_batch, cfg)
+    if shard_alloc is None and (
+            lowered.global_batch % dp
             or (lowered.global_batch // dp) % lowered.n_micro):
         raise ValueError(
             f"global batch {lowered.global_batch} not divisible into "
@@ -168,7 +229,7 @@ def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
     stage_periods = _check_stage_periods(lowered.stage_periods, plan, cfg)
     return TrainSpec(cfg=cfg, plan=plan, n_micro=lowered.n_micro, remat=remat,
                      ce_chunk=ce_chunk, hoist_varying=hoist_varying,
-                     stage_periods=stage_periods)
+                     stage_periods=stage_periods, shard_alloc=shard_alloc)
 
 
 def build_train_step_from_lowered(cfg: ModelConfig, production_mesh: Mesh,
@@ -209,14 +270,18 @@ def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
     def loss_fn(params, batch):
         return sharded_loss(params, batch)
 
+    def grad_fn(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
     def step_fn(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
+        (loss, metrics), grads = grad_fn(params, batch)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, loss, metrics
 
     param_shardings = named(mesh, pspecs)
     jit_loss = jax.jit(loss_fn, in_shardings=(param_shardings, named(mesh, bspecs)))
+    jit_grad = jax.jit(grad_fn, in_shardings=(param_shardings,
+                                              named(mesh, bspecs)))
     opt_sh = _opt_shardings(optimizer, abstract, param_shardings,
                             zero_sharding=zero_opt)
     jit_step = jax.jit(step_fn, in_shardings=(
@@ -224,7 +289,8 @@ def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
         out_shardings=(param_shardings, opt_sh, None, None))
 
     return TrainStep(spec=spec, mesh=mesh, param_specs=pspecs,
-                     batch_specs=bspecs, step_fn=jit_step, loss_fn=jit_loss)
+                     batch_specs=bspecs, step_fn=jit_step, loss_fn=jit_loss,
+                     grad_fn=jit_grad)
 
 
 def _zero_moment_shardings(abstract_params, param_shardings):

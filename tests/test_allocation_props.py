@@ -1,0 +1,134 @@
+"""Property tests for Algorithm 1 (``core.allocation``) and its lowering
+to data-shard coordinates (``core.lowering.lower_micro_alloc``).
+
+Pinned invariants, fuzzed over random heterogeneous clusters / layer ranges
+/ micro-batch sizes:
+
+1. allocations always sum to the micro-batch,
+2. no device ever exceeds its Eq. (3) memory cap,
+3. Phase 2 (StragglerWorkloadOffloading) never increases the straggler
+   latency over Phase 1 (MemoryAwareBalancing) alone,
+4. the lowered per-shard allocation partitions the micro-batch for any
+   data-axis width.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the 'test' extra")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.allocation import AllocationError, allocate_microbatch
+from repro.core.costmodel import kp_policy, stage_memory
+from repro.core.hardware import Cluster, DeviceProfile
+from repro.core.lowering import lower_micro_alloc
+from repro.core.profiler import LayerTable, Profile
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+from test_lowering import _lp_alloc
+
+pytestmark = pytest.mark.slow
+
+
+def _table(L=8):
+    cfg = ModelConfig(name="prop", n_layers=L, d_model=128, vocab_size=4000,
+                      d_ff=512,
+                      attn=AttentionConfig(n_heads=4, n_kv_heads=4,
+                                           head_dim=32),
+                      pattern=(LayerSpec(),))
+    return LayerTable.from_model_config(cfg, seq_len=64)
+
+
+TABLE = _table()
+
+devices = st.lists(
+    st.tuples(st.floats(0.5, 64.0),        # memory scale (GB)
+              st.floats(0.05, 4.0),        # TFLOP/s
+              st.floats(1.0, 32.0)),       # half-saturation batch
+    min_size=2, max_size=5)
+
+
+@st.composite
+def alloc_cases(draw):
+    devs = draw(devices)
+    cluster = Cluster(tuple(
+        DeviceProfile(f"d{i}", mem_bytes=m * 1e9, flops=f * 1e12,
+                      sat_batch=k)
+        for i, (m, f, k) in enumerate(devs)))
+    micro_batch = draw(st.integers(1, 32))
+    L = TABLE.L
+    i = draw(st.integers(0, L - 1))
+    j = draw(st.integers(i + 1, L))
+    P = draw(st.integers(1, 4))
+    k_p = kp_policy(P, draw(st.integers(0, P - 1)))
+    block = draw(st.integers(1, 4))
+    prof = Profile.analytic(TABLE, cluster, max_batch=micro_batch)
+    return prof, tuple(range(len(devs))), micro_batch, i, j, k_p, block
+
+
+@settings(max_examples=60, deadline=None)
+@given(alloc_cases())
+def test_allocation_invariants(case):
+    prof, group, micro_batch, i, j, k_p, block = case
+    try:
+        full = allocate_microbatch(prof, group, micro_batch, i, j, k_p,
+                                   block=block, offload=True)
+        phase1 = allocate_microbatch(prof, group, micro_batch, i, j, k_p,
+                                     block=block, offload=False)
+    except AllocationError:
+        return                           # memory-infeasible case: fine
+
+    for alloc in (full, phase1):
+        # 1. conservation
+        assert sum(alloc.y) == micro_batch
+        assert all(y >= 0 for y in alloc.y)
+        # 2. per-device Eq. (3) memory caps
+        for d, y in zip(group, alloc.y):
+            mem = stage_memory(prof.table, i, j, y, k_p)
+            assert mem <= prof.cluster.devices[d].mem_bytes
+        # Eq. (8): the reported stage times are the group maxima
+        assert alloc.ef == pytest.approx(
+            max(prof.t_fwd(d, y, i, j) for d, y in zip(group, alloc.y)))
+        assert alloc.eb == pytest.approx(
+            max(prof.t_bwd(d, y, i, j) for d, y in zip(group, alloc.y)))
+
+    # 3. offloading never increases the straggler latency
+    def straggler(y):
+        return max(prof.t_both(d, yy, i, j) for d, yy in zip(group, y))
+
+    assert straggler(full.y) <= straggler(phase1.y) + 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 16), min_size=1, max_size=6),
+                min_size=1, max_size=4),
+       st.integers(1, 8))
+def test_lowered_shard_alloc_partitions_micro_batch(allocs, dp):
+    """lower_micro_alloc partitions the micro-batch over any dp width, for
+    any combination of per-stage group sizes and allocations."""
+    mb = sum(allocs[0])
+    if mb == 0:
+        return
+    allocs = [tuple(a) for a in allocs]
+    # per-stage allocations must each sum to the micro-batch: rescale the
+    # drawn lists by largest remainder
+    norm = []
+    for a in allocs:
+        s = sum(a)
+        if s == 0:
+            a = tuple([mb] + [0] * (len(a) - 1))
+            s = mb
+        scaled = [y * mb / s for y in a]
+        base = [int(x) for x in scaled]
+        rem = mb - sum(base)
+        order = sorted(range(len(a)), key=lambda d: (base[d] - scaled[d], d))
+        for d in order[:rem]:
+            base[d] += 1
+        norm.append(tuple(base))
+    out = lower_micro_alloc(_lp_alloc(norm, mb), dp)
+    assert len(out) == dp
+    assert sum(out) == mb
+    assert min(out) >= 0
+    # stages that agree after projection lower exactly
+    if len(set(norm)) == 1 and len(norm[0]) == dp:
+        assert out == norm[0]

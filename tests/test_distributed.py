@@ -48,6 +48,15 @@ def test_train_planned_lowering():
 
 
 @pytest.mark.slow
+def test_train_hetero_allocation():
+    """Heterogeneous intra-stage allocation (Algorithm 1) executed by the
+    runtime: y=(3,1) on the 2-wide data axis (padded to B_max with validity
+    masks) — loss parity vs the single-device reference and gradient parity
+    vs the uniform-allocation baseline on the same global batch."""
+    _run(["--hetero", "phi3-mini-3.8b"])
+
+
+@pytest.mark.slow
 def test_replay_session():
     """Live pipeline replay (runtime.session): kill a rank mid-training,
     recover through lightweight replay + param migration, keep training —

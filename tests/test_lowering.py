@@ -4,16 +4,19 @@ tests/test_distributed.py::test_train_planned_lowering)."""
 
 import dataclasses
 
+import numpy as np
 import pytest
 
 from repro.core.costmodel import kp_policy
 from repro.core.hardware import env_b, env_d
-from repro.core.lowering import (LoweringError, check_against_simulator,
+from repro.core.lowering import (LoweredPlan, LoweringError,
+                                 check_against_simulator, lower_micro_alloc,
                                  lower_plan)
 from repro.core.planner import plan_gpipe, plan_hpp
 from repro.core.profiler import LayerTable, Profile
 from repro.core.schedule import max_inflight, schedule_orders
 from repro.core.simulator import simulate
+from repro.data import pack_batch, pack_indices
 from repro.models import AttentionConfig, LayerSpec, ModelConfig
 
 
@@ -123,6 +126,119 @@ def test_warmup_mismatch_raises(setup):
             dataclasses.replace(st, k_p=st.k_p + 1) for st in plan.stages))
     with pytest.raises(LoweringError):
         lower_plan(bad, cfg)
+
+
+def _lp_alloc(micro_alloc, micro_batch):
+    """Minimal LoweredPlan carrying only allocation structure."""
+    P = len(micro_alloc)
+    return LoweredPlan(
+        arch="t", stage=P, n_micro=4, micro_batch=micro_batch,
+        global_batch=4 * micro_batch, n_periods=P,
+        stage_periods=tuple((p, p + 1) for p in range(P)),
+        stage_layers=tuple((0, 0) for _ in range(P)),
+        device_groups=tuple(tuple(range(len(a))) for a in micro_alloc),
+        micro_alloc=tuple(tuple(a) for a in micro_alloc),
+        warmup=tuple(kp_policy(P, p) for p in range(P)))
+
+
+def test_lower_micro_alloc_direct_and_blocks():
+    # group size == dp: exact
+    assert lower_micro_alloc(_lp_alloc([(3, 1), (3, 1)], 4), 2) == (3, 1)
+    # group larger than dp: contiguous device blocks aggregate
+    assert lower_micro_alloc(_lp_alloc([(2, 1, 1)], 4), 2) == (2, 2)
+    assert lower_micro_alloc(_lp_alloc([(4, 1, 1, 0)], 6), 2) == (5, 1)
+    # group smaller than dp: a device's share splits across its shards
+    assert lower_micro_alloc(_lp_alloc([(5,)], 5), 2) == (3, 2)
+    assert lower_micro_alloc(_lp_alloc([(4, 2)], 6), 4) == (2, 2, 1, 1)
+
+
+def test_lower_micro_alloc_disagreeing_stages():
+    # disagreeing stages: largest-remainder rounding of the mean, still
+    # summing to the micro-batch
+    out = lower_micro_alloc(_lp_alloc([(4, 0), (2, 2)], 4), 2)
+    assert sum(out) == 4 and out == (3, 1)
+    out = lower_micro_alloc(_lp_alloc([(3, 1), (1, 3)], 4), 2)
+    assert sum(out) == 4 and out == (2, 2)
+    # agreement after projection collapses exactly
+    assert lower_micro_alloc(_lp_alloc([(2, 2), (2, 1, 1)], 4), 2) == (2, 2)
+
+
+def test_lower_micro_alloc_sum_preserved():
+    # explicit cases; the hypothesis suite fuzzes this in
+    # tests/test_allocation_props.py
+    for allocs, dp in [
+            ([(7, 3, 2), (6, 4, 2)], 4),
+            ([(1, 1, 1)], 2),
+            ([(5, 0), (0, 5)], 3),
+    ]:
+        mb = sum(allocs[0])
+        out = lower_micro_alloc(_lp_alloc(allocs, mb), dp)
+        assert len(out) == dp and sum(out) == mb and min(out) >= 0
+
+
+def test_pack_batch_round_trip():
+    """Every input sample appears exactly once at its indexed slot; padding
+    slots are zero; valid counts match the allocation."""
+    alloc, M = (3, 1), 4
+    mb, b_max = sum(alloc), max(alloc)
+    B = M * mb
+    batch = {"tokens": np.arange(B * 5, dtype=np.int32).reshape(B, 5) + 1}
+    out = pack_batch(batch, alloc, M)
+    idx, valid = pack_indices(alloc, M)
+    assert out["tokens"].shape == (len(alloc) * M * b_max, 5)
+    assert valid.sum() == B
+    got = out["tokens"].reshape(len(alloc), M, b_max, 5)
+    seen = []
+    for d in range(len(alloc)):
+        for m in range(M):
+            for b in range(b_max):
+                if valid[d, m, b]:
+                    assert (got[d, m, b] == batch["tokens"][idx[d, m, b]]).all()
+                    seen.append(idx[d, m, b])
+                else:
+                    assert (got[d, m, b] == 0).all()
+    assert sorted(seen) == list(range(B))
+    # micro-batch m draws exactly from input rows [m*mb, (m+1)*mb)
+    for m in range(M):
+        rows = sorted(idx[d, m, b] for d in range(len(alloc))
+                      for b in range(b_max) if valid[d, m, b])
+        assert rows == list(range(m * mb, (m + 1) * mb))
+
+
+def test_pack_batch_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        pack_batch({"tokens": np.zeros((7, 2))}, (3, 1), 2)
+    with pytest.raises(ValueError):
+        pack_indices((0, 0), 2)
+
+
+def test_eq8_stale_steps_raise(setup):
+    """check_against_simulator rejects a plan whose step times went stale
+    against its allocations (Eq. 8 consistency)."""
+    cfg, prof, plan = setup
+    low = lower_plan(plan, cfg)
+    steps = tuple(
+        dataclasses.replace(s, ef=s.ef * 1.5) if s.kind == "exec" else s
+        for s in plan.steps)
+    bad = dataclasses.replace(plan, steps=steps)
+    with pytest.raises(AssertionError):
+        check_against_simulator(low, bad, prof)
+
+
+def test_simulator_device_busy_scales_with_allocation(setup):
+    """Per-device busy time is M * (t_f + t_b) at the device's allocated
+    sample count, bounded by the stage's lockstep busy time."""
+    cfg, prof, plan = setup
+    sim = simulate(plan, prof)
+    M = plan.n_micro
+    assert set(sim.device_busy) == {d for st in plan.stages for d in st.group}
+    for p, st in enumerate(plan.stages):
+        i, j = st.layers
+        for d, y in zip(st.group, st.alloc):
+            t_dev = M * (prof.t_fwd(d, y, i, j) + prof.t_bwd(d, y, i, j))
+            assert sim.device_busy[d] == pytest.approx(t_dev)
+            assert sim.device_busy[d] <= sim.stage_busy[p] * (1 + 1e-9)
+            assert 0.0 <= sim.device_util(d) <= 1.0
 
 
 def test_heterogeneous_cluster_envs(setup):
