@@ -6,11 +6,15 @@ ResNet-50 / BERT-small.
 
 ``run_structured`` additionally emits machine-readable records — the
 Table 4 planner throughputs, the Fig. 15a intra-stage-planning ablation
-(Algorithm 1 Phase 2 on/off, predicted), and a *measured* ablation on the
+(Algorithm 1 Phase 2 on/off, predicted), a *measured* ablation on the
 real shard_map runtime (``repro.launch.train --plan [--no-offload]`` in a
-subprocess with 8 host devices) — which ``benchmarks/run.py`` writes to
-``BENCH_throughput.json`` so the throughput trajectory is recorded across
-PRs (CI artifact).
+subprocess with 8 host devices), and the ``profile_gap`` suite (the host
+is profiled for real via ``repro.launch.profile.measure_model`` and plans
+made on the analytic vs the measured profile are both evaluated against
+the measured times — quantifying what measured profiling buys) — which
+``benchmarks/run.py`` writes to ``BENCH_throughput.json`` so the
+throughput trajectory is recorded across PRs (CI artifact).  See
+benchmarks/README.md for the record schemas.
 """
 
 from __future__ import annotations
@@ -119,6 +123,46 @@ def _runtime_ablation(quick: bool):
     return lines, records
 
 
+def _profile_gap(quick: bool):
+    """Predicted-vs-measured latency gap, for both profile sources.
+
+    The host is profiled for real (jitted per-layer sweeps, replicated to a
+    4-device virtual cluster); one plan is made on the *analytic* model of
+    those same devices (effective FLOP rate, Fig. 6 efficiency curve) and
+    one on the *measured* tables.  Both are re-priced and simulated on the
+    measured profile — the gap of the analytic plan is the misprediction
+    that measured profiling removes (cf. AccEPT's observation that analytic
+    edge estimates diverge on real devices).
+    """
+    from repro.configs import get_smoke_config
+    from repro.core.profiler import LayerTable, Profile
+    from repro.core.simulator import prediction_gap
+    from repro.launch.profile import measure_model
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    seq, B, mb, max_batch = 64, 8, 2, 8
+    mp = measure_model(cfg, seq, batch_sizes=(1, 2, 4),
+                       repeats=1 if quick else 3, replicate=4)
+    table = LayerTable.from_model_config(cfg, seq)
+    measured = mp.to_profile(table, max_batch)
+    analytic = Profile.analytic(table, measured.cluster, max_batch)
+
+    lines, records = [], []
+    for src, prof in (("analytic", analytic), ("measured", measured)):
+        plan = plan_hpp(prof, B, mb, arch=cfg.name)
+        gap = prediction_gap(plan, measured)
+        lines.append(row(
+            f"profile_gap/{src}", plan.latency,
+            predicted_s=f"{gap['predicted_s']:.4f}",
+            measured_s=f"{gap['reference_s']:.4f}",
+            gap=f"{gap['gap_ratio']:.2f}x",
+            stages=len(plan.stages)))
+        records.append({"suite": "profile_gap", "planned_on": src,
+                        "arch": cfg.name, "seq": seq, "global_batch": B,
+                        "stages": len(plan.stages), **gap})
+    return lines, records
+
+
 def run_structured(quick: bool = False, runtime: bool = True):
     models = ALL_MODELS[:1] if quick else ALL_MODELS
     envs = ENVS[:1] if quick else ENVS
@@ -130,6 +174,9 @@ def run_structured(quick: bool = False, runtime: bool = True):
         l3, r3 = _runtime_ablation(quick)
         lines += l3
         records += r3
+    l4, r4 = _profile_gap(quick)
+    lines += l4
+    records += r4
     return lines, records
 
 

@@ -7,8 +7,11 @@ Prints ``name,us_per_call,derived`` CSV.  Usage:
 
 The fault suite (fig16) additionally writes a machine-readable
 ``BENCH_fault.json`` (recovery times + post-recovery throughput for
-lightweight vs heavy) so the perf trajectory is recorded across PRs;
-``--quick`` runs it on the coarse layer table (CI-friendly).
+lightweight vs heavy) and the throughput suite (table4) writes
+``BENCH_throughput.json`` (Table 4 + Fig. 15a variants + the measured
+runtime ablation + the profile_gap predicted-vs-measured records) so the
+perf trajectory is recorded across PRs; ``--quick`` runs CI-friendly
+sizes.  Record schemas: benchmarks/README.md.
 """
 
 from __future__ import annotations

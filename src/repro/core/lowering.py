@@ -28,10 +28,10 @@ ppermute pipeline.
 ``plan_to_train_step`` then builds the runnable distributed train step, and
 ``check_against_simulator`` cross-checks the lowered schedule against the
 discrete-event simulator: per-stage op counts, the unit-cost makespan in
-ticks, and the O(K_p) resident-activation bound (DESIGN.md §2–3).
+ticks, and the O(K_p) resident-activation bound (DESIGN.md §2, §4).
 
 The *replay* half of the module makes a lowered pipeline re-lowerable while
-training (DESIGN.md §6): ``relower`` lowers a replacement ``Plan`` against
+training (DESIGN.md §7): ``relower`` lowers a replacement ``Plan`` against
 an existing ``LoweredPlan``'s runtime, ``migrate_params`` /
 ``migrate_opt_state`` re-arrange the stacked period params (and optimizer
 moments, with the same index map) from the old stage split to the new one,
@@ -175,6 +175,11 @@ def lower_plan(plan: Plan, cfg, model_axis: int | None = None) -> LoweredPlan:
 
     ``model_axis``: size of the production mesh's model axis; when given the
     stage count must divide it (tp = model_axis / stage).
+
+    Validates the plan's internal contract before anything compiles: stage
+    ranges contiguous, per-stage warm-ups equal to the schedule's
+    ``kp_policy`` K_p (the Eq. 3 memory bound assumes them), allocations
+    summing to the micro-batch, ``n_micro * micro_batch == global_batch``.
     """
     P = len(plan.stages)
     if model_axis is not None and model_axis % P != 0:
@@ -245,8 +250,9 @@ def _project_alloc(alloc: tuple[int, ...], dp: int) -> tuple[int, ...]:
 
 
 def lower_micro_alloc(lowered: LoweredPlan, dp_shards: int) -> tuple[int, ...]:
-    """Collapse the plan's per-stage device allocations into the single
-    per-data-shard sample allocation the shard_map runtime executes.
+    """Collapse the plan's per-stage device allocations (Algorithm 1 /
+    Eq. 9) into the single per-data-shard sample allocation the shard_map
+    runtime executes.
 
     In mesh coordinates every stage's intra-stage group is the *same* set of
     ``dp_shards`` data columns (the mesh is rectangular), and the circular

@@ -28,6 +28,14 @@ from .profiler import Profile
 
 @dataclasses.dataclass(frozen=True)
 class StagePlan:
+    """One pipeline stage of a ``Plan``: the unit Algorithms 1+2 decide.
+
+    ``alloc`` is Algorithm 1's heterogeneous intra-stage micro-batch split
+    (Eq. 9 capacity-proportional, Eq. 3 memory-capped); ``k_p`` is the
+    1F1B warm-up depth ``2(P-p)-1`` that bounds resident activations
+    (Eq. 3, DESIGN.md §4).
+    """
+
     layers: tuple[int, int]        # [i, j)
     group: tuple[int, ...]         # device ranks (into profile.cluster order)
     alloc: tuple[int, ...]         # micro-batch samples per device
@@ -36,6 +44,16 @@ class StagePlan:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
+    """A complete HPP training configuration (Algorithm 2 output).
+
+    ``steps`` interleave exec and comm ``costmodel.Step``s in pipeline
+    order; ``latency`` is the HPP-Round estimate from Eqs. (4)–(6) on the
+    profile the plan was made with (``core.simulator.prediction_gap``
+    re-prices it under another profile, e.g. measured).  Consumed by
+    ``core.lowering.lower_plan`` (execution) and ``core.replay`` (failure
+    recovery).
+    """
+
     arch: str
     stages: tuple[StagePlan, ...]
     steps: tuple[Step, ...]
@@ -51,9 +69,11 @@ class Plan:
 
     @property
     def throughput(self) -> float:
+        """Training throughput estimate (samples/s): B / T_round (Eq. 4)."""
         return self.global_batch / self.latency if self.latency > 0 else 0.0
 
     def memory_per_device(self, profile: Profile) -> dict[int, float]:
+        """Eq. (3) peak bytes per device rank under this plan's K_p."""
         out = {}
         for st in self.stages:
             for d, y in zip(st.group, st.alloc):
@@ -77,6 +97,8 @@ class Plan:
 
 def _comm_step(profile: Profile, micro_batch: int, boundary_layer: int,
                g_left, g_right) -> Step:
+    """Inter-stage activation transfer: one micro-batch's boundary tensor
+    over the slowest link between the two device groups."""
     nbytes = micro_batch * profile.table.boundary_act(boundary_layer)
     bw = min(profile.cluster.bw(a, b) for a in g_left for b in g_right)
     t = nbytes / bw
@@ -87,11 +109,20 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
              max_stages: int | None = None, arch: str = "",
              check_memory: bool = True, intra_opt: bool = True,
              allowed_stages=None) -> Plan:
-    """Run Algorithm 2.  Returns the best plan over p in [1, max_stages].
+    """Run Algorithm 2: DP over ``Q(l, n, p)`` with the Eq. 10 transition.
+
+    Each candidate head stage is priced by Algorithm 1
+    (``allocate_microbatch``: Eq. 8 lockstep stage time at the Eq. 9
+    allocation, Eq. 3 memory-feasible given warm-up depth ``kp_policy``)
+    and the extended pipeline re-evaluated with the full HPP-Round latency
+    (Eqs. 4–6) rather than only the Eq. 11 dominant step.  ``profile`` may
+    be analytic or measured — the DP only ever reads the prefix-sum time
+    tables.
 
     ``allowed_stages``: optional collection restricting the final stage
     count (e.g. divisors of a runtime mesh's model axis, so the plan can be
-    lowered — see ``core.lowering``)."""
+    lowered — see ``core.lowering``).  ``intra_opt=False`` disables
+    Algorithm 1 Phase 2 (straggler offloading) — the Fig. 15a ablation."""
     t_start = time.perf_counter()
     table = profile.table
     L, N = table.L, len(profile.cluster.devices)
@@ -183,7 +214,12 @@ def _stages_from_steps(steps, P: int) -> tuple[StagePlan, ...]:
 def auto_microbatch(profile: Profile, global_batch: int,
                     candidates=(1, 2, 4, 8, 16, 32, 64), arch: str = "",
                     **kw) -> Plan:
-    """Sweep micro-batch sizes; return the fastest feasible plan."""
+    """Sweep micro-batch sizes; return the fastest feasible plan.
+
+    The paper fixes the micro-batch per experiment; this outer sweep makes
+    the trade explicit — smaller micro-batches shrink bubbles (Eq. 6) but
+    pay more per-layer launch overhead and lower batch efficiency
+    (Fig. 6), and Eq. 3 memory feasibility can cut either way."""
     best = None
     for mb in candidates:
         if global_batch % mb:
@@ -207,11 +243,14 @@ def auto_microbatch(profile: Profile, global_batch: int,
 def plan_dp(profile: Profile, global_batch: int, micro_batch: int,
             arch: str = "", heterogeneous: bool = True,
             overlap: bool = True) -> Plan:
-    """Pure data parallelism (EDDL-style when heterogeneous=True).
+    """Pure data parallelism (EDDL-style when heterogeneous=True) — the
+    paper's DP baseline in Table 4 / Fig. 13.
 
-    ``overlap``: DDP-style bucketed gradient AllReduce overlapped with the
-    backward pass (the AllReduce only charges the part the backward can't
-    hide) — without this the DP baseline would be unrealistically weak."""
+    One stage spanning all layers on every device; latency is Eq. 4 with a
+    single exec step and the Eq. 5 full-model AllReduce.  ``overlap``:
+    DDP-style bucketed gradient AllReduce overlapped with the backward
+    pass (the AllReduce only charges the part the backward can't hide) —
+    without this the DP baseline would be unrealistically weak."""
     t0 = time.perf_counter()
     table = profile.table
     N = len(profile.cluster.devices)
@@ -241,7 +280,9 @@ def plan_dp(profile: Profile, global_batch: int, micro_batch: int,
 def plan_gpipe(profile: Profile, global_batch: int, micro_batch: int,
                arch: str = "", n_stages: int | None = None) -> Plan:
     """GPipe-style PP: equal-FLOPs contiguous split, one device per stage,
-    ignores boundary activation sizes (the paper's PP baseline)."""
+    ignores boundary activation sizes and device heterogeneity (the
+    paper's PP baseline in Table 4) — its Eq. 11 dominant step is whatever
+    stage happens to land on the slowest device."""
     t0 = time.perf_counter()
     table = profile.table
     N = len(profile.cluster.devices)
@@ -278,7 +319,11 @@ def plan_homogeneous_hpp(profile: Profile, global_batch: int, micro_batch: int,
                          name: str = "pipedream") -> Plan:
     """PipeDream / Dapple-style planning: treats the cluster as homogeneous
     (mean capacity), ignores per-device memory budgets; Dapple additionally
-    models the synchronous AllReduce cost (include_allreduce=True)."""
+    models the synchronous AllReduce cost (include_allreduce=True).
+
+    The chosen configuration is then re-priced on the REAL heterogeneous
+    profile (Eq. 8 at the actual device times) — the gap between the two
+    is what deploying a homogeneity-assuming plan costs (Fig. 13)."""
     import numpy as np
 
     from .hardware import Cluster, DeviceProfile
@@ -317,7 +362,8 @@ def plan_hetpipe_hdp(profile: Profile, global_batch: int, micro_batch: int,
                      arch: str = "", n_groups: int = 2):
     """HetPipe-style HDP: devices split into virtual workers (intra-group PP,
     inter-group DP through a parameter server).  Returns (per-round latency,
-    comm volume per Eq. 1) for the comparison benchmarks."""
+    comm volume per Eq. 1) for the Table 2 comm-volume comparison — the
+    bidirectional full-model PS sync is the term Eq. 2's HPP avoids."""
     from .costmodel import hdp_volume
 
     table = profile.table

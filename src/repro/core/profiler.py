@@ -1,6 +1,6 @@
 """Asteroid Profiler (§3.3): per-layer sizes and per-(device, batch) times.
 
-Two construction paths:
+Three construction paths:
 
 * ``LayerTable.from_model_config`` — analytic per-layer FLOPs/bytes derived
   from a ``repro.models.ModelConfig`` (every assigned architecture), plus
@@ -8,26 +8,46 @@ Two construction paths:
 * ``measure_layer_times`` — a *real* profiler that executes jitted layer
   functions on the local device across a batch-size sweep (used on CPU in
   tests/examples; on a Jetson it would profile the real board — same code).
+* ``MeasuredProfile`` — the serializable artifact produced by
+  ``repro.launch.profile``: raw measured ``(tf, tb)`` sweeps per device plus
+  the cluster/config fingerprints needed to decide whether the measurement
+  is still valid.  ``save_profile``/``load_profile`` round-trip it through
+  versioned JSON bit-exactly; ``MeasuredProfile.to_profile`` densifies the
+  sweeps into ``Profile.measured`` tables for the planner.
 
 The planner consumes a ``Profile``: cumulative per-layer time tables
 ``t_f/t_b [device][beta][layer]`` with prefix sums so any layer-range cost
-is O(1).
+is O(1).  ``Profile.source`` records which path built it ("analytic" or
+"measured") so downstream reporting (``core.simulator.prediction_gap``,
+``BENCH_throughput.json``) can attribute prediction error to the profile.
+
+See DESIGN.md §3 (Measured profiling) for the JSON schema, fingerprinting,
+and staleness rules.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import time
 from typing import Callable, Sequence
 
 import numpy as np
 
-from .hardware import Cluster, DeviceProfile
+from .hardware import MBPS_1000, Cluster, DeviceProfile
 
 BWD_FLOP_RATIO = 2.0           # backward ~= 2x forward FLOPs
 GRAD_BYTES = 4                 # accumulated grads fp32
 PARAM_BYTES = 4
 ACT_BYTES = 4
+
+PROFILE_SCHEMA = "asteroid-profile"
+PROFILE_VERSION = 1
+
+
+class ProfileError(ValueError):
+    """A profile artifact or sample table is malformed or incompatible."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +124,7 @@ class Profile:
     max_batch: int
     tf_prefix: np.ndarray      # (D, max_batch+1, L+1)
     tb_prefix: np.ndarray
+    source: str = "analytic"   # "analytic" | "measured" (provenance only)
 
     # -- range queries ---------------------------------------------------
     def t_fwd(self, dev: int, beta: int, i: int, j: int) -> float:
@@ -140,13 +161,36 @@ class Profile:
     @staticmethod
     def measured(table: LayerTable, cluster: Cluster, max_batch: int,
                  tf_samples: np.ndarray, tb_samples: np.ndarray) -> "Profile":
-        """From measured per-layer times: samples (D, max_batch+1, L)."""
-        D, _, L = tf_samples.shape
+        """From measured per-layer times: samples (D, max_batch+1, L).
+
+        Every device's table must cover every batch size up to ``max_batch``
+        (row ``beta`` holds the per-layer times at batch ``beta``; row 0 is
+        zero).  A shape mismatch raises ``ProfileError`` up front instead of
+        the planner later hitting a silent out-of-range index/broadcast
+        fault mid-DP.
+        """
+        D, L = len(cluster.devices), table.L
+        want = (D, max_batch + 1, L)
+        arrs = []
+        for name, s in (("tf_samples", tf_samples), ("tb_samples", tb_samples)):
+            s = np.asarray(s, dtype=np.float64)
+            if s.shape != want:
+                raise ProfileError(
+                    f"{name} shape {s.shape} does not cover the profile: "
+                    f"need (devices={D}, batch rows=max_batch+1={max_batch + 1}, "
+                    f"layers={L}) — every device's sample table must cover "
+                    f"batch sizes 0..{max_batch} for all {L} layers of "
+                    f"{table.name!r}")
+            if not np.isfinite(s).all() or (s < 0).any():
+                raise ProfileError(
+                    f"{name} contains negative or non-finite layer times")
+            arrs.append(s)
+        tf_samples, tb_samples = arrs
         tf = np.zeros((D, max_batch + 1, L + 1))
         tb = np.zeros((D, max_batch + 1, L + 1))
         tf[:, :, 1:] = np.cumsum(tf_samples, axis=2)
         tb[:, :, 1:] = np.cumsum(tb_samples, axis=2)
-        return Profile(table, cluster, max_batch, tf, tb)
+        return Profile(table, cluster, max_batch, tf, tb, source="measured")
 
 
 # ---------------------------------------------------------------------------
@@ -191,3 +235,259 @@ def measure_layer_times(layer_fns: Sequence[Callable], make_input: Callable,
 def jnp_ones_like(x):
     import jax.numpy as jnp
     return jnp.ones_like(x)
+
+
+# ---------------------------------------------------------------------------
+# Measured-profile artifact: fingerprints, serialization, densification
+# ---------------------------------------------------------------------------
+
+
+def config_fingerprint(cfg, seq_len: int) -> str:
+    """Stable hash of everything that shapes the layer table.
+
+    Covers the full ``ModelConfig`` (nested dataclasses stringified) plus
+    the sequence length — a measured profile is only valid for the exact
+    (model, seq_len) it profiled, because per-layer times scale with both.
+    """
+    blob = json.dumps({"cfg": dataclasses.asdict(cfg), "seq_len": seq_len},
+                      sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def device_fingerprint() -> str:
+    """Hash of the local JAX device the measurement would run on.
+
+    Platform + device kind + process count: enough to detect "this artifact
+    was measured on different hardware", without being so strict that a
+    rebuild of the same container — or forcing extra *virtual* host devices
+    with ``--xla_force_host_platform_device_count`` (the sweep always runs
+    on one local device per process) — invalidates it.
+    """
+    import jax
+
+    dev = jax.local_devices()[0]
+    blob = json.dumps({
+        "platform": dev.platform,
+        "device_kind": getattr(dev, "device_kind", ""),
+        "processes": jax.process_count(),
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredProfile:
+    """A measured on-device profile, as serialized by ``save_profile``.
+
+    Holds the *raw* per-device sweeps — ``tf/tb[d, bi, l]`` is the measured
+    forward/backward wall-clock of layer ``l`` on device ``d`` at batch size
+    ``batch_sizes[bi]`` — plus the metadata needed to (a) rebuild a planner
+    ``Profile`` (``to_profile``) and (b) decide whether the measurement
+    still describes the current model and hardware
+    (``compatibility_issues``).
+    """
+
+    arch: str                          # cfg.name at measurement time
+    seq_len: int
+    batch_sizes: tuple[int, ...]       # ascending swept batch sizes
+    layer_names: tuple[str, ...]       # one per LayerTable entry
+    tf: np.ndarray                     # (D, len(batch_sizes), L) seconds
+    tb: np.ndarray
+    device_names: tuple[str, ...]      # one per profiled (virtual) device
+    config_hash: str                   # config_fingerprint(cfg, seq_len)
+    device_hash: str                   # device_fingerprint() at measurement
+    mem_bytes: tuple[float, ...]       # per-device memory budget u_d
+    est_flops: tuple[float, ...]       # effective FLOP/s at the largest batch
+    bandwidth: float = MBPS_1000       # assumed D2D bandwidth (bytes/s)
+    repeats: int = 1
+    meta: dict = dataclasses.field(default_factory=dict)
+    version: int = PROFILE_VERSION
+
+    @property
+    def D(self) -> int:
+        return len(self.device_names)
+
+    @property
+    def L(self) -> int:
+        return len(self.layer_names)
+
+    def __post_init__(self):
+        want = (self.D, len(self.batch_sizes), self.L)
+        for name, a in (("tf", self.tf), ("tb", self.tb)):
+            if a.shape != want:
+                raise ProfileError(f"{name} shape {a.shape} != {want} "
+                                   f"(devices, batch_sizes, layers)")
+        if list(self.batch_sizes) != sorted(set(self.batch_sizes)) or \
+                (self.batch_sizes and self.batch_sizes[0] < 1):
+            raise ProfileError(
+                f"batch_sizes must be ascending positive ints, got "
+                f"{self.batch_sizes}")
+        if len(self.mem_bytes) != self.D or len(self.est_flops) != self.D:
+            raise ProfileError("per-device metadata length != device count")
+
+    # -- planner-facing views ------------------------------------------------
+
+    def cluster(self) -> Cluster:
+        """The measured devices as a planner ``Cluster``.
+
+        ``flops`` is the *effective* rate observed at the largest measured
+        batch (not a datasheet peak), and the Fig. 6 saturation constants
+        are zeroed — so ``Profile.analytic`` on this cluster is the classic
+        linear FLOP model calibrated to the same hardware (total forward
+        time at the calibration batch matches the measurement exactly).
+        The residual error ``core.simulator.prediction_gap`` reports is
+        then precisely the per-layer / per-batch structure only a measured
+        profile captures.
+        """
+        devs = tuple(
+            DeviceProfile(name, mem_bytes=self.mem_bytes[d],
+                          flops=self.est_flops[d], sat_batch=0.0,
+                          sat_flops=0.0, overhead=0.0)
+            for d, name in enumerate(self.device_names))
+        return Cluster(devs, bandwidth=self.bandwidth)
+
+    def densify(self, max_batch: int) -> tuple[np.ndarray, np.ndarray]:
+        """Fill the swept batch sizes out to ``(D, max_batch+1, L)`` tables.
+
+        Linear interpolation between measured batch sizes, constant
+        extension below the smallest (launch overhead dominates there), and
+        linear extrapolation above the largest using the last segment's
+        slope.  The result is clamped non-negative and made monotone
+        non-decreasing in beta, preserving the Fig. 6 shape the allocation
+        search (Algorithm 1) relies on.
+        """
+        if max_batch < 1:
+            raise ProfileError(f"max_batch must be >= 1, got {max_batch}")
+        bs = np.asarray(self.batch_sizes, dtype=np.float64)
+        betas = np.arange(1, max_batch + 1, dtype=np.float64)
+        out = []
+        for raw in (self.tf, self.tb):
+            dense = np.zeros((self.D, max_batch + 1, self.L))
+            for d in range(self.D):
+                for l in range(self.L):
+                    y = raw[d, :, l]
+                    vals = np.interp(betas, bs, y)
+                    if len(bs) >= 2 and max_batch > bs[-1]:
+                        slope = (y[-1] - y[-2]) / (bs[-1] - bs[-2])
+                        hi = betas > bs[-1]
+                        vals[hi] = y[-1] + slope * (betas[hi] - bs[-1])
+                    vals = np.maximum.accumulate(np.maximum(vals, 0.0))
+                    dense[d, 1:, l] = vals
+            out.append(dense)
+        return out[0], out[1]
+
+    def to_profile(self, table: LayerTable, max_batch: int,
+                   sort_by_memory: bool = True) -> Profile:
+        """Densify into a planner ``Profile`` over ``table``.
+
+        ``sort_by_memory`` applies the planner's descending-memory device
+        preorder (§3.3) to the *measured rows and the cluster together*, so
+        device rank d in the returned profile is the same physical device
+        in both.
+        """
+        if table.L != self.L or tuple(l.name for l in table.layers) != \
+                self.layer_names:
+            raise ProfileError(
+                f"layer table {table.name!r} ({table.L} layers) does not "
+                f"match the measured layers {list(self.layer_names)}")
+        tf_s, tb_s = self.densify(max_batch)
+        cluster = self.cluster()
+        if sort_by_memory:
+            order = sorted(range(self.D),
+                           key=lambda i: (-cluster.devices[i].mem_bytes,
+                                          -cluster.devices[i].flops))
+            cluster = Cluster(tuple(cluster.devices[i] for i in order),
+                              cluster.bandwidth, cluster.bw_matrix)
+            tf_s, tb_s = tf_s[order], tb_s[order]
+        return Profile.measured(table, cluster, max_batch, tf_s, tb_s)
+
+    # -- staleness / compatibility ------------------------------------------
+
+    def compatibility_issues(self, cfg, seq_len: int,
+                             check_device: bool = True) -> list[str]:
+        """Human-readable reasons this artifact should NOT be used.
+
+        Empty list == compatible.  Checks the model-config + seq_len
+        fingerprint and (optionally) the local device fingerprint; callers
+        are expected to fall back to ``Profile.analytic`` with a warning
+        when issues are reported.
+        """
+        issues = []
+        if self.version > PROFILE_VERSION:
+            issues.append(f"artifact version {self.version} is newer than "
+                          f"supported {PROFILE_VERSION}")
+        want = config_fingerprint(cfg, seq_len)
+        if want != self.config_hash:
+            issues.append(
+                f"model/seq fingerprint mismatch: artifact profiled "
+                f"{self.arch!r} at seq_len={self.seq_len} "
+                f"(hash {self.config_hash}), current is {cfg.name!r} at "
+                f"seq_len={seq_len} (hash {want})")
+        if check_device:
+            cur = device_fingerprint()
+            if cur != self.device_hash:
+                issues.append(
+                    f"device fingerprint mismatch: artifact measured on "
+                    f"{self.device_hash}, current host is {cur} — re-run "
+                    f"repro.launch.profile on this host")
+        return issues
+
+
+def save_profile(path: str, mp: MeasuredProfile) -> None:
+    """Serialize a ``MeasuredProfile`` to versioned JSON.
+
+    Floats go through Python ``repr`` (the json encoder), which round-trips
+    IEEE-754 doubles exactly — ``load_profile(save_profile(mp))`` is
+    bit-identical, pinned by tests.
+    """
+    doc = {
+        "schema": PROFILE_SCHEMA,
+        "version": mp.version,
+        "arch": mp.arch,
+        "seq_len": mp.seq_len,
+        "batch_sizes": list(mp.batch_sizes),
+        "layer_names": list(mp.layer_names),
+        "device_names": list(mp.device_names),
+        "config_hash": mp.config_hash,
+        "device_hash": mp.device_hash,
+        "mem_bytes": list(mp.mem_bytes),
+        "est_flops": list(mp.est_flops),
+        "bandwidth": mp.bandwidth,
+        "repeats": mp.repeats,
+        "meta": mp.meta,
+        "tf": np.asarray(mp.tf, np.float64).tolist(),
+        "tb": np.asarray(mp.tb, np.float64).tolist(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def load_profile(path: str) -> MeasuredProfile:
+    """Parse a ``save_profile`` artifact, validating schema and shapes."""
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ProfileError(f"{path}: not valid JSON ({e})") from e
+    if doc.get("schema") != PROFILE_SCHEMA:
+        raise ProfileError(
+            f"{path}: schema {doc.get('schema')!r} != {PROFILE_SCHEMA!r}")
+    missing = [k for k in ("version", "arch", "seq_len", "batch_sizes",
+                           "layer_names", "device_names", "config_hash",
+                           "device_hash", "mem_bytes", "est_flops", "tf",
+                           "tb") if k not in doc]
+    if missing:
+        raise ProfileError(f"{path}: missing keys {missing}")
+    return MeasuredProfile(
+        arch=doc["arch"], seq_len=int(doc["seq_len"]),
+        batch_sizes=tuple(int(b) for b in doc["batch_sizes"]),
+        layer_names=tuple(doc["layer_names"]),
+        tf=np.asarray(doc["tf"], np.float64),
+        tb=np.asarray(doc["tb"], np.float64),
+        device_names=tuple(doc["device_names"]),
+        config_hash=doc["config_hash"], device_hash=doc["device_hash"],
+        mem_bytes=tuple(float(m) for m in doc["mem_bytes"]),
+        est_flops=tuple(float(x) for x in doc["est_flops"]),
+        bandwidth=float(doc.get("bandwidth", MBPS_1000)),
+        repeats=int(doc.get("repeats", 1)), meta=doc.get("meta", {}),
+        version=int(doc["version"]))

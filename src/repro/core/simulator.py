@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
-from .costmodel import stage_memory
+from .costmodel import Step, allreduce_time, round_latency, stage_memory
 from .planner import Plan
 from .profiler import Profile
 from .schedule import Op, schedule_orders
@@ -179,3 +179,64 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
     span = max(stage_free_at)
     bubble = [1.0 - busy[p] / span if span > 0 else 0.0 for p in range(P)]
     return SimResult(makespan, peak_mem, busy, bubble, trace, device_busy)
+
+
+# ---------------------------------------------------------------------------
+# Cross-profile evaluation: predicted vs measured gap
+# ---------------------------------------------------------------------------
+
+
+def reprice_plan(plan: Plan, profile: Profile) -> Plan:
+    """Re-price ``plan``'s steps under a (possibly different) ``Profile``.
+
+    Keeps the plan's *decisions* — stage layer ranges, device groups,
+    per-device allocations, micro-batch structure — and recomputes the step
+    costs from ``profile``: Eq. (8) stage times at the allocated counts,
+    Eq. (5) AllReduce over the stage group, boundary-activation transfer
+    over the slowest inter-group link.  ``latency`` is re-evaluated with
+    Eqs. (4)–(6).  This is how "what would this plan actually cost on the
+    measured device times" is asked of an analytically-planned pipeline.
+    """
+    from .planner import _comm_step
+
+    table = profile.table
+    exec_in = [s for s in plan.steps if s.kind == "exec"]
+    steps: list[Step] = []
+    for k, s in enumerate(exec_in):
+        i, j = s.layers
+        ef = max(profile.t_fwd(d, y, i, j) for d, y in zip(s.group, s.alloc))
+        eb = max(profile.t_bwd(d, y, i, j) for d, y in zip(s.group, s.alloc))
+        ta = allreduce_time(table.param_bytes(i, j), s.group, profile.cluster)
+        steps.append(Step("exec", ef, eb, ta, s.group, s.layers, s.alloc))
+        if k < len(exec_in) - 1:
+            steps.append(_comm_step(profile, plan.micro_batch, j, s.group,
+                                    exec_in[k + 1].group))
+    lat = round_latency(tuple(steps), plan.n_micro)
+    return dataclasses.replace(plan, steps=tuple(steps), latency=lat)
+
+
+def prediction_gap(plan: Plan, reference: Profile,
+                   policy: str = "ours") -> dict:
+    """Quantify how well ``plan``'s own latency estimate predicts its cost
+    under ``reference`` (typically the *measured* profile).
+
+    Returns a record with the planner's dominant-step estimate
+    (``predicted_s``, Eqs. 4–6 on the profile the plan was made with), the
+    same estimate re-priced on ``reference`` (``reference_s``), the
+    event-accurate simulation of the re-priced plan
+    (``reference_sim_s``), and ``gap_ratio = reference_s / predicted_s`` —
+    the factor by which the planning profile misprices reality.  A plan
+    made *on* the reference profile has gap_ratio 1 by construction; an
+    analytically-planned pipeline evaluated against measured tables shows
+    the error the paper's measured profiler exists to remove.
+    """
+    repriced = reprice_plan(plan, reference)
+    sim = simulate(repriced, reference, policy)
+    return {
+        "reference_source": reference.source,
+        "predicted_s": plan.latency,
+        "reference_s": repriced.latency,
+        "reference_sim_s": sim.makespan,
+        "gap_ratio": (repriced.latency / plan.latency
+                      if plan.latency > 0 else float("inf")),
+    }

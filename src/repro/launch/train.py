@@ -33,7 +33,9 @@ from jax.sharding import Mesh  # noqa: E402
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default phi3-mini-3.8b, or the "
+                         "--profile artifact's recorded arch)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
     ap.add_argument("--devices", type=int, default=0)
@@ -42,7 +44,9 @@ def main():
     ap.add_argument("--n-micro", type=int, default=None)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--global-batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=None,
+                    help="sequence length (default 128, or the --profile "
+                         "artifact's recorded seq_len)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -56,7 +60,14 @@ def main():
                     help="disable Algorithm 1 Phase 2 (straggler workload "
                          "offloading) when planning — the Fig. 15a ablation")
     ap.add_argument("--env", default="D", choices=list("ABCD"),
-                    help="edge environment profiled for --plan")
+                    help="edge environment (analytic profile) for --plan; "
+                         "ignored when a valid --profile artifact is given")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="measured profile artifact from "
+                         "repro.launch.profile; the planner/lowering/"
+                         "simulator run on its measured (tf, tb) tables, "
+                         "falling back to the analytic model with a warning "
+                         "if the artifact is stale or incompatible")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="kill a rank before this step and recover through "
                          "the live replay session (requires --plan)")
@@ -69,6 +80,9 @@ def main():
     if args.fail_at is not None and not args.plan:
         raise SystemExit("--fail-at requires --plan (the replay session "
                          "recovers by re-lowering a planner Plan)")
+    if args.profile and not args.plan:
+        raise SystemExit("--profile requires --plan (a measured profile "
+                         "only feeds the planner)")
 
     from repro import checkpoint
     from repro.configs import get_config, get_smoke_config
@@ -76,6 +90,22 @@ def main():
     from repro.models.frontend import frontend_dim
     from repro.optim import AdamW, cosine_schedule
     from repro.runtime.train import build_train_step, init_train_state
+
+    # a --profile artifact supplies the model/seq it was measured for;
+    # explicit flags still win (a mismatch then falls back to analytic)
+    measured = None
+    if args.profile:
+        from repro.core.profiler import load_profile
+        measured = load_profile(args.profile)
+        if args.arch is None and "arch_id" in measured.meta:
+            args.arch = measured.meta["arch_id"]
+        if args.seq is None:
+            args.seq = measured.seq_len
+        if not args.smoke and measured.meta.get("smoke"):
+            print(f"adopting --smoke from profile artifact {args.profile}")
+            args.smoke = True
+    args.arch = args.arch or "phi3-mini-3.8b"
+    args.seq = args.seq or 128
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     overrides = {}
@@ -98,15 +128,36 @@ def main():
     opt = AdamW(lr=cosine_schedule(args.lr, warmup=min(20, args.steps // 5),
                                    total=args.steps))
     if args.plan:
+        import warnings
+
         from repro.core.hardware import ENVS
         from repro.core.lowering import plan_to_train_step
         from repro.core.planner import plan_hpp
-        from repro.core.profiler import LayerTable, Profile
+        from repro.core.profiler import LayerTable, Profile, ProfileError
 
-        cluster = ENVS[args.env]().sorted_by_memory()
         table = LayerTable.from_model_config(cfg, args.seq)
-        prof = Profile.analytic(table, cluster,
-                                max_batch=max(args.global_batch, 1))
+        max_batch = max(args.global_batch, 1)
+        prof = None
+        if measured is not None:
+            issues = measured.compatibility_issues(cfg, args.seq)
+            if not issues:
+                try:
+                    prof = measured.to_profile(table, max_batch)
+                except ProfileError as e:
+                    issues = [str(e)]
+            if prof is None:
+                warnings.warn(
+                    f"measured profile {args.profile} is stale or "
+                    f"incompatible — falling back to the analytic profile "
+                    f"(env {args.env}): " + "; ".join(issues))
+        if prof is not None:
+            print(f"profile=measured({args.profile}, "
+                  f"{len(prof.cluster.devices)} devices, "
+                  f"batches<={max(measured.batch_sizes)} measured)")
+        else:
+            prof = Profile.analytic(table, ENVS[args.env]().sorted_by_memory(),
+                                    max_batch=max_batch)
+            print(f"profile=analytic(env {args.env})")
         n_periods = cfg.n_layers // len(cfg.pattern)
         divisors = {d for d in range(1, model_axis + 1)
                     if model_axis % d == 0 and d <= n_periods}

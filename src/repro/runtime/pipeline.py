@@ -19,7 +19,7 @@ Asteroid's hybrid pipeline parallelism on the refined TPU mesh
   is stage-sharded instead of wasted;
 * the stage body is remat'ed (`jax.checkpoint`), bounding resident
   activations to the stage *input* per in-flight micro-batch — the SPMD
-  realization of the paper's O(K_p) 1F1B memory bound (DESIGN.md §3).
+  realization of the paper's O(K_p) 1F1B memory bound (DESIGN.md §4).
 
 The paper's planner picks the stage count; ``pad_periods`` pads the period
 stack with zero (identity) layers when stages don't divide the period count.

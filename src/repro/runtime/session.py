@@ -20,6 +20,12 @@ and keeps training through a device failure without restarting:
 3. single-device stages push period-row backups to their topology-assigned
    backup node on a step cadence, so a fully-failed stage is recoverable.
 
+The ``Profile`` handed to the constructor — analytic, or a measured one
+loaded from a ``repro.launch.profile`` artifact (``launch/train.py --plan
+--profile``) — is held for the session's lifetime and reused by every
+replay replan, so recovery predictions are priced on the same tables the
+original plan was.
+
 Across a swap the *weights are dynamic* (migrated / restored, bit-identical
 where untouched) while the *step is static* (recompiled for the new stage
 split); ``reconcile_migration`` asserts the bytes the migration moved match
@@ -152,7 +158,13 @@ class PipelineSession:
                             if d not in self._failed))
 
     def step(self, batch_np: dict):
-        """One training step (recovering first if a failure is pending)."""
+        """One training step (recovering first if a failure is pending).
+
+        Advances the simulated cluster clock by at least one HPP-Round
+        (the deployed plan's Eq. 4 latency) and feeds survivor heartbeats
+        to the coordinator — the §3.4 detection timeline is therefore
+        measured in the same units as the planner's latency predictions.
+        """
         if self._pending_failure is not None:
             self.recover_now()
         # ts.shard_batch re-packs for the current plan's (possibly
@@ -211,8 +223,9 @@ class PipelineSession:
     # -- failure injection + recovery --------------------------------------
 
     def fail(self, rank: int) -> None:
-        """Simulate ``rank`` dying: its heartbeats stop; the next ``step()``
-        (or ``recover_now()``) detects and recovers through the replay."""
+        """Simulate ``rank`` dying (the paper's pulled-power experiment,
+        Fig. 16/17): its heartbeats stop; the next ``step()`` (or
+        ``recover_now()``) detects and recovers through the replay."""
         if rank not in self.live_ranks:
             raise ValueError(f"rank {rank} is not a live device "
                              f"({self.live_ranks})")
@@ -220,6 +233,11 @@ class PipelineSession:
         self._pending_failure = rank
 
     def recover_now(self) -> RecoveryOutcome:
+        """Drive the full §3.4 recovery timeline for the pending failure:
+        detect (missed heartbeats -> probe -> confirm, on the simulated
+        clock) then replan -> migrate -> resume via the coordinator, with
+        this session as executor.  Returns the recorded outcome (also
+        appended to ``self.recoveries``)."""
         failed = self._pending_failure
         if failed is None:
             raise RuntimeError("no pending failure")
@@ -246,6 +264,15 @@ class PipelineSession:
     # -- ReplayCoordinator executor protocol -------------------------------
 
     def replan(self, failed_rank: int) -> RecoveryReport:
+        """Executor step 1: plan the survivors' pipeline (§3.4 replay).
+
+        Lightweight layer-wise replay first — period-quantized cut moves
+        priced on ``self.profile`` (the SAME profile object the session
+        was built with, analytic or measured, so recovery predictions stay
+        consistent with the original planning source) — falling back to
+        heavy rescheduling (a fresh Algorithm 2 run restricted to
+        mesh-lowerable stage counts) when the survivor count is not
+        mesh-feasible or the allocation is infeasible."""
         quantum = len(self.cfg.pattern)
         try:
             rep = lightweight_replay(self.plan, self.profile, failed_rank,
@@ -270,6 +297,15 @@ class PipelineSession:
             return rep
 
     def migrate(self, report: RecoveryReport) -> RecoveryOutcome:
+        """Executor step 2: move training state onto the new plan.
+
+        Pure index migration of the stacked period params and both Adam
+        moments (``core.lowering.migrate_params`` — bit-identical for
+        untouched periods), vocab re-padding when the stage-count change
+        re-widths tp, backup restore for a fully-failed single-device
+        stage, and (lightweight mode) exact byte reconciliation of the
+        runtime's moved periods against the analytical RecoveryReport
+        (DESIGN.md §7)."""
         old_lp, new_lp = self.lowered, self._next_lowered
         failed = self._recovering_rank
         old_owner = self._device_owner(failed, report.new_plan, new_lp)
@@ -323,6 +359,9 @@ class PipelineSession:
                                self._detect_wall, tuple(missing))
 
     def resume(self, report: RecoveryReport, outcome: RecoveryOutcome) -> None:
+        """Executor step 3: re-seed stage backups on the new topology (the
+        old replicas were keyed by the old stage split and dropped); the
+        re-jitted step was already installed by ``migrate``."""
         if self.backup_every:
             self.backup_now()
 

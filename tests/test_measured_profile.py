@@ -1,0 +1,283 @@
+"""Measured-profiling subsystem: artifact round-trip (bit-exact),
+``Profile.measured`` validation, sweep densification, staleness
+fingerprints, cross-profile repricing, and planning on measured tables end
+to end (including the live replay session reusing the loaded profile)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import JETSON_NANO, JETSON_NX, Cluster
+from repro.core.planner import plan_hpp
+from repro.core.profiler import (LayerCost, LayerTable, MeasuredProfile,
+                                 Profile, ProfileError, config_fingerprint,
+                                 device_fingerprint, load_profile,
+                                 save_profile)
+from repro.core.simulator import prediction_gap, reprice_plan, simulate
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+TINY = ModelConfig(name="tiny", n_layers=2, d_model=32, vocab_size=64,
+                   d_ff=64,
+                   attn=AttentionConfig(n_heads=2, n_kv_heads=2, head_dim=16),
+                   pattern=(LayerSpec(),))
+
+
+def _table(L=3):
+    return LayerTable("m", tuple(
+        LayerCost(f"l{i}", 1e6 * (i + 1), 1e4, 1e3) for i in range(L)))
+
+
+def _mp(D=2, batches=(1, 2, 4), L=3, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(1e-4, 1e-3, size=(D, 1, L))
+    tf = base * np.asarray(batches, float)[None, :, None]
+    defaults = dict(
+        arch="m", seq_len=16, batch_sizes=tuple(batches),
+        layer_names=tuple(f"l{i}" for i in range(L)), tf=tf, tb=2.0 * tf,
+        device_names=tuple(f"cpu:{d}" for d in range(D)),
+        config_hash="cfg0", device_hash="dev0",
+        mem_bytes=(8e9,) * D, est_flops=(1e9,) * D)
+    defaults.update(kw)
+    return MeasuredProfile(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+
+def test_save_load_round_trip_bit_exact(tmp_path):
+    mp = _mp(meta={"jax": "x", "note": "n"})
+    path = str(tmp_path / "prof.json")
+    save_profile(path, mp)
+    back = load_profile(path)
+    # float arrays survive JSON bit-for-bit (repr round-trip of doubles)
+    assert back.tf.dtype == np.float64
+    assert np.array_equal(back.tf, mp.tf) and np.array_equal(back.tb, mp.tb)
+    assert (back.tf.view(np.uint64) == mp.tf.view(np.uint64)).all()
+    for f in dataclasses.fields(MeasuredProfile):
+        if f.name in ("tf", "tb"):
+            continue
+        assert getattr(back, f.name) == getattr(mp, f.name), f.name
+    # ... and the planner tables built from both are identical
+    t = _table()
+    p1 = mp.to_profile(t, max_batch=6)
+    p2 = back.to_profile(t, max_batch=6)
+    assert np.array_equal(p1.tf_prefix, p2.tf_prefix)
+    assert np.array_equal(p1.tb_prefix, p2.tb_prefix)
+
+
+def test_load_rejects_malformed(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text("{\"schema\": \"something-else\"}")
+    with pytest.raises(ProfileError, match="schema"):
+        load_profile(str(path))
+    path.write_text("not json")
+    with pytest.raises(ProfileError, match="JSON"):
+        load_profile(str(path))
+    path.write_text("{\"schema\": \"asteroid-profile\", \"version\": 1}")
+    with pytest.raises(ProfileError, match="missing keys"):
+        load_profile(str(path))
+
+
+# ---------------------------------------------------------------------------
+# Profile.measured validation (max_batch coverage per device)
+# ---------------------------------------------------------------------------
+
+
+def test_measured_rejects_uncovered_max_batch():
+    table = _table(L=2)
+    cluster = Cluster((JETSON_NANO,))
+    ok = np.full((1, 5, 2), 1e-3)
+    Profile.measured(table, cluster, 4, ok, ok)          # covers 0..4
+    short = np.full((1, 3, 2), 1e-3)                     # covers only 0..2
+    with pytest.raises(ProfileError, match="cover"):
+        Profile.measured(table, cluster, 4, short, ok)
+    with pytest.raises(ProfileError, match="cover"):
+        Profile.measured(table, cluster, 4, ok, short)
+
+
+def test_measured_rejects_device_and_layer_mismatch():
+    table = _table(L=2)
+    two_dev = Cluster((JETSON_NANO, JETSON_NX))
+    one_row = np.full((1, 5, 2), 1e-3)
+    with pytest.raises(ProfileError, match="devices=2"):
+        Profile.measured(table, two_dev, 4, one_row, one_row)
+    wrong_L = np.full((1, 5, 3), 1e-3)
+    with pytest.raises(ProfileError, match="layers=2"):
+        Profile.measured(table, Cluster((JETSON_NANO,)), 4, wrong_L, wrong_L)
+    neg = np.full((1, 5, 2), -1e-3)
+    with pytest.raises(ProfileError, match="negative"):
+        Profile.measured(table, Cluster((JETSON_NANO,)), 4, neg, neg)
+
+
+def test_measured_profile_source_tag():
+    table = _table(L=2)
+    s = np.full((1, 5, 2), 1e-3)
+    assert Profile.measured(table, Cluster((JETSON_NANO,)), 4, s, s).source \
+        == "measured"
+    assert Profile.analytic(table, Cluster((JETSON_NANO,)), 4).source \
+        == "analytic"
+
+
+# ---------------------------------------------------------------------------
+# Densification
+# ---------------------------------------------------------------------------
+
+
+def test_densify_interpolates_and_extrapolates():
+    L = 1
+    tf = np.array([[[1.0], [4.0]]])                      # batches 1 and 4
+    mp = _mp(D=1, batches=(1, 4), L=L, tf=tf, tb=2 * tf,
+             device_names=("cpu:0",), mem_bytes=(8e9,), est_flops=(1e9,),
+             layer_names=("l0",))
+    tf_s, _ = mp.densify(max_batch=6)
+    assert tf_s.shape == (1, 7, 1)
+    assert tf_s[0, 0, 0] == 0.0                          # batch-0 row zero
+    assert tf_s[0, 1, 0] == pytest.approx(1.0)
+    assert tf_s[0, 2, 0] == pytest.approx(2.0)           # linear interior
+    assert tf_s[0, 3, 0] == pytest.approx(3.0)
+    assert tf_s[0, 4, 0] == pytest.approx(4.0)
+    assert tf_s[0, 6, 0] == pytest.approx(6.0)           # last-segment slope
+    # noisy non-monotone sweeps are clamped monotone (Fig. 6 shape)
+    tf2 = np.array([[[2.0], [1.0]]])
+    mp2 = dataclasses.replace(mp, tf=tf2, tb=tf2)
+    tf2_s, _ = mp2.densify(4)
+    assert (np.diff(tf2_s[0, 1:, 0]) >= 0).all()
+    with pytest.raises(ProfileError, match="max_batch"):
+        mp.densify(0)
+
+
+def test_to_profile_prefix_matches_samples():
+    mp = _mp()
+    prof = mp.to_profile(_table(), max_batch=4, sort_by_memory=False)
+    # range query at a measured batch returns the raw layer-sum
+    assert prof.t_fwd(0, 2, 0, 3) == pytest.approx(mp.tf[0, 1].sum(), rel=1e-12)
+    assert prof.t_bwd(1, 4, 0, 3) == pytest.approx(mp.tb[1, 2].sum(), rel=1e-12)
+    with pytest.raises(ProfileError, match="match the measured layers"):
+        mp.to_profile(_table(L=4), max_batch=4)
+
+
+def test_to_profile_sorts_rows_with_devices():
+    mp = _mp(D=2, mem_bytes=(4e9, 16e9), est_flops=(1e9, 4e9))
+    prof = mp.to_profile(_table(), max_batch=4)
+    # big-memory device must now be rank 0, carrying its own measured row
+    assert prof.cluster.devices[0].mem_bytes == 16e9
+    assert prof.t_fwd(0, 1, 0, 3) == pytest.approx(mp.tf[1, 0].sum(), rel=1e-12)
+    assert prof.t_fwd(1, 1, 0, 3) == pytest.approx(mp.tf[0, 0].sum(), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Staleness / compatibility
+# ---------------------------------------------------------------------------
+
+
+def test_compatibility_issues():
+    good_hash = config_fingerprint(TINY, 16)
+    mp = _mp(config_hash=good_hash, device_hash=device_fingerprint())
+    assert mp.compatibility_issues(TINY, 16) == []
+    assert mp.compatibility_issues(TINY, 32)            # seq changed
+    assert mp.compatibility_issues(TINY.replace(d_model=64), 16)
+    stale = dataclasses.replace(mp, device_hash="feedbeef00000000")
+    issues = stale.compatibility_issues(TINY, 16)
+    assert issues and "device fingerprint" in issues[0]
+    assert stale.compatibility_issues(TINY, 16, check_device=False) == []
+    future = dataclasses.replace(mp, version=99)
+    assert any("version" in i for i in future.compatibility_issues(TINY, 16))
+
+
+def test_config_fingerprint_sensitivity():
+    h = config_fingerprint(TINY, 16)
+    assert h == config_fingerprint(TINY, 16)
+    assert h != config_fingerprint(TINY, 17)
+    assert h != config_fingerprint(TINY.replace(n_layers=4), 16)
+
+
+# ---------------------------------------------------------------------------
+# Cross-profile repricing
+# ---------------------------------------------------------------------------
+
+
+def _hetero_profile():
+    table = _table(L=4)
+    cluster = Cluster((JETSON_NX, JETSON_NANO, JETSON_NANO)).sorted_by_memory()
+    return Profile.analytic(table, cluster, max_batch=8)
+
+
+def test_reprice_plan_identity():
+    prof = _hetero_profile()
+    plan = plan_hpp(prof, 16, 4, arch="t")
+    again = reprice_plan(plan, prof)
+    assert again.latency == pytest.approx(plan.latency, rel=1e-9)
+    for a, b in zip(plan.steps, again.steps):
+        assert a.kind == b.kind
+        assert a.ef == pytest.approx(b.ef, rel=1e-9)
+        assert a.eb == pytest.approx(b.eb, rel=1e-9)
+    gap = prediction_gap(plan, prof)
+    assert gap["gap_ratio"] == pytest.approx(1.0, rel=1e-9)
+    assert gap["reference_sim_s"] >= 0
+
+
+def test_prediction_gap_detects_misprediction():
+    prof = _hetero_profile()
+    plan = plan_hpp(prof, 16, 4, arch="t")
+    # a reference twice as slow must show up as gap ~2x on exec-dominated
+    slow = Profile(prof.table, prof.cluster, prof.max_batch,
+                   2.0 * prof.tf_prefix, 2.0 * prof.tb_prefix, "measured")
+    gap = prediction_gap(plan, slow)
+    assert gap["gap_ratio"] > 1.2
+    assert gap["reference_source"] == "measured"
+    sim = simulate(reprice_plan(plan, slow), slow)
+    assert sim.makespan == pytest.approx(gap["reference_sim_s"])
+
+
+# ---------------------------------------------------------------------------
+# End to end: measure -> artifact -> plan (and the replay session)
+# ---------------------------------------------------------------------------
+
+
+def test_measure_model_to_plan(tmp_path):
+    from repro.launch.profile import measure_model
+
+    mp = measure_model(TINY, seq_len=8, batch_sizes=(1, 2), repeats=1,
+                       replicate=3)
+    assert mp.D == 3 and mp.L == TINY.n_layers + 2
+    assert (mp.tf > 0).all() and (mp.tb > 0).all()
+    path = str(tmp_path / "prof.json")
+    save_profile(path, mp)
+    back = load_profile(path)
+    assert back.compatibility_issues(TINY, 8) == []
+    table = LayerTable.from_model_config(TINY, 8)
+    prof = back.to_profile(table, max_batch=4)
+    assert prof.source == "measured"
+    plan = plan_hpp(prof, 4, 2, arch=TINY.name)
+    assert plan.latency > 0 and len(plan.stages) >= 1
+    assert prediction_gap(plan, prof)["gap_ratio"] == pytest.approx(1.0)
+
+
+def test_session_replay_reuses_measured_profile():
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.data import SyntheticLM
+    from repro.launch.profile import measure_model
+    from repro.runtime.session import PipelineSession
+
+    mp = measure_model(TINY, seq_len=8, batch_sizes=(1, 2), repeats=1,
+                       replicate=4)
+    table = LayerTable.from_model_config(TINY, 8)
+    prof = mp.to_profile(table, max_batch=8)
+    plan = plan_hpp(prof, 8, 2, arch=TINY.name, allowed_stages={1})
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
+    session = PipelineSession(TINY, mesh, plan, prof, backup_every=2)
+    session.init(jax.random.PRNGKey(0))
+    ds = SyntheticLM(TINY.vocab_size, 8)
+    session.step(ds.batch(0, 8))
+    session.fail(plan.stages[0].group[-1])
+    session.step(ds.batch(1, 8))
+    assert len(session.recoveries) == 1
+    # the replan ran on the SAME measured profile object the session loaded
+    assert session.profile is prof and session.profile.source == "measured"
+    assert session.recoveries[0].report.new_plan.latency > 0
