@@ -140,3 +140,73 @@ def round_latency(steps: Sequence[Step], M: int) -> float:
         worst = max(worst, tw + te + st.ta)
         tw += st.ef
     return worst
+
+
+# ---------------------------------------------------------------------------
+# Two-stream (compute / comm) round models — the async 1F1B variant
+# ---------------------------------------------------------------------------
+
+
+def exec_phase_latency(steps: Sequence[Step], M: int) -> float:
+    """Execution-Phase makespan only: Eqs. (4)/(6) with every AllReduce
+    phase stripped.  The compute-stream half of the two-stream model."""
+    return round_latency(tuple(dataclasses.replace(s, ta=0.0)
+                               for s in steps), M)
+
+
+def max_allreduce(steps: Sequence[Step]) -> float:
+    """Largest per-stage AllReduce phase (Eq. 5) across the pipeline."""
+    return max((s.ta for s in steps if s.kind == "exec"), default=0.0)
+
+
+def round_latency_async(steps: Sequence[Step], M: int) -> float:
+    """Steady-state HPP-Round latency of the *overlapped* pipeline.
+
+    Two-resource model: stage compute and boundary P2P transfers pipeline
+    as before (comm steps are pipeline steps in Eq. 4 already — the
+    double-buffered runtime realizes that assumption), while the gradient
+    AllReduce of round r runs on the comm stream during round r+1
+    (staleness 1: round r's gradients are applied at the r+1 boundary, so
+    the AllReduce has a full Execution Phase to hide in).  Only un-hidden
+    comm is charged: a round cannot complete faster than its Execution
+    Phase, nor faster than the slowest stage's AllReduce drains.
+    """
+    return max(exec_phase_latency(steps, M), max_allreduce(steps))
+
+
+def unhidden_allreduce(steps: Sequence[Step], M: int) -> float:
+    """AllReduce seconds the Execution Phase cannot hide (0 when the
+    gradient sync leaves the critical path entirely)."""
+    return max(0.0, max_allreduce(steps) - exec_phase_latency(steps, M))
+
+
+def hpp_round_latency(steps: Sequence[Step], M: int,
+                      staleness: int = 0) -> float:
+    """Round latency under the chosen gradient-sync semantics: Eq. (4)
+    synchronous rounds at staleness 0, the two-stream overlapped model at
+    staleness >= 1."""
+    if staleness >= 1:
+        return round_latency_async(steps, M)
+    return round_latency(steps, M)
+
+
+def round_latency_serialized(steps: Sequence[Step], M: int) -> float:
+    """Round latency when boundary transfers SERIALIZE with stage compute
+    (the pre-double-buffer tick scan: the ppermute of micro-batch m sits
+    between the compute of m and m+1 on every device).
+
+    Modeled by folding each comm step's per-micro cost into the downstream
+    exec step, leaving no independent comm resource to pipeline on — the
+    one-stream lower bound that ``round_latency_async`` /
+    ``round_latency`` improve on.
+    """
+    merged: list[Step] = []
+    pending_f = pending_b = 0.0
+    for s in steps:
+        if s.kind == "comm":
+            pending_f, pending_b = s.ef, s.eb
+            continue
+        merged.append(dataclasses.replace(s, ef=s.ef + pending_f,
+                                          eb=s.eb + pending_b))
+        pending_f = pending_b = 0.0
+    return round_latency(tuple(merged), M)

@@ -21,8 +21,9 @@ import time
 from functools import lru_cache
 
 from .allocation import Allocation, AllocationError, allocate_microbatch
-from .costmodel import (Step, allreduce_time, dominant_index, hpp_volume,
-                        kp_policy, round_latency, stage_memory)
+from .costmodel import (Step, allreduce_time, dominant_index,
+                        hpp_round_latency, hpp_volume, kp_policy,
+                        round_latency, stage_memory)
 from .profiler import Profile
 
 
@@ -62,6 +63,11 @@ class Plan:
     latency: float                 # predicted HPP-Round latency (s)
     planner: str = "asteroid"
     plan_time: float = 0.0
+    # Gradient-sync semantics the plan was priced under: 0 = synchronous
+    # rounds (Eq. 4 charges every AllReduce), 1 = bounded-stale overlap
+    # (``costmodel.round_latency_async`` charges only un-hidden comm); the
+    # runtime knob ``TrainSpec.staleness`` should match.
+    staleness: int = 0
 
     @property
     def global_batch(self) -> int:
@@ -107,8 +113,8 @@ def _comm_step(profile: Profile, micro_batch: int, boundary_layer: int,
 
 def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
              max_stages: int | None = None, arch: str = "",
-             check_memory: bool = True, intra_opt: bool = True,
-             allowed_stages=None) -> Plan:
+             check_memory: bool = True, intra_opt=True,
+             allowed_stages=None, staleness: int = 0) -> Plan:
     """Run Algorithm 2: DP over ``Q(l, n, p)`` with the Eq. 10 transition.
 
     Each candidate head stage is priced by Algorithm 1
@@ -122,7 +128,26 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
     ``allowed_stages``: optional collection restricting the final stage
     count (e.g. divisors of a runtime mesh's model axis, so the plan can be
     lowered — see ``core.lowering``).  ``intra_opt=False`` disables
-    Algorithm 1 Phase 2 (straggler offloading) — the Fig. 15a ablation."""
+    Algorithm 1 Phase 2 (straggler offloading) — the Fig. 15a ablation;
+    ``intra_opt="auto"`` keeps Phase 2's heterogeneous allocation only when
+    it strictly improves the predicted latency (a hetero allocation pads
+    every data shard to B_max at runtime, so offloading with no predicted
+    gain costs real throughput — the fig15a_runtime regression).
+
+    ``staleness=1`` prices candidates with the two-stream overlapped round
+    model (``costmodel.round_latency_async``): the gradient AllReduce
+    leaves the critical path, which shifts stage cuts toward splits that
+    balance the Execution Phase instead of amortizing T_a."""
+    if intra_opt == "auto":
+        kw = dict(max_stages=max_stages, arch=arch, check_memory=check_memory,
+                  allowed_stages=allowed_stages, staleness=staleness)
+        full = plan_hpp(profile, global_batch, micro_batch,
+                        intra_opt=True, **kw)
+        if all(len(set(st.alloc)) <= 1 for st in full.stages):
+            return full                  # Phase 2 changed nothing
+        base = plan_hpp(profile, global_batch, micro_batch,
+                        intra_opt=False, **kw)
+        return full if full.latency < base.latency * (1.0 - 1e-9) else base
     t_start = time.perf_counter()
     table = profile.table
     L, N = table.L, len(profile.cluster.devices)
@@ -159,7 +184,7 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
                                         tuple(range(N - n, N)), profile.cluster)
                     steps = (Step("exec", alloc.ef, alloc.eb, ta,
                                   tuple(range(N - n, N)), (i, L), alloc.y),)
-                    best = (steps, round_latency(steps, M))
+                    best = (steps, hpp_round_latency(steps, M, staleness))
                 else:
                     for l2 in range(p - 1, l):        # sub-pipeline layer count
                         for n2 in range(p - 1, n):    # sub-pipeline device count
@@ -178,7 +203,7 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
                             comm = _comm_step(profile, micro_batch, j,
                                               tuple(range(a, b)), sub[0][0].group)
                             steps = (head, comm) + sub[0]
-                            lat = round_latency(steps, M)
+                            lat = hpp_round_latency(steps, M, staleness)
                             if best is None or lat < best[1]:
                                 best = (steps, lat)
                 if best is not None:
@@ -197,7 +222,7 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
     steps = Q[(L, N, p_best)][0]
     stages = _stages_from_steps(steps, p_best)
     return Plan(arch, stages, steps, micro_batch, M, lat, "asteroid",
-                time.perf_counter() - t_start)
+                time.perf_counter() - t_start, staleness=staleness)
 
 
 def _stages_from_steps(steps, P: int) -> tuple[StagePlan, ...]:

@@ -33,7 +33,7 @@ import time
 import numpy as np
 
 from .allocation import AllocationError, allocate_microbatch
-from .costmodel import Step, allreduce_time, kp_policy, round_latency
+from .costmodel import Step, allreduce_time, hpp_round_latency, kp_policy
 from .planner import Plan, StagePlan, _comm_step, plan_hpp
 from .profiler import Profile
 
@@ -338,9 +338,13 @@ def lightweight_replay(plan: Plan, profile: Profile, failed_rank: int,
         if p < P - 1:
             steps.append(_comm_step(profile, mb, j, survivors[p].group,
                                     survivors[p + 1].group))
-    lat = round_latency(tuple(steps), plan.n_micro)
+    # the survivors' pipeline inherits the failed plan's gradient-sync
+    # semantics (a replayed async session stays async)
+    lat = hpp_round_latency(tuple(steps), plan.n_micro,
+                            getattr(plan, "staleness", 0))
     new_plan = Plan(plan.arch, tuple(new_stages), tuple(steps), mb,
-                    plan.n_micro, lat, "replay")
+                    plan.n_micro, lat, "replay",
+                    staleness=getattr(plan, "staleness", 0))
     replan_s = time.perf_counter() - t0
     return RecoveryReport(detection_latency(fail_time), replan_s, migration,
                           restore, new_plan, "lightweight", tuple(moves))
@@ -369,7 +373,8 @@ def heavy_rescheduling(plan: Plan, profile: Profile, failed_rank: int,
     sub_profile = Profile.analytic(table, sub_cluster, profile.max_batch)
     t0 = time.perf_counter()
     new_plan = plan_hpp(sub_profile, plan.global_batch, plan.micro_batch,
-                        arch=plan.arch, allowed_stages=allowed_stages)
+                        arch=plan.arch, allowed_stages=allowed_stages,
+                        staleness=getattr(plan, "staleness", 0))
     replan = (time.perf_counter() - t0) * replan_compute_scale
 
     # sub-cluster ranks -> the original cluster's rank space, so the new

@@ -17,7 +17,7 @@ from .costmodel import kp_policy
 
 @dataclasses.dataclass(frozen=True)
 class Op:
-    kind: str          # 'F' | 'B'
+    kind: str          # 'F' | 'B' (compute stream) | 'S' | 'R' | 'A' (comm)
     micro: int
 
 
@@ -58,3 +58,59 @@ def max_inflight(order: tuple[Op, ...]) -> int:
         live += 1 if op.kind == "F" else -1
         peak = max(peak, live)
     return peak
+
+
+# ---------------------------------------------------------------------------
+# Async (two-stream) schedule enumeration
+# ---------------------------------------------------------------------------
+#
+# The overlapped runtime splits every stage into a compute stream (the F/B
+# order above, unchanged — overlap never reorders compute) and a comm
+# stream: per forward an activation send 'S' to stage p+1, per backward a
+# gradient send 'R' to stage p-1, each launched one compute slot after the
+# op that produced it (the double buffer), plus — under staleness >= 1 — a
+# trailing 'A' (gradient AllReduce) that drains during the next round's
+# warm-up forwards instead of extending this round.
+
+
+def comm_stream(order: tuple[Op, ...], p: int, P: int,
+                staleness: int = 1) -> tuple[Op, ...]:
+    """Comm-stream op order for stage p given its compute order.
+
+    'S m' follows F(m) for every non-last stage, 'R m' follows B(m) for
+    every non-first stage — in compute completion order, which is the order
+    the double buffer hands transfers to the link.  With ``staleness >= 1``
+    a terminal 'A' marks the overlapped gradient AllReduce; with
+    ``staleness == 0`` the AllReduce is synchronous (it lives in the round
+    boundary, not on the overlapped stream) and is omitted here.
+    """
+    ops: list[Op] = []
+    for op in order:
+        if op.kind == "F" and p < P - 1:
+            ops.append(Op("S", op.micro))
+        elif op.kind == "B" and p > 0:
+            ops.append(Op("R", op.micro))
+    if staleness >= 1:
+        ops.append(Op("A", -1))
+    return tuple(ops)
+
+
+def two_stream_orders(P: int, M: int, policy: str = "ours",
+                      staleness: int = 1):
+    """Per-stage (compute, comm) op orders for the overlapped pipeline.
+
+    Returns ``(compute_orders, comm_orders)``; ``compute_orders`` is
+    exactly ``schedule_orders(P, M, policy)`` (overlap moves transfers to
+    a second stream, it does not re-schedule compute), and
+    ``comm_orders[p]`` is stage p's comm stream (``comm_stream``).
+    """
+    compute = schedule_orders(P, M, policy)
+    comm = [comm_stream(compute[p], p, P, staleness) for p in range(P)]
+    return compute, comm
+
+
+def scan_ticks(P: int, M: int, double_buffer: bool = False) -> int:
+    """Forward-scan length of the runtime pipeline: the double-buffered
+    variant pays a 2-tick stage hop (compute tick + in-flight tick) for
+    the overlap, so warm-up doubles while steady state is unchanged."""
+    return M + (2 * (P - 1) if double_buffer else (P - 1))

@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
-from .costmodel import Step, allreduce_time, round_latency, stage_memory
+from .costmodel import (Step, allreduce_time, hpp_round_latency,
+                        stage_memory)
 from .planner import Plan
 from .profiler import Profile
 from .schedule import Op, schedule_orders
@@ -36,19 +37,54 @@ class SimResult:
     # Eq. (8) decomposition of each stage's lockstep op time (a device whose
     # allocation is below the stage max idles for the difference)
     device_busy: dict[int, float] = dataclasses.field(default_factory=dict)
+    # two-stream decomposition (DESIGN.md §8): the Execution-Phase span
+    # (compute stream), the largest stage AllReduce (comm stream), and the
+    # AllReduce seconds the round actually charges after overlap.  Under
+    # staleness 0 every AllReduce is charged (sync semantics); under
+    # staleness >= 1 only the part exceeding the Execution Phase is.
+    exec_span_s: float = 0.0
+    allreduce_s: float = 0.0
+    charged_allreduce_s: float = 0.0
+    staleness: int = 0
 
     @property
     def max_peak_mem(self) -> float:
         return max(self.peak_mem.values())
+
+    @property
+    def hidden_comm_s(self) -> float:
+        """AllReduce seconds the overlap removed from the critical path."""
+        return self.allreduce_s - self.charged_allreduce_s
 
     def device_util(self, d: int) -> float:
         """Fraction of the round this device computes (vs idles/bubbles)."""
         return self.device_busy[d] / self.makespan if self.makespan else 0.0
 
 
-def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
+def simulate(plan: Plan, profile: Profile, policy: str = "ours", *,
+             staleness: int | None = None,
+             serialize_p2p: bool = False) -> SimResult:
+    """Discrete-event execution of ``plan``.
+
+    Two resources per boundary: each stage's compute stream and each
+    adjacent-stage link (one transfer at a time per direction).
+
+    ``serialize_p2p=True`` additionally charges each boundary transfer to
+    the *sending stage's compute stream* — the pre-double-buffer runtime,
+    whose tick scan holds the stage while the ppermute drains.  The default
+    models the double-buffered runtime, where a send only occupies the
+    link.
+
+    ``staleness`` (default: ``plan.staleness``) selects how the gradient
+    AllReduce phases are charged: 0 appends each stage's T_a to its
+    execution span (sync rounds); >= 1 runs them on the comm stream during
+    the next round's warm-up, so the makespan only grows past the
+    Execution Phase when the slowest AllReduce outlasts a whole round.
+    """
     stages = plan.stages
     P, M = len(stages), plan.n_micro
+    if staleness is None:
+        staleness = getattr(plan, "staleness", 0)
     exec_steps = [s for s in plan.steps if s.kind == "exec"]
     comm_steps = [s for s in plan.steps if s.kind == "comm"]
     assert len(exec_steps) == P and len(comm_steps) == P - 1
@@ -126,6 +162,8 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
                     t0 = max(now, link_free_fwd[p])
                     t1 = t0 + comm_steps[p].ef
                     link_free_fwd[p] = t1
+                    if serialize_p2p:   # the tick scan holds the stage too
+                        stage_free_at[p] = max(stage_free_at[p], t1)
                     push(t1, "fwd_arrive", (p + 1, op.micro))
             else:
                 b_done[p][op.micro] = True
@@ -133,6 +171,8 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
                     t0 = max(now, link_free_bwd[p - 1])
                     t1 = t0 + comm_steps[p - 1].eb
                     link_free_bwd[p - 1] = t1
+                    if serialize_p2p:
+                        stage_free_at[p] = max(stage_free_at[p], t1)
                     push(t1, "bwd_arrive", (p - 1, op.micro))
             try_start(p, now)
         elif kind == "fwd_arrive":
@@ -144,11 +184,21 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
             b_arrived[p][m] = True
             try_start(p, now)
 
-    # AllReduce phases run after each stage finishes its backwards
-    makespan = 0.0
-    for p in range(P):
-        stage_end = stage_free_at[p] + exec_steps[p].ta
-        makespan = max(makespan, stage_end)
+    # AllReduce phases: appended to each stage's span (sync), or drained on
+    # the comm stream during the next round's warm-up (staleness >= 1) —
+    # then only an AllReduce outlasting the whole Execution Phase extends
+    # the steady-state round.
+    exec_span = max(stage_free_at)
+    ar_max = max((s.ta for s in exec_steps), default=0.0)
+    if staleness >= 1:
+        makespan = max(exec_span, ar_max)
+        charged_ar = makespan - exec_span
+    else:
+        makespan = 0.0
+        for p in range(P):
+            stage_end = stage_free_at[p] + exec_steps[p].ta
+            makespan = max(makespan, stage_end)
+        charged_ar = makespan - exec_span
 
     # peak resident activations per stage, from the executed trace: a
     # micro-batch is resident from its F's *start* (not scheduling time —
@@ -176,9 +226,11 @@ def simulate(plan: Plan, profile: Profile, policy: str = "ours") -> SimResult:
             act = profile.table.act_bytes_sum(*st.layers) * y
             peak_mem[d] = static + act_peak[p] * act
 
-    span = max(stage_free_at)
-    bubble = [1.0 - busy[p] / span if span > 0 else 0.0 for p in range(P)]
-    return SimResult(makespan, peak_mem, busy, bubble, trace, device_busy)
+    bubble = [1.0 - busy[p] / exec_span if exec_span > 0 else 0.0
+              for p in range(P)]
+    return SimResult(makespan, peak_mem, busy, bubble, trace, device_busy,
+                     exec_span_s=exec_span, allreduce_s=ar_max,
+                     charged_allreduce_s=charged_ar, staleness=staleness)
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +263,8 @@ def reprice_plan(plan: Plan, profile: Profile) -> Plan:
         if k < len(exec_in) - 1:
             steps.append(_comm_step(profile, plan.micro_batch, j, s.group,
                                     exec_in[k + 1].group))
-    lat = round_latency(tuple(steps), plan.n_micro)
+    lat = hpp_round_latency(tuple(steps), plan.n_micro,
+                            getattr(plan, "staleness", 0))
     return dataclasses.replace(plan, steps=tuple(steps), latency=lat)
 
 

@@ -194,6 +194,86 @@ def _hetero_plan_step(cfg, mesh_prod, micro_batch: int, n_micro: int):
     return ts
 
 
+def run_async(arch: str, devices) -> float:
+    """Async 1F1B runtime equivalence (DESIGN.md §8).
+
+    1. staleness 0 + double-buffered sends is gradient-BIT-IDENTICAL to the
+       synchronous runtime on the same batch (the overlap only moves the
+       tick a transfer occupies, never the per-micro-batch math);
+    2. a staleness-1 run applies round r's gradients at the r+1 boundary:
+       after N steps + a final flush its loss lands within tolerance of the
+       sync run on the same batch stream (bounded-staleness convergence),
+       and both arms applied exactly the same number of optimizer updates
+       (the first async round computes gradients only — no update, no
+       schedule-step skew)."""
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticLM
+    from repro.models.frontend import frontend_dim
+    from repro.runtime.train import build_train_step, init_train_state
+
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    B, S, M, N = 8, 64, 4, 8
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    ts_sync = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                               n_micro=M)
+    ts_db = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                             n_micro=M, staleness=0, double_buffer=True)
+    ts_async = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                                n_micro=M, staleness=1)
+    assert ts_async.spec.double_buffer, "staleness 1 defaults to overlap"
+
+    key = jax.random.PRNGKey(0)
+    ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    batch_np = ds.batch(0, B)
+
+    # 1) bit-identical gradients: sync vs double-buffered staleness-0
+    params, opt0 = init_train_state(key, ts_sync)
+    (_, m_sync), g_sync = ts_sync.grad_fn(params, ts_sync.shard_batch(batch_np))
+    (_, m_db), g_db = ts_db.grad_fn(params, ts_db.shard_batch(batch_np))
+    n_diff = sum(0 if bool(jnp.array_equal(a, b)) else 1
+                 for a, b in zip(jax.tree.leaves(g_sync),
+                                 jax.tree.leaves(g_db)))
+    bit_identical = n_diff == 0 and float(m_sync["ce"]) == float(m_db["ce"])
+
+    # 2) staleness-1 convergence smoke vs sync on the SAME batch stream:
+    # the first async round computes gradients only (no optimizer update),
+    # every later round applies the previous round's buffer, the flush
+    # applies the final round — so both arms apply exactly N+1 updates
+    p_a, o_a = init_train_state(key, ts_async)
+    (l0a, _), buf = ts_async.grad_fn(p_a, ts_async.shard_batch(batch_np))
+    grads_live = any(float(jnp.max(jnp.abs(x))) > 0
+                     for x in jax.tree.leaves(buf))
+    p_s, o_s, _, _ = ts_sync.step_fn(params, opt0,
+                                     ts_sync.shard_batch(batch_np))
+    for step in range(N):
+        b_np = ds.batch(step + 1, B)
+        p_s, o_s, _, _ = ts_sync.step_fn(p_s, o_s,
+                                         ts_sync.shard_batch(b_np))
+        p_a, o_a, buf, _, _ = ts_async.async_step_fn(
+            p_a, o_a, buf, ts_async.shard_batch(b_np))
+    p_a, o_a = ts_async.flush_fn(p_a, o_a, buf)
+    steps_match = int(o_a.step) == int(o_s.step)
+    l_s, _ = ts_sync.loss_fn(p_s, ts_sync.shard_batch(batch_np))
+    l_a, _ = ts_async.loss_fn(p_a, ts_async.shard_batch(batch_np))
+    gap = abs(float(l_s) - float(l_a))
+    converged = gap < 0.15 and float(l_a) < float(l0a)
+
+    ok = bit_identical and grads_live and steps_match and converged
+    print(f"{arch:26s} [async] grad-bit-identical={bit_identical} "
+          f"(diff leaves {n_diff}) updates-match={steps_match} "
+          f"stale-vs-sync loss gap={gap:.4f} "
+          f"({float(l_s):.4f} vs {float(l_a):.4f}) "
+          f"{'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch}: async equivalence bit={bit_identical} "
+                         f"updates={steps_match} live={grads_live} "
+                         f"gap={gap}")
+    return gap
+
+
 def run_arch_planned(arch: str, devices) -> float:
     """Full planner->lowering->runtime path: profile an edge cluster, run
     Algorithm 2 restricted to mesh-feasible stage counts, lower the plan
@@ -400,6 +480,7 @@ def main():
     planned = "--plan" in sys.argv
     replay = "--replay" in sys.argv
     hetero = "--hetero" in sys.argv
+    async_mode = "--async" in sys.argv
     archs = args or DEFAULT_ARCHS
     devices = jax.devices()
     assert len(devices) >= 8, "needs 8 host devices"
@@ -412,6 +493,8 @@ def main():
             run_replay(arch, devices[:8])
         elif hetero:
             run_arch_hetero(arch, devices[:8])
+        elif async_mode:
+            run_async(arch, devices[:8])
         else:
             run_arch(arch, devices[:8])
     print("ALL OK")

@@ -26,6 +26,7 @@ staleness rules ``launch.train`` applies before trusting an artifact.
 from __future__ import annotations
 
 import argparse
+import itertools
 import os
 import sys
 import time
@@ -93,13 +94,60 @@ def build_layer_fns(cfg, seq_len: int, key=None):
     return fns, make_input
 
 
+_KV_GATHER_CALLS = itertools.count()
+
+
+def gather_process_rows(tf, tb):
+    """Gather every process's ``(n_batches, L)`` sweep into ``(D, ...)``.
+
+    Primary path: ``multihost_utils.process_allgather`` (one jitted
+    all-gather over the global mesh — what a real TPU/GPU edge mesh runs).
+    The CPU backend hosts a multi-process *coordination* service but not
+    multi-process XLA computations, so there the rows travel through the
+    distributed KV store instead — same contract, control-plane transport
+    (bit-exact: float64 lists survive the JSON round trip).  Exercised by
+    ``repro.launch.profile_selftest`` (2 processes) in CI.
+    """
+    import jax
+    import numpy as np
+
+    n = jax.process_count()
+    if n == 1:
+        return np.asarray(tf)[None], np.asarray(tb)[None]
+    from jax.experimental import multihost_utils
+    try:
+        return (np.asarray(multihost_utils.process_allgather(tf)),
+                np.asarray(multihost_utils.process_allgather(tb)))
+    except Exception as e:                      # noqa: BLE001
+        if "Multiprocess computations" not in str(e):
+            raise
+    import json
+
+    from jax._src import distributed
+
+    client = distributed.global_state.client
+    rank = jax.process_index()
+    # keys and barrier ids are single-use in the coordination service —
+    # suffix with a per-call counter so repeated measure_model calls in
+    # one distributed run (several configs / seq_lens) keep working
+    call = next(_KV_GATHER_CALLS)
+    payload = json.dumps({"tf": np.asarray(tf).tolist(),
+                          "tb": np.asarray(tb).tolist()})
+    client.key_value_set(f"asteroid/profile_row/{call}/{rank}", payload)
+    client.wait_at_barrier(f"asteroid_profile_gather/{call}", 120_000)
+    rows = [json.loads(client.blocking_key_value_get(
+        f"asteroid/profile_row/{call}/{r}", 120_000)) for r in range(n)]
+    return (np.stack([np.asarray(r["tf"]) for r in rows]),
+            np.stack([np.asarray(r["tb"]) for r in rows]))
+
+
 def measure_model(cfg, seq_len: int, batch_sizes=(1, 2, 4), repeats: int = 3,
                   *, replicate: int = 1, mem_bytes: float | None = None,
                   bandwidth: float | None = None, seed: int = 0):
     """Profile ``cfg`` on the local host into a ``MeasuredProfile``.
 
     Runs the jitted per-layer sweep, gathers one device row per JAX process
-    (rank 0 holds all rows; other ranks get their local row only), then
+    (``gather_process_rows`` — every rank receives every row), then
     tiles rows ``replicate`` times into virtual devices.  The effective
     FLOP rate at the largest measured batch is recorded per device so
     ``MeasuredProfile.cluster()`` yields the best analytic model of the
@@ -122,13 +170,10 @@ def measure_model(cfg, seq_len: int, batch_sizes=(1, 2, 4), repeats: int = 3,
     elapsed = time.perf_counter() - t0
 
     plat = jax.local_devices()[0].platform
+    tf, tb = gather_process_rows(tf, tb)             # (D, n_batches, L)
     if jax.process_count() > 1:
-        from jax.experimental import multihost_utils
-        tf = np.asarray(multihost_utils.process_allgather(tf))
-        tb = np.asarray(multihost_utils.process_allgather(tb))
         names = [f"{plat}:{r}" for r in range(jax.process_count())]
     else:
-        tf, tb = tf[None], tb[None]                  # (1, n_batches, L)
         names = [f"{plat}:0"]
 
     if replicate > 1:

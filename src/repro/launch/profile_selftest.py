@@ -1,0 +1,126 @@
+"""2-process measured-profiling selftest: CI coverage for the
+``process_allgather`` multi-process gather path in ``launch.profile``
+(ROADMAP: "the multi-process gather has no CI coverage").
+
+The parent picks a free TCP port and spawns two worker subprocesses; each
+worker joins a 2-process JAX distributed runtime
+(``jax.distributed.initialize``), measures its own (CPU) device with the
+real jitted per-layer sweeps, and the rank-0 worker gathers both device
+rows via ``multihost_utils.process_allgather`` and writes the artifact —
+exactly the code path a real multi-device edge mesh uses, minus the
+heterogeneous hardware.  The parent then validates the artifact: two
+device rows, loadable bit-exactly, and plannable (Algorithm 2 produces a
+multi-stage plan from the gathered tables).
+
+    PYTHONPATH=src python -m repro.launch.profile_selftest
+
+Invoked by tests/test_measured_profile.py (slow marker) and the CI
+profile-smoke job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _worker(rank: int, port: int, out: str, seq: int) -> None:
+    # one CPU device per process; must be set before jax initializes
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    import jax
+
+    jax.distributed.initialize(coordinator_address=f"127.0.0.1:{port}",
+                               num_processes=2, process_id=rank)
+    assert jax.process_count() == 2, jax.process_count()
+
+    from repro.configs import get_smoke_config
+    from repro.core.profiler import save_profile
+    from repro.launch.profile import measure_model
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    mp = measure_model(cfg, seq, batch_sizes=(1, 2), repeats=1)
+    assert mp.tf.shape[0] == 2, ("rank rows not gathered", mp.tf.shape)
+    if jax.process_index() == 0:
+        save_profile(out, mp)
+        print(f"rank 0 gathered {mp.D} device rows -> {out}", flush=True)
+    print(f"worker {rank} done", flush=True)
+
+
+def run_selftest(seq: int = 32, timeout: int = 420) -> str:
+    """Spawn the 2-process run and validate the gathered artifact.
+
+    Returns the artifact path (in a temp dir).  Raises on any failure —
+    including the distributed runtime being unavailable, which IS a
+    failure: this selftest exists to keep the gather path working.
+    """
+    port = _free_port()
+    out = os.path.join(tempfile.mkdtemp(prefix="asteroid-prof2p-"),
+                       "prof2p.json")
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.profile_selftest",
+         "--worker", str(r), "--port", str(port), "--seq", str(seq),
+         "-o", out],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=root) for r in range(2)]
+    outs = []
+    for r, p in enumerate(procs):
+        try:
+            stdout, _ = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append(stdout)
+        if p.returncode != 0:
+            raise RuntimeError(f"worker {r} failed:\n{stdout[-3000:]}")
+
+    from repro.configs import get_smoke_config
+    from repro.core.planner import plan_hpp
+    from repro.core.profiler import LayerTable, load_profile
+
+    mp = load_profile(out)
+    assert mp.D == 2, f"expected 2 gathered device rows, got {mp.D}"
+    assert len(set(mp.device_names)) == 2, mp.device_names
+    assert (mp.tf > 0).all() and (mp.tb > 0).all(), "non-positive timings"
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    table = LayerTable.from_model_config(cfg, seq)
+    prof = mp.to_profile(table, max_batch=4)
+    plan = plan_hpp(prof, 4, 2, arch=cfg.name, allowed_stages={1, 2})
+    print(f"2-process gather OK: rows={mp.device_names} -> "
+          f"{len(plan.stages)}-stage plan, predicted {plan.latency:.4f}s")
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="2-process process_allgather profiling selftest")
+    ap.add_argument("--worker", type=int, default=None)
+    ap.add_argument("--port", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("-o", "--out", default="prof2p.json")
+    args = ap.parse_args(argv)
+    if args.worker is not None:
+        _worker(args.worker, args.port, args.out, args.seq)
+        return
+    run_selftest(args.seq)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,17 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 
+def _steady_tok_s(args, n_compile: int, t0: float, t_warm, t_end: float):
+    """FINAL steady-state rate, shared by the plain and session paths:
+    tokens over the steps after the compile step(s) (n_compile jitted
+    entry points: 1 sync, 2 bounded-staleness), or over the whole run
+    when there were no post-compile steps to time."""
+    tokens = args.global_batch * args.seq
+    if t_warm is not None:
+        return tokens * (args.steps - n_compile) / max(t_end - t_warm, 1e-9)
+    return tokens * args.steps / max(t_end - t0, 1e-9)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
@@ -59,6 +70,21 @@ def main():
     ap.add_argument("--no-offload", action="store_true",
                     help="disable Algorithm 1 Phase 2 (straggler workload "
                          "offloading) when planning — the Fig. 15a ablation")
+    ap.add_argument("--force-offload", action="store_true",
+                    help="always keep the Phase 2 allocation (default: "
+                         "'auto' — keep it only when the planner predicts "
+                         "a strict latency gain, since a heterogeneous "
+                         "allocation pads every data shard to B_max)")
+    ap.add_argument("--staleness", type=int, default=0, choices=(0, 1),
+                    help="async 1F1B gradient staleness bound: 0 = "
+                         "synchronous rounds, 1 = round r's gradients are "
+                         "applied at the r+1 boundary so their AllReduce "
+                         "overlaps round r+1 (DESIGN.md §8)")
+    ap.add_argument("--double-buffer", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="double-buffer stage-boundary sends (2-tick hop, "
+                         "transfer of micro-batch m overlaps compute of "
+                         "m+1); default: on when --staleness 1")
     ap.add_argument("--env", default="D", choices=list("ABCD"),
                     help="edge environment (analytic profile) for --plan; "
                          "ignored when a valid --profile artifact is given")
@@ -169,19 +195,29 @@ def main():
         else:
             m = next(m for m in (4, 2, 1) if args.global_batch % m == 0)
             mb = args.global_batch // m
+        if args.no_offload:
+            intra_opt = False
+        elif args.force_offload:
+            intra_opt = True
+        else:
+            intra_opt = "auto"
         plan = plan_hpp(prof, args.global_batch, mb, arch=cfg.name,
-                        allowed_stages=divisors,
-                        intra_opt=not args.no_offload)
+                        allowed_stages=divisors, intra_opt=intra_opt,
+                        staleness=args.staleness)
         if args.fail_at is not None:
             from repro.runtime.session import PipelineSession
             session = PipelineSession(cfg, mesh, plan, prof, optimizer=opt,
-                                      backup_every=args.backup_every)
+                                      backup_every=args.backup_every,
+                                      staleness=args.staleness,
+                                      double_buffer=args.double_buffer)
             lowered = session.lowered
             print(f"asteroid plan: {lowered.stage} stages periods="
                   f"{lowered.stage_periods} M={lowered.n_micro} "
                   f"K_p={lowered.warmup} predicted latency {plan.latency:.3f}s")
             return _run_session(session, cfg, args)
-        ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt)
+        ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt,
+                                         staleness=args.staleness,
+                                         double_buffer=args.double_buffer)
         print(f"asteroid plan: {lowered.stage} stages periods="
               f"{lowered.stage_periods} M={lowered.n_micro} "
               f"K_p={lowered.warmup} alloc={lowered.micro_alloc} "
@@ -189,10 +225,13 @@ def main():
     else:
         ts = build_train_step(cfg, mesh, global_batch=args.global_batch,
                               stage=args.stage, n_micro=args.n_micro,
-                              optimizer=opt)
+                              optimizer=opt, staleness=args.staleness,
+                              double_buffer=args.double_buffer)
     print(f"plan: stage={ts.spec.plan.stage} tp={ts.spec.plan.tp} "
           f"M={ts.spec.n_micro} shard_alloc="
-          f"{ts.spec.shard_alloc or 'uniform'}")
+          f"{ts.spec.shard_alloc or 'uniform'} "
+          f"staleness={ts.spec.staleness} "
+          f"double_buffer={ts.spec.double_buffer}")
 
     key = jax.random.PRNGKey(0)
     params, opt_state = init_train_state(key, ts, opt)
@@ -203,10 +242,25 @@ def main():
     t0 = time.perf_counter()
     t_warm = None
     loss = float("nan")
+    grad_buf = None
+    # steady state starts once every jitted entry point has compiled: the
+    # sync path compiles step_fn at step 0; the bounded-staleness path
+    # compiles grad_fn (first round) at step 0 and async_step_fn at step 1
+    n_compile = 2 if ts.spec.staleness >= 1 else 1
     for step in range(args.steps):
         batch = ts.shard_batch(ds.batch(step, args.global_batch))
-        params, opt_state, loss, metrics = ts.step_fn(params, opt_state, batch)
-        if step == 0:
+        if ts.spec.staleness >= 1:
+            if grad_buf is None:
+                # first bounded-staleness round: gradients only, no update
+                # (keeps the optimizer/schedule step count equal to sync)
+                (loss, metrics), grad_buf = ts.grad_fn(params, batch)
+            else:
+                params, opt_state, grad_buf, loss, metrics = \
+                    ts.async_step_fn(params, opt_state, grad_buf, batch)
+        else:
+            params, opt_state, loss, metrics = ts.step_fn(params, opt_state,
+                                                          batch)
+        if step == n_compile - 1 and args.steps > n_compile:
             jax.block_until_ready(params)
             t_warm = time.perf_counter()      # exclude compile from FINAL
         if step % args.log_every == 0 or step == args.steps - 1:
@@ -215,13 +269,12 @@ def main():
             print(f"step {step:5d} loss {float(loss):.4f} "
                   f"ce {float(metrics['ce']):.4f} tok/s {tput:,.0f}")
     jax.block_until_ready(params)
-    if args.steps > 1:
-        # steady-state rate: steps after the first (compile) step
-        steady = args.global_batch * args.seq * (args.steps - 1) / max(
-            time.perf_counter() - t_warm, 1e-9)
-    else:
-        steady = args.global_batch * args.seq * args.steps / max(
-            time.perf_counter() - t0, 1e-9)
+    t_end = time.perf_counter()          # before the flush: its one-off jit
+    if grad_buf is not None:             # compile must not bias FINAL
+        # staleness barrier: apply the final in-flight gradient round
+        params, opt_state = ts.flush_fn(params, opt_state, grad_buf)
+        jax.block_until_ready(params)
+    steady = _steady_tok_s(args, n_compile, t0, t_warm, t_end)
     if args.checkpoint_dir:
         checkpoint.save(args.checkpoint_dir, "final", params)
         print(f"checkpoint saved to {args.checkpoint_dir}")
@@ -245,6 +298,9 @@ def _run_session(session, cfg, args) -> float:
     seen_recoveries = 0
     t0 = time.perf_counter()
     t_warm = None
+    # same compile accounting as the main path: the staleness path has two
+    # jitted entry points (first-round grad_fn, then async_step_fn)
+    n_compile = 2 if session.ts.spec.staleness >= 1 else 1
     for step in range(args.steps):
         if step == args.fail_at:
             rank = args.fail_rank
@@ -253,7 +309,7 @@ def _run_session(session, cfg, args) -> float:
             print(f"step {step}: killing rank {rank}")
             session.fail(rank)
         loss, metrics = session.step(ds.batch(step, args.global_batch))
-        if step == 0:
+        if step == n_compile - 1 and args.steps > n_compile:
             jax.block_until_ready(session.params)
             t_warm = time.perf_counter()      # exclude compile from FINAL
         if len(session.recoveries) > seen_recoveries:
@@ -272,18 +328,16 @@ def _run_session(session, cfg, args) -> float:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"ce {float(metrics['ce']):.4f} tok/s {tput:,.0f}")
     jax.block_until_ready(session.params)
+    t_end = time.perf_counter()     # flush compile must not bias FINAL
+    session.flush_gradients()       # staleness barrier at end of training
+    jax.block_until_ready(session.params)
     if args.checkpoint_dir:
         from repro import checkpoint
         checkpoint.save(args.checkpoint_dir, "final", session.params)
         print(f"checkpoint saved to {args.checkpoint_dir}")
-    # same steady-state definition as the main path: steps after the first
-    # (compile) step — FINAL lines stay comparable across the two paths
-    if args.steps > 1 and t_warm is not None:
-        tput = args.global_batch * args.seq * (args.steps - 1) / max(
-            time.perf_counter() - t_warm, 1e-9)
-    else:
-        tput = args.global_batch * args.seq * args.steps / max(
-            time.perf_counter() - t0, 1e-9)
+    # same steady-state definition as the main path (shared helper), so
+    # FINAL lines stay comparable across the two paths
+    tput = _steady_tok_s(args, n_compile, t0, t_warm, t_end)
     print(f"FINAL tok_s={tput:.1f} loss={loss:.4f}")
     print("done")
     return loss

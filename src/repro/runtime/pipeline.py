@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.schedule import scan_ticks
 from repro.distributed.compat import pcast_varying
 from repro.distributed.mesh import MeshPlan
 from repro.models.blocks import apply_period, shard_config
@@ -144,12 +145,28 @@ def _stage_fn(periods_local, period_mask_local, x, positions, cfg_local,
 
 def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
                    cfg_local: ModelConfig, ctx: ParallelCtx, n_stages: int,
-                   remat: bool = True):
+                   remat: bool = True, double_buffer: bool = False):
     """Run M micro-batches through the stage pipeline.
 
     x_micro: (M, mb, S, D) — identical on every stage (batch-sharded over
     dp axes only); returns (outs (M, mb, S, D) valid on the last stage,
     aux_loss — sum over this stage's real ticks).
+
+    ``double_buffer=False`` is the synchronous pipeline: each tick computes
+    a stage forward and then ``ppermute``s the output, so the boundary
+    transfer of micro-batch *m* serializes with the compute of *m+1* on the
+    critical path (M + P - 1 ticks, 1-tick stage hop).
+
+    ``double_buffer=True`` is the overlapped pipeline (DESIGN.md §8): the
+    scan carries a (send, recv) buffer pair and each tick (a) launches the
+    ppermute of the *previous* tick's output and (b) computes on the input
+    received the tick before — the two are data-independent inside the scan
+    body, so XLA's scheduler can run the transfer of micro-batch *m* on the
+    comm stream while *m+1* computes.  The stage hop becomes 2 ticks
+    (compute tick, then an in-flight tick), so the scan runs
+    M + 2(P - 1) ticks; per-micro-batch values are bit-identical to the
+    synchronous pipeline (same ops, same order — only the tick a transfer
+    occupies moves).
     """
     M = x_micro.shape[0]
     P_st = n_stages
@@ -157,34 +174,63 @@ def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
     # dedicated lax.map fast path trips jax 0.4.x's scan replication
     # checker (its carry-less scan infers mismatched reps), and a single
     # stage is exactly the degenerate case of the circular pipeline.
+    # A single stage has no boundary transfers to hide, so double
+    # buffering degenerates to the synchronous scan.
+    if P_st == 1:
+        double_buffer = False
     stage = lax.axis_index("stage")
     perm = [(i, (i + 1) % P_st) for i in range(P_st)]
+    hop = 2 if double_buffer else 1
 
     state0, outs0, aux0 = vary_all(
         (jnp.zeros_like(x_micro[0]), jnp.zeros_like(x_micro),
          jnp.zeros((), jnp.float32)))
 
-    def tick(carry, t):
-        state, outs, aux = carry
+    def compute(recv, outs, aux, t):
+        """One stage forward on this tick's input; masked aux/outs update.
+
+        Shared by both pipeline variants: only *when* the boundary transfer
+        runs differs, never the per-micro-batch math (the staleness-0
+        bit-identity contract, ``dist_selftest --async``).
+        """
         inp = jnp.where(stage == 0,
                         lax.dynamic_index_in_dim(x_micro, jnp.clip(t, 0, M - 1),
                                                  0, keepdims=False),
-                        state)
+                        recv)
         out, a = _stage_fn(periods_local, period_mask_local, inp, positions,
                            cfg_local, ctx, remat)
         # only ticks carrying a real micro-batch contribute aux loss
-        valid = (t >= stage) & (t < stage + M)
+        valid = (t >= hop * stage) & (t < hop * stage + M)
         aux = aux + jnp.where(valid, a, 0.0)
-        nxt = lax.ppermute(out, "stage", perm)
-        oidx = t - (P_st - 1)
+        oidx = t - hop * (P_st - 1)
         outs = jnp.where(
             (stage == P_st - 1) & (oidx >= 0),
             lax.dynamic_update_index_in_dim(outs, out, jnp.clip(oidx, 0, M - 1), 0),
             outs)
-        return vary_all((nxt, outs, aux)), None
+        return out, outs, aux
 
-    (_, outs, aux), _ = lax.scan(tick, (state0, outs0, aux0),
-                                 jnp.arange(M + P_st - 1))
+    if double_buffer:
+        def tick(carry, t):
+            send, recv, outs, aux = carry
+            # transfer of the PREVIOUS tick's output: independent of this
+            # tick's compute, so the two streams overlap
+            arrived = lax.ppermute(send, "stage", perm)
+            out, outs, aux = compute(recv, outs, aux, t)
+            return vary_all((out, arrived, outs, aux)), None
+
+        carry0 = vary_all((state0, state0, outs0, aux0))
+    else:
+        def tick(carry, t):
+            state, outs, aux = carry
+            out, outs, aux = compute(state, outs, aux, t)
+            nxt = lax.ppermute(out, "stage", perm)
+            return vary_all((nxt, outs, aux)), None
+
+        carry0 = (state0, outs0, aux0)
+
+    final, _ = lax.scan(tick, carry0,
+                        jnp.arange(scan_ticks(P_st, M, double_buffer)))
+    outs, aux = final[-2], final[-1]
     return outs, aux
 
 
@@ -217,6 +263,21 @@ class TrainSpec:
     # (and hence the gradient all-reduces their transposes create) out of
     # the pipeline loops.  False reproduces the paper-faithful baseline.
     hoist_varying: bool = True
+    # Async 1F1B runtime (DESIGN.md §8).  ``staleness`` bounds how many
+    # rounds a gradient may lag its application: 0 = synchronous semantics
+    # (round r's gradients are applied before round r+1 computes), 1 = the
+    # optimizer update for round r's gradients happens at the r+1 boundary
+    # while round r+1 computes on the pre-update params, so the gradient
+    # AllReduce has a full round to hide in.  The knob changes only the
+    # step *assembly* (runtime.train); the loss/grad functions are
+    # staleness-free.
+    staleness: int = 0
+    # Double-buffer the stage-boundary sends: the P2P transfer of
+    # micro-batch m overlaps the compute of m+1 on a second stream instead
+    # of serializing inside the tick (2-tick stage hop, M + 2(P-1) ticks).
+    # Per-micro-batch math is unchanged — gradients stay bit-identical to
+    # the synchronous pipeline.
+    double_buffer: bool = False
 
     @property
     def cfg_local(self) -> ModelConfig:
@@ -309,7 +370,8 @@ def spmd_loss_fn(spec: TrainSpec):
             x_micro = vary_all(x_micro)
         outs, aux = pipeline_apply(params["periods"], mask_local,
                                    x_micro, positions, cfg_local, ctx,
-                                   plan.stage, spec.remat)
+                                   plan.stage, spec.remat,
+                                   double_buffer=spec.double_buffer)
 
         # ---- redistribute last-stage outputs across stages ----------------
         # Every stage holds an `outs` buffer but only the last stage's is

@@ -60,9 +60,9 @@ from repro.distributed.sharding import named
 from repro.models.config import ModelConfig
 from repro.optim import AdamW, AdamWState, SGDState
 
-from .train import (_opt_shardings, build_train_step_from_lowered,
-                    init_train_state, pad_vocab_leaf, pad_vocab_params,
-                    strip_vocab_leaf, vocab_axes)
+from .train import (_assemble_train_step, _opt_shardings, init_train_state,
+                    pad_vocab_leaf, pad_vocab_params, strip_vocab_leaf,
+                    train_spec_from_lowered, vocab_axes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +113,8 @@ class PipelineSession:
         self.spec_kw = spec_kw
         self.model_axis = production_mesh.shape["model"]
 
+        self.ts = None
+        self.step_cache_hits = 0
         lowered = lower_plan(plan, cfg, self.model_axis)
         if check:
             check_against_simulator(lowered, plan, profile)
@@ -121,6 +123,9 @@ class PipelineSession:
         self.store = StageBackupStore()
         self.params = None
         self.opt_state = None
+        # bounded-staleness gradient buffer (spec.staleness >= 1): round
+        # r's gradients, applied at the r+1 boundary by async_step_fn
+        self._grad_buf = None
         self.step_count = 0
         self.clock = 0.0
         self._failed: set[int] = set()
@@ -141,13 +146,23 @@ class PipelineSession:
         # the deployed plan owns the *snapped* layer ranges — replaying from
         # it keeps the analytical old-ownership aligned with the runtime
         self.plan = snap_plan(plan, lowered, self.profile.table.L)
-        self.ts = build_train_step_from_lowered(
-            self.cfg, self.production_mesh, lowered,
-            optimizer=self.optimizer, **self.spec_kw)
+        spec = train_spec_from_lowered(self.cfg, self.production_mesh,
+                                       lowered, **self.spec_kw)
+        if self.ts is not None and spec == self.ts.spec:
+            # the re-lowered plan has the same runtime shape (stages, tp,
+            # n_micro, period split, collapsed allocation): the compiled
+            # step is still valid — skip the re-jit, only the plan-side
+            # bookkeeping above changes (device groups live in the Plan,
+            # not in the TrainSpec)
+            self.step_cache_hits += 1
+            return
+        self.ts = _assemble_train_step(self.cfg, self.production_mesh, spec,
+                                       self.optimizer, zero_opt=False)
 
     def init(self, key):
         self.params, self.opt_state = init_train_state(key, self.ts,
                                                        self.optimizer)
+        self._grad_buf = None
         return self.params
 
     # -- training loop -----------------------------------------------------
@@ -170,8 +185,22 @@ class PipelineSession:
         # ts.shard_batch re-packs for the current plan's (possibly
         # heterogeneous, possibly just-replayed) per-shard allocation
         batch = self.ts.shard_batch(batch_np)
-        self.params, self.opt_state, loss, metrics = self.ts.step_fn(
-            self.params, self.opt_state, batch)
+        if self.ts.spec.staleness >= 1:
+            # bounded-stale round: compute this round's gradients, apply
+            # the previous round's (the buffer) — the gradient AllReduce
+            # of round r overlaps round r+1 (DESIGN.md §8).  The first
+            # round (no buffer yet) computes gradients only, keeping the
+            # optimizer/schedule step count equal to the sync run.
+            if self._grad_buf is None:
+                (loss, metrics), self._grad_buf = self.ts.grad_fn(
+                    self.params, batch)
+            else:
+                (self.params, self.opt_state, self._grad_buf, loss,
+                 metrics) = self.ts.async_step_fn(
+                    self.params, self.opt_state, self._grad_buf, batch)
+        else:
+            self.params, self.opt_state, loss, metrics = self.ts.step_fn(
+                self.params, self.opt_state, batch)
         self.step_count += 1
         self.clock += max(self.plan.latency, self.coordinator.heartbeat_period)
         for r in self.live_ranks:
@@ -179,6 +208,22 @@ class PipelineSession:
         if self.backup_every and self.step_count % self.backup_every == 0:
             self.backup_now()
         return float(loss), metrics
+
+    def flush_gradients(self) -> bool:
+        """Apply the in-flight bounded-staleness gradients synchronously.
+
+        A recovery (and the end of training) is a staleness barrier: the
+        buffered round's gradients are applied with the *current* step
+        before anything migrates, so no gradient round is lost across a
+        plan swap and the migrated optimizer moments already include it.
+        Returns True when a buffer was pending.
+        """
+        if self._grad_buf is None:
+            return False
+        self.params, self.opt_state = self.ts.flush_fn(
+            self.params, self.opt_state, self._grad_buf)
+        self._grad_buf = None
+        return True
 
     # -- replication -------------------------------------------------------
 
@@ -242,6 +287,7 @@ class PipelineSession:
         if failed is None:
             raise RuntimeError("no pending failure")
         self._pending_failure = None
+        self.flush_gradients()
         self._fail_time = self.clock
         # advance the simulated clock: survivors keep heartbeating, the
         # failed rank is silent, the coordinator probes and confirms

@@ -107,6 +107,19 @@ class TrainStep:
     loss_fn: object                 # jitted (params, batch) -> (loss, metrics)
     grad_fn: object = None          # jitted (params, batch) ->
                                     #   ((loss, metrics), grads)
+    # Bounded-staleness step (spec.staleness >= 1, DESIGN.md §8): computes
+    # round r's gradients but applies the *buffered* round r-1 gradients,
+    # so the gradient AllReduce of round r has the whole of round r+1 to
+    # overlap with.  The FIRST round has no buffer yet — drive it with
+    # ``grad_fn`` alone (no optimizer update), so the update/schedule step
+    # count matches the sync run exactly (sync delayed by one boundary).
+    # jitted (params, opt_state, grad_buf, batch) ->
+    # (params', opt_state', grads, loss, metrics).
+    async_step_fn: object = None
+    # jitted (params, opt_state, grad_buf) -> (params', opt_state'): apply
+    # the buffered gradients synchronously (end of training / before a
+    # replay migration — a failure forces a staleness barrier).
+    flush_fn: object = None
 
     def shard_batch(self, batch_np: dict) -> dict:
         """Place a host batch on the mesh, first packing it for the spec's
@@ -169,7 +182,9 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      n_micro: int | None = None, optimizer: AdamW | None = None,
                      remat: bool = True, ce_chunk: int = 1024,
                      hoist_varying: bool = True, zero_opt: bool = False,
-                     stage_periods=None, shard_alloc=None) -> TrainStep:
+                     stage_periods=None, shard_alloc=None,
+                     staleness: int = 0,
+                     double_buffer: bool | None = None) -> TrainStep:
     n_heads = cfg.attn.n_heads if cfg.attn is not None else (
         cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else cfg.d_model)
     model_axis = production_mesh.shape["model"]
@@ -188,14 +203,31 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                                          global_batch, cfg)
     spec = TrainSpec(cfg=cfg, plan=plan, n_micro=n_micro, remat=remat,
                      ce_chunk=ce_chunk, hoist_varying=hoist_varying,
-                     stage_periods=stage_periods, shard_alloc=shard_alloc)
+                     stage_periods=stage_periods, shard_alloc=shard_alloc,
+                     staleness=_check_staleness(staleness),
+                     double_buffer=_default_double_buffer(double_buffer,
+                                                          staleness))
     return _assemble_train_step(cfg, production_mesh, spec, optimizer,
                                 zero_opt)
 
 
+def _check_staleness(staleness: int) -> int:
+    if staleness not in (0, 1):
+        raise ValueError(f"staleness must be 0 (sync) or 1 (bounded-stale "
+                         f"async), got {staleness}")
+    return staleness
+
+
+def _default_double_buffer(double_buffer: bool | None, staleness: int) -> bool:
+    """The async runtime double-buffers by default; the sync runtime keeps
+    the serialized sends (today's semantics) unless explicitly asked."""
+    return staleness >= 1 if double_buffer is None else bool(double_buffer)
+
+
 def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
                             *, remat: bool = True, ce_chunk: int = 1024,
-                            hoist_varying: bool = True) -> TrainSpec:
+                            hoist_varying: bool = True, staleness: int = 0,
+                            double_buffer: bool | None = None) -> TrainSpec:
     """Derive the static step configuration from a ``core.lowering``
     ``LoweredPlan`` (duck-typed: ``stage``/``n_micro``/``stage_periods``/
     ``global_batch``/``micro_alloc`` attributes), validating mesh
@@ -229,7 +261,10 @@ def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
     stage_periods = _check_stage_periods(lowered.stage_periods, plan, cfg)
     return TrainSpec(cfg=cfg, plan=plan, n_micro=lowered.n_micro, remat=remat,
                      ce_chunk=ce_chunk, hoist_varying=hoist_varying,
-                     stage_periods=stage_periods, shard_alloc=shard_alloc)
+                     stage_periods=stage_periods, shard_alloc=shard_alloc,
+                     staleness=_check_staleness(staleness),
+                     double_buffer=_default_double_buffer(double_buffer,
+                                                          staleness))
 
 
 def build_train_step_from_lowered(cfg: ModelConfig, production_mesh: Mesh,
@@ -279,18 +314,44 @@ def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
         return new_params, new_opt, loss, metrics
 
     param_shardings = named(mesh, pspecs)
-    jit_loss = jax.jit(loss_fn, in_shardings=(param_shardings, named(mesh, bspecs)))
-    jit_grad = jax.jit(grad_fn, in_shardings=(param_shardings,
-                                              named(mesh, bspecs)))
+    batch_sh = named(mesh, bspecs)
+    jit_loss = jax.jit(loss_fn, in_shardings=(param_shardings, batch_sh))
+    jit_grad = jax.jit(grad_fn, in_shardings=(param_shardings, batch_sh))
     opt_sh = _opt_shardings(optimizer, abstract, param_shardings,
                             zero_sharding=zero_opt)
     jit_step = jax.jit(step_fn, in_shardings=(
-        param_shardings, opt_sh, named(mesh, bspecs)),
+        param_shardings, opt_sh, batch_sh),
         out_shardings=(param_shardings, opt_sh, None, None))
+
+    jit_async = jit_flush = None
+    if spec.staleness >= 1:
+        # Bounded-staleness step: the update consumes the PREVIOUS round's
+        # gradient buffer, so nothing downstream of this round's gradient
+        # AllReduce is on this round's critical path — the AllReduce of
+        # round r may complete any time before the r+1 boundary update
+        # (staleness 1; DESIGN.md §8).  Gradients share the param tree
+        # structure and shardings (the shard_map transpose psums them onto
+        # the param specs).
+        def async_step_fn(params, opt_state, grad_buf, batch):
+            (loss, metrics), grads = grad_fn(params, batch)
+            new_params, new_opt = optimizer.update(grad_buf, opt_state, params)
+            return new_params, new_opt, grads, loss, metrics
+
+        def flush_fn(params, opt_state, grad_buf):
+            return optimizer.update(grad_buf, opt_state, params)
+
+        jit_async = jax.jit(async_step_fn, in_shardings=(
+            param_shardings, opt_sh, param_shardings, batch_sh),
+            out_shardings=(param_shardings, opt_sh, param_shardings,
+                           None, None))
+        jit_flush = jax.jit(flush_fn, in_shardings=(
+            param_shardings, opt_sh, param_shardings),
+            out_shardings=(param_shardings, opt_sh))
 
     return TrainStep(spec=spec, mesh=mesh, param_specs=pspecs,
                      batch_specs=bspecs, step_fn=jit_step, loss_fn=jit_loss,
-                     grad_fn=jit_grad)
+                     grad_fn=jit_grad, async_step_fn=jit_async,
+                     flush_fn=jit_flush)
 
 
 def _zero_moment_shardings(abstract_params, param_shardings):

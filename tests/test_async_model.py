@@ -1,0 +1,185 @@
+"""Two-stream (async 1F1B) cost model: schedule enumeration, overlapped
+round latency, simulator staleness/serialization modes, planner knob."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.costmodel import (Step, exec_phase_latency, hpp_round_latency,
+                                  max_allreduce, round_latency,
+                                  round_latency_async,
+                                  round_latency_serialized,
+                                  unhidden_allreduce)
+from repro.core.hardware import MBPS_100, env_b, env_d
+from repro.core.planner import Plan, plan_hpp
+from repro.core.profiler import Profile
+from repro.core.schedule import (comm_stream, scan_ticks, schedule_orders,
+                                 two_stream_orders)
+from repro.core.simulator import reprice_plan, simulate
+from repro.configs.paper_models import PAPER_MODELS
+
+
+def _steps(ta=(0.3, 0.2), comm=0.05):
+    """Two exec steps with AllReduce phases, one comm step between."""
+    return (Step("exec", 1.0, 2.0, ta[0], (0,), (0, 2), (2,)),
+            Step("comm", comm, comm),
+            Step("exec", 1.1, 2.1, ta[1], (1,), (2, 4), (2,)))
+
+
+# ---------------------------------------------------------------------------
+# schedule enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_two_stream_orders_counts():
+    P, M = 3, 5
+    compute, comm = two_stream_orders(P, M, staleness=1)
+    assert compute == schedule_orders(P, M)
+    for p in range(P):
+        sends = [o for o in comm[p] if o.kind == "S"]
+        recvs = [o for o in comm[p] if o.kind == "R"]
+        ars = [o for o in comm[p] if o.kind == "A"]
+        assert len(sends) == (M if p < P - 1 else 0)
+        assert len(recvs) == (M if p > 0 else 0)
+        assert len(ars) == 1 and comm[p][-1].kind == "A"
+        # sends follow compute completion order: micro indices of F ops
+        f_order = [o.micro for o in compute[p] if o.kind == "F"]
+        if p < P - 1:
+            assert [o.micro for o in sends] == f_order
+
+
+def test_comm_stream_sync_has_no_allreduce_op():
+    order = schedule_orders(2, 4)[0]
+    assert all(o.kind != "A" for o in comm_stream(order, 0, 2, staleness=0))
+
+
+def test_scan_ticks():
+    assert scan_ticks(4, 8) == 11                    # M + P - 1
+    assert scan_ticks(4, 8, double_buffer=True) == 14   # M + 2(P-1)
+    assert scan_ticks(1, 8) == scan_ticks(1, 8, True) == 8
+
+
+# ---------------------------------------------------------------------------
+# overlapped round latency
+# ---------------------------------------------------------------------------
+
+
+def test_async_latency_is_max_of_exec_and_allreduce():
+    steps, M = _steps(), 4
+    assert round_latency_async(steps, M) == pytest.approx(
+        max(exec_phase_latency(steps, M), max_allreduce(steps)))
+    # small AllReduce: fully hidden, async == pure execution phase
+    assert unhidden_allreduce(steps, M) == 0.0
+    # huge AllReduce: charged only for the part exceeding the round
+    big = tuple(dataclasses.replace(s, ta=100.0) if s.kind == "exec" else s
+                for s in steps)
+    assert round_latency_async(big, M) == pytest.approx(100.0)
+    assert unhidden_allreduce(big, M) == pytest.approx(
+        100.0 - exec_phase_latency(steps, M))
+
+
+def test_latency_ordering_async_le_sync_le_serialized():
+    for ta in ((0.0, 0.0), (0.3, 0.2), (5.0, 1.0)):
+        for comm in (0.0, 0.05, 2.0):
+            steps = _steps(ta, comm)
+            for M in (1, 4, 16):
+                a = round_latency_async(steps, M)
+                s = round_latency(steps, M)
+                z = round_latency_serialized(steps, M)
+                assert a <= s * (1 + 1e-12), (ta, comm, M)
+                assert s <= z * (1 + 1e-12), (ta, comm, M)
+
+
+def test_hpp_round_latency_dispatch():
+    steps, M = _steps(), 4
+    assert hpp_round_latency(steps, M, 0) == round_latency(steps, M)
+    assert hpp_round_latency(steps, M, 1) == round_latency_async(steps, M)
+
+
+def test_serialized_merges_comm_into_downstream_stage():
+    steps = _steps(ta=(0.0, 0.0), comm=0.5)
+    # one-stream: the comm cost rides the second exec step's per-micro time
+    M = 8
+    merged = (Step("exec", 1.0, 2.0, 0.0), Step("exec", 1.6, 2.6, 0.0))
+    assert round_latency_serialized(steps, M) == pytest.approx(
+        round_latency(merged, M))
+
+
+# ---------------------------------------------------------------------------
+# simulator two-stream modes
+# ---------------------------------------------------------------------------
+
+
+def _small_plan(staleness=0):
+    table = PAPER_MODELS["bert-small"]()
+    prof = Profile.analytic(table, env_b(MBPS_100).sorted_by_memory(),
+                            max_batch=32)
+    return plan_hpp(prof, 32, 8, allowed_stages={2},
+                    staleness=staleness), prof
+
+
+def test_simulate_staleness_hides_allreduce():
+    plan, prof = _small_plan()
+    sync = simulate(plan, prof)                     # plan.staleness == 0
+    asy = simulate(plan, prof, staleness=1)
+    assert asy.makespan <= sync.makespan + 1e-12
+    assert asy.makespan == pytest.approx(
+        max(asy.exec_span_s, asy.allreduce_s))
+    assert asy.allreduce_s > 0                      # 2-stage: replicated groups
+    assert asy.hidden_comm_s >= 0
+    assert sync.staleness == 0 and asy.staleness == 1
+    # exec spans agree: staleness changes only the AllReduce charging
+    assert asy.exec_span_s == pytest.approx(sync.exec_span_s)
+
+
+def test_simulate_defaults_to_plan_staleness():
+    plan, prof = _small_plan(staleness=1)
+    assert plan.staleness == 1
+    assert simulate(plan, prof).staleness == 1
+
+
+def test_simulate_serialize_p2p_is_slower():
+    plan, prof = _small_plan()
+    overlapped = simulate(plan, prof)
+    serialized = simulate(plan, prof, serialize_p2p=True)
+    assert serialized.makespan >= overlapped.makespan
+    assert serialized.exec_span_s > overlapped.exec_span_s
+
+
+# ---------------------------------------------------------------------------
+# planner knob
+# ---------------------------------------------------------------------------
+
+
+def test_plan_hpp_staleness_never_worse():
+    table = PAPER_MODELS["bert-small"]()
+    prof = Profile.analytic(table, env_b(MBPS_100).sorted_by_memory(),
+                            max_batch=32)
+    sync = plan_hpp(prof, 32, 8)
+    asy = plan_hpp(prof, 32, 8, staleness=1)
+    assert asy.latency <= sync.latency * (1 + 1e-12)
+    assert sync.staleness == 0 and asy.staleness == 1
+
+
+def test_plan_default_staleness_back_compat():
+    assert Plan("x", (), (), 1, 1, 0.0).staleness == 0
+
+
+def test_reprice_preserves_staleness():
+    plan, prof = _small_plan(staleness=1)
+    rp = reprice_plan(plan, prof)
+    assert rp.staleness == 1
+    assert rp.latency == pytest.approx(
+        round_latency_async(rp.steps, rp.n_micro))
+
+
+def test_plan_hpp_auto_offload_never_worse():
+    table = PAPER_MODELS["bert-small"]()
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=32)
+    full = plan_hpp(prof, 32, 8, intra_opt=True)
+    base = plan_hpp(prof, 32, 8, intra_opt=False)
+    auto = plan_hpp(prof, 32, 8, intra_opt="auto")
+    assert auto.latency <= min(full.latency, base.latency) * (1 + 1e-12)
+    if auto.latency >= base.latency * (1 - 1e-9):
+        # no strict predicted gain: auto must have dropped Phase 2
+        assert auto.stages == base.stages

@@ -57,6 +57,17 @@ def test_train_hetero_allocation():
 
 
 @pytest.mark.slow
+def test_train_async_equivalence():
+    """Async 1F1B runtime: staleness 0 + double-buffered sends is
+    gradient-bit-identical to the synchronous runtime on the same batch,
+    a staleness-1 run applies exactly as many optimizer updates as sync
+    (the first round computes gradients only), and converges to within
+    tolerance of the sync run on the same batch stream (DESIGN.md §8)."""
+    out = _run(["--async", "phi3-mini-3.8b"])
+    assert "grad-bit-identical=True" in out
+
+
+@pytest.mark.slow
 def test_replay_session():
     """Live pipeline replay (runtime.session): kill a rank mid-training,
     recover through lightweight replay + param migration, keep training —

@@ -281,3 +281,24 @@ def test_session_replay_reuses_measured_profile():
     # the replan ran on the SAME measured profile object the session loaded
     assert session.profile is prof and session.profile.source == "measured"
     assert session.recoveries[0].report.new_plan.latency > 0
+
+
+@pytest.mark.slow
+def test_two_process_gather_selftest():
+    """The multi-process gather path (``process_allgather`` with the CPU
+    KV-store fallback) produces a 2-row artifact a planner can consume —
+    run in subprocesses so the distributed runtime does not leak into this
+    process (ROADMAP: multi-process gather CI coverage)."""
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(root, "src")}
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.profile_selftest"],
+        capture_output=True, text=True, timeout=540, env=env, cwd=root)
+    assert proc.returncode == 0, \
+        f"\nstdout:{proc.stdout}\nstderr:{proc.stderr[-2000:]}"
+    assert "2-process gather OK" in proc.stdout

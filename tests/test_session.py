@@ -265,3 +265,78 @@ def test_coordinator_requires_confirmation():
     c = ReplayCoordinator([0, 1])
     with pytest.raises(RuntimeError):
         c.run_recovery(1, object())
+
+
+# ---------------------------------------------------------------------------
+# jitted-step cache across replay replans + bounded-staleness session
+# ---------------------------------------------------------------------------
+
+
+def test_replay_reuses_jitted_step_when_spec_unchanged():
+    """A lightweight replay whose re-lowered runtime shape (stages, tp,
+    n_micro, period split, collapsed allocation) is unchanged must keep the
+    compiled step instead of re-jitting — and, under staleness 1, the
+    in-flight gradient round is flushed at the recovery barrier."""
+    from jax.sharding import Mesh
+
+    from repro.core.hardware import env_d
+    from repro.core.planner import plan_hpp
+    from repro.data import SyntheticLM
+    from repro.runtime.session import PipelineSession
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    cfg = cfg.replace(n_layers=2 * len(cfg.pattern))
+    B, S = 4, 32
+    table = LayerTable.from_model_config(cfg, S)
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=B)
+    # single-stage plan over the whole edge group: losing one group member
+    # re-allocates samples but keeps the runtime shape on a (1, 1) mesh
+    plan = plan_hpp(prof, B, micro_batch=2, arch=cfg.name,
+                    allowed_stages={1})
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    session = PipelineSession(cfg, mesh, plan, prof, backup_every=0,
+                              staleness=1)
+    assert session.ts.spec.staleness == 1
+    session.init(jax.random.PRNGKey(0))
+    ds = SyntheticLM(cfg.vocab_size, S)
+    for s in range(2):
+        session.step(ds.batch(s, B))
+    assert session._grad_buf is not None      # a round is in flight
+    old_async_step = session.ts.async_step_fn
+
+    st = session.plan.stages[0]
+    assert len(st.group) > 1, st
+    session.fail(st.group[-1])
+    out = session.recover_now()
+    assert out.mode == "lightweight"
+    assert session._grad_buf is None          # flushed at the barrier
+    assert session.step_cache_hits == 1
+    assert session.ts.async_step_fn is old_async_step
+
+    loss, _ = session.step(ds.batch(3, B))
+    assert np.isfinite(loss)
+
+
+def test_install_rejits_only_on_spec_change():
+    """Re-installing the same lowered plan is a cache hit; a spec-level
+    change (e.g. different staleness spec_kw) rebuilds."""
+    from jax.sharding import Mesh
+
+    from repro.core.hardware import env_d
+    from repro.core.planner import plan_hpp
+    from repro.runtime.session import PipelineSession
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    cfg = cfg.replace(n_layers=2 * len(cfg.pattern))
+    table = LayerTable.from_model_config(cfg, 32)
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=4)
+    plan = plan_hpp(prof, 4, micro_batch=2, arch=cfg.name, allowed_stages={1})
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    session = PipelineSession(cfg, mesh, plan, prof, backup_every=0)
+    old = session.ts
+    session._install(session.plan, session.lowered)
+    assert session.step_cache_hits == 1 and session.ts is old
+    session.spec_kw["staleness"] = 1          # spec change -> re-jit
+    session._install(session.plan, session.lowered)
+    assert session.step_cache_hits == 1 and session.ts is not old
+    assert session.ts.async_step_fn is not None
