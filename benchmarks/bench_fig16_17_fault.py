@@ -1,4 +1,5 @@
-"""Fig. 16/17: fault-tolerant pipeline replay vs heavy rescheduling.
+"""Fig. 16/17: fault-tolerant pipeline replay vs heavy rescheduling, plus
+the elastic-membership churn extension.
 
 Paper: on Env D (1x TX2 + 3x Nano, EfficientNet-B1), the lightweight replay
 recovers ~14x faster than heavy rescheduling while keeping ~90% of its
@@ -12,14 +13,30 @@ device) which ``benchmarks.run`` serializes to ``BENCH_fault.json`` so the
 recovery-time / post-recovery-throughput trajectory is tracked across PRs.
 ``quick=True`` uses the coarse 25-layer EfficientNet table and a single
 micro-batch candidate (CI-friendly; the fine 213-layer table is what makes
-full re-planning expensive and the paper ratio large)."""
+full re-planning expensive and the paper ratio large).
+
+``run_churn_structured`` subjects the same Env-D pipeline to a seeded
+Poisson join/leave/fail schedule driven through the membership replays
+(``admission_replay``/``departure_replay``/``lightweight_replay``),
+recording throughput-under-churn and per-event recovery latency against
+(a) the no-churn baseline and (b) an FTPipeHD-style handler that reacts to
+*every* membership change with full weight redistribution (aggregate ->
+re-plan from scratch -> redistribute).  Under ``quick`` it additionally
+runs a real 4-host-device training subprocess through a join+drain
+schedule (``launch/train.py --events``) and records the simulated-clock
+throughput improvement the accepted join bought."""
 
 from __future__ import annotations
 
-from repro.core.hardware import env_d
-from repro.core.planner import auto_microbatch
-from repro.core.profiler import Profile
-from repro.core.replay import (JETSON_REPLAN_SCALE, heavy_rescheduling,
+import time
+
+import numpy as np
+
+from repro.core.hardware import JETSON_NX, JETSON_TX2, env_d
+from repro.core.planner import auto_microbatch, plan_hpp
+from repro.core.profiler import Profile, extend_profile
+from repro.core.replay import (JETSON_REPLAN_SCALE, admission_replay,
+                               departure_replay, heavy_rescheduling,
                                lightweight_replay)
 from repro.configs.paper_models import efficientnet_b1, efficientnet_b1_fine
 
@@ -76,3 +93,219 @@ def run_structured(quick: bool = False) -> tuple[list[str], list[dict]]:
 
 def run(quick: bool = False) -> list[str]:
     return run_structured(quick)[0]
+
+
+# --------------------------------------------------------------------------
+# elastic-membership churn: Poisson join/leave schedule over the same plan
+# --------------------------------------------------------------------------
+
+#: devices that attempt to join Env D during the churn run (cycled)
+_JOIN_POOL = (JETSON_NX, JETSON_TX2)
+
+#: mean inter-event gap, in training rounds (exponential / Poisson process)
+_MEAN_GAP_ROUNDS = 20.0
+
+
+def _ftpipehd_event_s(plan, profile: Profile, member_ranks) -> float:
+    """FTPipeHD-style reaction to *any* membership change: aggregate every
+    stage model to the coordinator, re-plan from scratch on the new member
+    set (Jetson-scaled wall time), redistribute all weights."""
+    from repro.core.hardware import Cluster
+
+    table = profile.table
+    bw = profile.cluster.bandwidth
+    aggregate = sum(table.param_bytes(*st.layers) for st in plan.stages) / bw
+    devs = tuple(profile.cluster.devices[r] for r in sorted(member_ranks))
+    sub = Profile.analytic(table, Cluster(devs, bw), profile.max_batch)
+    t0 = time.perf_counter()
+    new_plan = plan_hpp(sub, plan.global_batch, plan.micro_batch,
+                        arch=plan.arch)
+    replan = (time.perf_counter() - t0) * JETSON_REPLAN_SCALE
+    redistribute = sum(table.param_bytes(*st.layers)
+                       for st in new_plan.stages) / bw
+    return aggregate + replan + redistribute
+
+
+def run_churn_structured(quick: bool = False, n_events: int | None = None,
+                         seed: int = 0) -> tuple[list[str], list[dict], dict]:
+    """Poisson join/drain/fail/evict churn over the Env-D pipeline.
+
+    Simulated clock: training rounds accumulate samples at the *current*
+    plan's latency; each membership event charges its recovery stall (the
+    same quantities ``runtime.session`` blocks on).  Returns per-event
+    records plus a summary comparing throughput-under-churn against the
+    never-churned baseline and the cumulative FTPipeHD stall."""
+    rng = np.random.default_rng(seed)
+    rows: list[str] = []
+    records: list[dict] = []
+    table = efficientnet_b1(32) if quick else efficientnet_b1_fine()
+    prof = Profile.analytic(table, env_d().sorted_by_memory(), max_batch=64)
+    plan = auto_microbatch(prof, 512, arch="efficientnet-b1",
+                           candidates=(32,) if quick else (16, 32))
+    base_tput = plan.throughput
+    # replay bound: worst lightweight-replay recovery (sans detection) on
+    # the base plan — the yardstick Fig. 17 records; every churn event's
+    # recovery latency must stay within it
+    replay_bound = max(
+        rep.total_s - rep.detection_s
+        for rep in (lightweight_replay(plan, prof, r)
+                    for r in sorted({st.group[0] for st in plan.stages})))
+    n_events = n_events if n_events is not None else (6 if quick else 10)
+    members = set(range(len(prof.cluster.devices)))
+    extras: list[int] = []          # joined ranks still serving
+    t = 0.0
+    samples = 0.0
+    stall_total = 0.0
+    ftpipehd_total = 0.0
+    accepted_joins = 0
+    join_i = 0
+    for i in range(n_events):
+        gap_rounds = 1.0 + rng.exponential(_MEAN_GAP_ROUNDS)
+        samples += gap_rounds * plan.global_batch
+        t += gap_rounds * plan.latency
+        if i == 0 or not extras:
+            kind = "join"           # guarantee a mid-training join early
+        else:
+            kind = str(rng.choice(["join", "drain", "fail", "evict"],
+                                  p=[0.4, 0.25, 0.2, 0.15]))
+        tput_before = plan.throughput
+        rec = {"event": i, "kind": kind, "t_s": t,
+               "tput_before": tput_before}
+        if kind == "join":
+            dev = _JOIN_POOL[join_i % len(_JOIN_POOL)]
+            join_i += 1
+            ext = extend_profile(prof, dev)
+            new_rank = len(ext.cluster.devices) - 1
+            decision = admission_replay(plan, ext, new_rank)
+            ftpipehd_s = _ftpipehd_event_s(plan, ext,
+                                           members | {new_rank})
+            rec.update(device=dev.name, accepted=decision.accepted,
+                       reason=decision.reason,
+                       incumbent_latency_s=decision.incumbent_latency,
+                       candidate_latency_s=decision.candidate_latency)
+            if decision.accepted:
+                rep = decision.report
+                stall = rep.total_s
+                recovery = rep.total_s
+                prof, plan = ext, rep.new_plan
+                members.add(new_rank)
+                extras.append(new_rank)
+                accepted_joins += 1
+                rec.update(rank=new_rank, replan_s=rep.replan_s,
+                           migration_s=rep.migration_s,
+                           replicate_s=rep.replicate_s)
+            else:
+                stall = recovery = decision.replan_s
+        else:
+            rank = int(rng.choice(sorted(extras)))
+            ftpipehd_s = _ftpipehd_event_s(plan, prof, members - {rank})
+            if kind == "fail":
+                rep = lightweight_replay(plan, prof, rank)
+                stall = rep.total_s
+                recovery = rep.total_s - rep.detection_s
+            else:
+                rep = departure_replay(plan, prof, rank,
+                                       graceful=(kind == "drain"))
+                stall = rep.stall_s
+                recovery = rep.stall_s
+            plan = rep.new_plan
+            members.discard(rank)
+            extras.remove(rank)
+            rec.update(rank=rank, replan_s=rep.replan_s,
+                       migration_s=rep.migration_s,
+                       overlapped=rep.overlapped)
+        t += stall
+        stall_total += stall
+        ftpipehd_total += ftpipehd_s
+        rec.update(stall_s=stall, recovery_s=recovery,
+                   replay_bound_s=replay_bound,
+                   within_replay_bound=recovery <= replay_bound,
+                   ftpipehd_s=ftpipehd_s, tput_after=plan.throughput)
+        records.append(rec)
+        rows.append(row(
+            f"churn/ev{i}_{kind}", recovery,
+            stall_s=f"{stall:.2f}", ftpipehd_s=f"{ftpipehd_s:.2f}",
+            within_bound=str(recovery <= replay_bound),
+            tput=f"{tput_before:.1f}->{plan.throughput:.1f}"))
+    # drain the tail so the last event's plan contributes throughput too
+    tail_rounds = 1.0 + rng.exponential(_MEAN_GAP_ROUNDS)
+    samples += tail_rounds * plan.global_batch
+    t += tail_rounds * plan.latency
+    churn_tput = samples / t
+    summary = {
+        "n_events": n_events,
+        "accepted_joins": accepted_joins,
+        "base_tput_samples_s": base_tput,
+        "churn_tput_samples_s": churn_tput,
+        "replay_bound_s": replay_bound,
+        "max_recovery_s": max(r["recovery_s"] for r in records),
+        "all_within_replay_bound": all(r["within_replay_bound"]
+                                       for r in records),
+        "asteroid_stall_s": stall_total,
+        "ftpipehd_stall_s": ftpipehd_total,
+        "stall_speedup": ftpipehd_total / max(stall_total, 1e-9),
+    }
+    rows.append(row(
+        "churn/summary", churn_tput,
+        base_tput=f"{base_tput:.1f}", churn_tput=f"{churn_tput:.1f}",
+        accepted_joins=str(accepted_joins),
+        stall_s=f"{stall_total:.2f}", ftpipehd_s=f"{ftpipehd_total:.2f}",
+        stall_speedup=f"{ftpipehd_total / max(stall_total, 1e-9):.1f}x"))
+    if quick:
+        try:
+            live = _launch_churn_session()
+        except Exception as exc:          # noqa: BLE001 — optional arm
+            rows.append(row("churn/runtime_session", 0.0,
+                            error=repr(exc)[:120]))
+        else:
+            summary["runtime_session"] = live
+            rows.append(row(
+                "churn/runtime_session", live["sim_tok_s"],
+                base_sim_tok_s=f"{live['base_sim_tok_s']:.1f}",
+                sim_tok_s=f"{live['sim_tok_s']:.1f}",
+                join_accepted=str(live["join_accepted"]),
+                round_s=(f"{live['latency_before_s']:.3f}->"
+                         f"{live['latency_after_s']:.3f}")))
+    return rows, records, summary
+
+
+def _launch_churn_session(steps: int = 10, timeout: int = 1200) -> dict:
+    """Drive the *real* runtime through a join+drain schedule on 4 host
+    devices (``launch/train.py --events``) and parse the simulated-clock
+    throughput plus the accepted join's latency improvement."""
+    import os
+    import re
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    args = [sys.executable, "-m", "repro.launch.train", "--smoke",
+            "--devices", "4", "--plan", "--steps", str(steps),
+            "--global-batch", "4", "--seq", "32", "--n-layers", "8",
+            "--backup-every", "3", "--env", "A", "--bandwidth", "1000",
+            "--events", "join@3:a100,drain@7:4"]
+    proc = subprocess.run(args, capture_output=True, text=True,
+                          timeout=timeout, env=env, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(f"launch.train --events failed:\n"
+                           f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    sim = re.search(r"FINAL sim_tok_s=([0-9.]+)", proc.stdout)
+    joined = re.search(r"joined \(accepted.*?([0-9.]+)s -> ([0-9.]+)s/round",
+                       proc.stdout)
+    assert sim, proc.stdout[-2000:]
+    lat0 = float(joined.group(1)) if joined else float("nan")
+    lat1 = float(joined.group(2)) if joined else float("nan")
+    # never-churned simulated throughput: every round at the initial latency
+    tokens_per_round = 4 * 32
+    return {"sim_tok_s": float(sim.group(1)),
+            "base_sim_tok_s": tokens_per_round / lat0 if joined else
+            float("nan"),
+            "join_accepted": bool(joined),
+            "latency_before_s": lat0, "latency_after_s": lat1}
+
+
+def run_churn(quick: bool = False) -> list[str]:
+    return run_churn_structured(quick)[0]

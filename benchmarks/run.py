@@ -5,9 +5,11 @@ Prints ``name,us_per_call,derived`` CSV.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table4 fig13 ...]
         [--quick] [--json-out BENCH_fault.json]
 
-The fault suite (fig16) additionally writes a machine-readable
-``BENCH_fault.json`` (recovery times + post-recovery throughput for
-lightweight vs heavy) and the throughput suite (table4) writes
+The fault-family suites (fig16, churn) additionally write a machine-readable
+``BENCH_fault.json`` (fig16: recovery times + post-recovery throughput for
+lightweight vs heavy; churn: per-membership-event recovery latency +
+throughput-under-churn, merged into the same document under the ``churn`` /
+``churn_summary`` keys) and the throughput suite (table4) writes
 ``BENCH_throughput.json`` (Table 4 + Fig. 15a variants + the measured
 runtime ablation + the profile_gap predicted-vs-measured records) so the
 perf trajectory is recorded across PRs; ``--quick`` runs CI-friendly
@@ -35,10 +37,27 @@ SUITES = {
     "fig14": bench_fig14_convergence.run,
     "fig15": bench_fig15_ablation.run,
     "fig16": bench_fig16_17_fault.run,
+    "churn": bench_fig16_17_fault.run_churn,
     "fig18": bench_fig18_scalability.run,
     "table7": bench_table7_overhead.run,
     "roofline": bench_roofline.run,
 }
+
+
+def _merge_fault_json(path: str, quick: bool, **sections) -> None:
+    """fig16 and churn share one BENCH_fault.json; each suite overwrites
+    only its own keys so ``--only churn`` extends an existing fig16 doc."""
+    doc: dict = {}
+    try:
+        with open(path) as f:
+            existing = json.load(f)
+        if isinstance(existing, dict) and existing.get("suite") == "fig16":
+            doc = existing
+    except (OSError, ValueError):
+        pass
+    doc.update({"suite": "fig16", "quick": quick, **sections})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
 
 
 def main() -> None:
@@ -46,9 +65,10 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=None, choices=list(SUITES))
     ap.add_argument("--quick", action="store_true",
                     help="reduced problem sizes where supported "
-                         "(fig16, table4)")
+                         "(fig16, churn, table4)")
     ap.add_argument("--json-out", default="BENCH_fault.json",
-                    help="where the fault suite writes its JSON record")
+                    help="where the fault-family suites (fig16, churn) "
+                         "write/merge their JSON record")
     ap.add_argument("--throughput-json-out", default="BENCH_throughput.json",
                     help="where the throughput suite (table4 + Fig. 15a "
                          "variants + measured runtime ablation) writes its "
@@ -66,10 +86,16 @@ def main() -> None:
         try:
             if name == "fig16":
                 lines, records = bench_fig16_17_fault.run_structured(args.quick)
-                with open(args.json_out, "w") as f:
-                    json.dump({"suite": "fig16", "quick": args.quick,
-                               "records": records}, f, indent=2)
+                _merge_fault_json(args.json_out, args.quick,
+                                  records=records)
                 print(f"# fig16 records -> {args.json_out}", file=sys.stderr)
+            elif name == "churn":
+                lines, churn_records, churn_summary = \
+                    bench_fig16_17_fault.run_churn_structured(args.quick)
+                _merge_fault_json(args.json_out, args.quick,
+                                  churn=churn_records,
+                                  churn_summary=churn_summary)
+                print(f"# churn records -> {args.json_out}", file=sys.stderr)
             elif name == "table4":
                 # the measured (subprocess) ablation only under --quick (CI
                 # sizes) or by explicit request — the plain analytic sweep

@@ -1,0 +1,192 @@
+"""Cross-PR perf-trend gate over the BENCH_*.json series.
+
+Feed it a chronological series of benchmark records (oldest first, the
+file under test last) and it renders a sparkline table per metric and
+**fails (exit 1) when a throughput-direction metric in the newest file
+regresses more than ``--threshold`` (default 10%) below the rolling
+median of the previous ``--window`` files**:
+
+    python -m benchmarks.trend artifacts/BENCH_fault_*.json BENCH_fault.json
+    python -m benchmarks.trend --threshold 0.10 old1.json old2.json new.json
+
+Ingests both fault-family documents (``suite: fig16`` — Fig. 16/17
+records plus the elastic-membership ``churn``/``churn_summary`` keys) and
+throughput documents (``suite: throughput`` — table4 / fig15a /
+fig15a_runtime / profile_gap records).  Per-record lists are aggregated
+to their mean per key; nested summaries are flattened.  Only
+higher-is-better metrics (throughput, tok/s, speedups, gains) gate the
+exit code — wall-clock metrics (re-plan and recovery seconds) are
+displayed with a ``v`` direction marker but carry too much host noise to
+gate on.  Fewer than two ingestible files is a pass (nothing to compare
+against yet).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from statistics import median
+
+SPARKS = "▁▂▃▄▅▆▇█"
+
+#: higher-is-better name fragments (checked first: "recovery_speedup" gates)
+_HIGHER = ("tput", "tok_s", "speedup", "gain", "throughput", "samples_s",
+           "keep", "accepted_joins")
+#: lower-is-better fragments — displayed, never gated (host-noise wall time)
+_LOWER = ("_s", "recovery", "stall", "latency", "overhead", "loss", "bytes")
+#: identifiers / configuration, not performance
+_IGNORE = ("event", "rank", "steps", "stages", "n_events", "quick", "seed",
+           "boundary", "layers")
+
+
+def _direction(name: str) -> int:
+    """+1 gated higher-is-better, -1 display-only lower-is-better, 0 skip."""
+    leaf = name.rsplit(".", 1)[-1]
+    if any(f in leaf for f in _IGNORE):
+        return 0
+    if any(f in leaf for f in _HIGHER):
+        return 1
+    if any(f in leaf for f in _LOWER):
+        return -1
+    return 0
+
+
+def _numeric(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _aggregate(out: dict, prefix: str, records: list) -> None:
+    """Mean of each numeric key across a list of record dicts."""
+    cols: dict[str, list[float]] = {}
+    for rec in records:
+        if not isinstance(rec, dict):
+            continue
+        for k, v in rec.items():
+            if _numeric(v):
+                cols.setdefault(k, []).append(float(v))
+    for k, vals in cols.items():
+        out[f"{prefix}.{k}"] = sum(vals) / len(vals)
+
+
+def _scalars(out: dict, prefix: str, doc: dict) -> None:
+    """Numeric leaves of a (possibly nested) summary dict."""
+    for k, v in doc.items():
+        if _numeric(v):
+            out[f"{prefix}.{k}"] = float(v)
+        elif isinstance(v, dict):
+            _scalars(out, f"{prefix}.{k}", v)
+
+
+def extract_metrics(doc: dict) -> dict[str, float]:
+    """Flatten one BENCH_*.json document to ``{metric_name: value}``."""
+    out: dict[str, float] = {}
+    suite = doc.get("suite")
+    records = doc.get("records") or []
+    if suite == "fig16":
+        _aggregate(out, "fig16", records)
+        _aggregate(out, "churn", doc.get("churn") or [])
+        _scalars(out, "churn_summary", doc.get("churn_summary") or {})
+    elif suite == "throughput":
+        groups: dict[str, list] = {}
+        for rec in records:
+            if isinstance(rec, dict):
+                groups.setdefault(str(rec.get("suite", "rec")),
+                                  []).append(rec)
+        for name, recs in groups.items():
+            _aggregate(out, name, recs)
+    elif isinstance(doc, dict):
+        _scalars(out, suite or "doc", doc)
+    return out
+
+
+def sparkline(values: list[float]) -> str:
+    lo, hi = min(values), max(values)
+    if hi - lo < 1e-12:
+        return SPARKS[3] * len(values)
+    return "".join(SPARKS[int((v - lo) / (hi - lo) * (len(SPARKS) - 1))]
+                   for v in values)
+
+
+def check(series: list[dict[str, float]], window: int = 8,
+          threshold: float = 0.10) -> tuple[list[str], list[str]]:
+    """Compare the last snapshot against the rolling median of up to
+    ``window`` previous ones.  Returns (table_lines, regressions)."""
+    lines: list[str] = []
+    regressions: list[str] = []
+    names = sorted({n for snap in series for n in snap})
+    head = (f"{'metric':44s} {'trend':>10s} {'median':>12s} "
+            f"{'latest':>12s} {'delta':>8s}  gate")
+    lines.append(head)
+    lines.append("-" * len(head))
+    for name in names:
+        vals = [snap[name] for snap in series if name in snap]
+        direction = _direction(name)
+        if name not in series[-1] or direction == 0:
+            continue
+        latest = series[-1][name]
+        prior = [snap[name] for snap in series[:-1] if name in snap]
+        prior = prior[-window:]
+        spark = sparkline(vals[-(window + 1):])
+        if not prior:
+            lines.append(f"{name:44s} {spark:>10s} {'-':>12s} "
+                         f"{latest:12.3f} {'-':>8s}  new")
+            continue
+        med = median(prior)
+        delta = (latest - med) / med if med else 0.0
+        gated = direction > 0
+        bad = gated and delta < -threshold
+        mark = ("REGRESSION" if bad else
+                ("^ ok" if gated else "v info"))
+        lines.append(f"{name:44s} {spark:>10s} {med:12.3f} "
+                     f"{latest:12.3f} {delta:+7.1%}  {mark}")
+        if bad:
+            regressions.append(
+                f"{name}: {latest:.3f} is {-delta:.1%} below the rolling "
+                f"median {med:.3f} of the previous {len(prior)} run(s)")
+    return lines, regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="sparkline trend + >threshold throughput-regression "
+                    "gate over a chronological BENCH_*.json series")
+    ap.add_argument("files", nargs="+",
+                    help="benchmark JSON records, oldest first")
+    ap.add_argument("--window", type=int, default=8,
+                    help="rolling-median window over previous files")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max tolerated fractional throughput drop")
+    args = ap.parse_args(argv)
+    series: list[dict[str, float]] = []
+    for path in args.files:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as exc:
+            print(f"# skipping {path}: {exc}", file=sys.stderr)
+            continue
+        metrics = extract_metrics(doc)
+        if metrics:
+            series.append(metrics)
+        else:
+            print(f"# skipping {path}: no numeric metrics", file=sys.stderr)
+    if len(series) < 2:
+        print(f"trend: {len(series)} ingestible file(s) — nothing to "
+              f"compare against yet, passing")
+        return 0
+    lines, regressions = check(series, args.window, args.threshold)
+    print("\n".join(lines))
+    if regressions:
+        print(f"\ntrend: {len(regressions)} metric(s) regressed more than "
+              f"{args.threshold:.0%}:", file=sys.stderr)
+        for r in regressions:
+            print(f"  - {r}", file=sys.stderr)
+        return 1
+    print(f"\ntrend: ok — no gated metric dropped more than "
+          f"{args.threshold:.0%} vs the rolling median")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,186 @@
+"""Elastic membership on the live runtime: join, drain, evict — not just
+crash recovery.
+
+``PipelineSession`` trains a small LM as an Asteroid HPP pipeline under
+shard_map, then the membership controller (``core.replay``) drives three
+planned transitions end-to-end, with the same analytical/runtime byte
+reconciliation the crash path gets:
+
+  1. **Mid-training join with on-arrival profiling** — a newcomer shows up
+     with a *measured* layer sweep (``launch.profile.measure_model``, the
+     artifact a joining board ships with its join request); admission
+     re-prices the pipeline with the measured row appended, the accepted
+     plan migrates boundary layers + replicates the joined stage's model
+     onto the newcomer, and training continues on the faster plan.  Then
+     the newcomer is **evicted** again: the join->evict round trip must
+     hand back every parameter AND Adam moment bit-identically.
+  2. **Graceful drain** — the sole owner of a stage leaves politely: it
+     keeps serving while every one of its layers streams *directly* to the
+     survivors (no backup involved), so the pipeline stalls only for the
+     re-plan.  A crash after the churn shows the backup/replica story
+     still lines up with the NEW arrangement.
+  3. **Rejected admission under hysteresis** — an identical twin of the
+     incumbents offers to join; the re-priced plan doesn't beat the
+     incumbent by the hysteresis margin, so the offer is declined and the
+     session keeps its jitted step, plan and profile untouched.
+
+    PYTHONPATH=src python examples/elastic_membership.py [--quick]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import sys  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core.hardware import (A100, JETSON_NANO, MBPS_1000,  # noqa: E402
+                                 Cluster)
+from repro.core.planner import plan_hpp  # noqa: E402
+from repro.core.profiler import LayerTable, Profile  # noqa: E402
+from repro.data import SyntheticLM  # noqa: E402
+from repro.launch.profile import measure_model  # noqa: E402
+from repro.runtime.session import PipelineSession  # noqa: E402
+
+QUICK = "--quick" in sys.argv
+B, S = 8, 32
+cfg = get_smoke_config("phi3-mini-3.8b").replace(n_layers=8)
+table = LayerTable.from_model_config(cfg, S)
+ds = SyntheticLM(cfg.vocab_size, S)
+
+
+def make_session(n_dev: int, model_axis: int, backup_every: int = 2,
+                 allowed=None):
+    prof = Profile.analytic(table, Cluster((JETSON_NANO,) * n_dev, MBPS_1000),
+                            max_batch=B)
+    plan = plan_hpp(prof, B, micro_batch=2, arch=cfg.name,
+                    allowed_stages=allowed or {d for d in (1, 2, 4)
+                                               if model_axis % d == 0})
+    mesh = Mesh(np.array(jax.devices()[:model_axis]).reshape(1, model_axis),
+                ("data", "model"))
+    session = PipelineSession(cfg, mesh, plan, prof,
+                              backup_every=backup_every)
+    session.init(jax.random.PRNGKey(0))
+    print(f"plan: {[(st.layers, st.group) for st in session.plan.stages]} "
+          f"latency {session.plan.latency:.3f}s/round")
+    return session
+
+
+def snapshot(session):
+    return ([np.asarray(jax.device_get(x)).copy()
+             for x in jax.tree.leaves(session.params)],
+            [np.asarray(jax.device_get(x)).copy()
+             for x in jax.tree.leaves(session.opt_state.m)],
+            [np.asarray(jax.device_get(x)).copy()
+             for x in jax.tree.leaves(session.opt_state.v)])
+
+
+# ===========================================================================
+print("\n=== scenario 1: mid-training join (measured arrival) -> evict ===")
+session = make_session(n_dev=4, model_axis=4)
+losses = [session.step(ds.batch(s, B))[0] for s in range(3)]
+
+# the newcomer's join request carries its on-arrival measured sweep — here
+# the sweep runs on this host (a joining board would ship the artifact)
+arrival = measure_model(cfg, S, batch_sizes=(1, 2, 4),
+                        repeats=1 if QUICK else 2, mem_bytes=A100.mem_bytes)
+print(f"on-arrival sweep: {arrival.D} device row(s), measured "
+      f"~{arrival.est_flops[0] / 1e9:.1f} GFLOP/s effective")
+
+pre = snapshot(session)
+step0 = int(session.opt_state.step)
+# permissive hysteresis: the demo pins the measured-arrival plumbing and
+# the round trip, not this host's speed relative to a Jetson Nano
+out = session.admit(arrival=arrival, hysteresis=-1.0)
+assert out.accepted, out.decision.reason
+dec = out.decision
+rep = out.report
+new_rank = len(session.profile.cluster.devices) - 1
+holder = next(st for st in session.plan.stages if new_rank in st.group)
+print(f"ADMITTED rank {new_rank} ({dec.reason}): re-priced "
+      f"{dec.incumbent_latency:.3f}s -> {dec.candidate_latency:.3f}s/round; "
+      f"replan {rep.replan_s * 1e3:.1f}ms, boundary moves "
+      f"{[(m.lo, m.hi) for m in rep.boundary_moves]}, replica push "
+      f"{rep.replicate_s:.3f}s onto stage {holder.layers}")
+if out.reconciliation:
+    for b, rec in out.reconciliation.items():
+        assert rec["table_bytes"] == rec["analytic_bytes"], rec
+    print(f"  migration bytes reconcile exactly at boundaries "
+          f"{sorted(out.reconciliation)}  OK")
+
+out = session.evict(new_rank)
+assert out.accepted and new_rank not in session.live_ranks
+print(f"EVICTED rank {new_rank}: stall {out.stall_s:.3f}s, back to "
+      f"{[(st.layers, st.group) for st in session.plan.stages]}")
+
+post = snapshot(session)
+assert int(session.opt_state.step) == step0
+for name, a_list, b_list in zip(("params", "adam.m", "adam.v"), pre, post):
+    for a, b in zip(a_list, b_list):
+        assert np.array_equal(a, b), f"{name} changed across join->evict"
+print("join -> evict round trip: params + Adam moments bit-identical  OK")
+
+losses += [session.step(ds.batch(s, B))[0] for s in range(3, 8)]
+assert losses[-1] < losses[0]
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}: still converging  OK")
+
+# ===========================================================================
+print("\n=== scenario 2: graceful drain (direct streams) + later crash ===")
+session = make_session(n_dev=3, model_axis=2, allowed={2})
+losses = [session.step(ds.batch(s, B))[0] for s in range(3)]
+leaver = next(st.group[0] for st in session.plan.stages
+              if len(st.group) == 1)
+out = session.drain(leaver)
+assert out.accepted and out.report.mode == "drain"
+rep = out.report
+assert rep.direct_moves, "sole-owner drain must stream directly"
+assert rep.restore_s == 0.0 and rep.detection_s == 0.0
+print(f"DRAINED rank {leaver}: kept serving while "
+      f"{sum(dm.nbytes for dm in rep.direct_moves) / 1e6:.2f} MB streamed "
+      f"directly to {sorted({dm.dst_rank for dm in rep.direct_moves})}; "
+      f"stall {out.stall_s:.3f}s (re-plan only, migration overlapped)")
+if out.reconciliation and "direct" in out.reconciliation:
+    rec = out.reconciliation["direct"]
+    assert rec["table_bytes"] == rec["analytic_bytes"], rec
+    print(f"  direct-stream bytes reconcile exactly "
+          f"({rec['table_bytes'] / 1e6:.2f} MB)  OK")
+
+losses += [session.step(ds.batch(s, B))[0] for s in range(3, 6)]
+# the backup story tracks the NEW arrangement: a crash after the churn
+# still recovers (DP peers / re-seeded backups, not the old plan's keys)
+victim = session.live_ranks[-1]
+session.fail(victim)
+rec_out = session.recover_now()
+print(f"rank {victim} crashed after the churn -> {rec_out.mode} recovery, "
+      f"plan {[(st.layers, st.group) for st in session.plan.stages]}")
+losses += [session.step(ds.batch(s, B))[0] for s in range(6, 10)]
+assert all(np.isfinite(l) for l in losses)
+assert losses[-1] < losses[0]
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}: survived drain + crash  OK")
+
+# ===========================================================================
+print("\n=== scenario 3: admission rejected under hysteresis ===")
+session = make_session(n_dev=4, model_axis=4)
+plan0, ts0, prof0 = session.plan, session.ts, session.profile
+[session.step(ds.batch(s, B))[0] for s in range(2)]
+# an identical twin of the incumbents: the re-cut can't beat the incumbent
+# plan by the (deliberately strict) hysteresis margin
+out = session.admit(JETSON_NANO, hysteresis=0.9)
+assert not out.accepted
+print(f"REJECTED ({out.decision.reason}): priced "
+      f"{out.decision.incumbent_latency:.3f}s -> "
+      f"{out.decision.candidate_latency:.3f}s/round in "
+      f"{out.stall_s * 1e3:.1f}ms of pricing work")
+assert session.plan is plan0 and session.ts is ts0 and \
+    session.profile is prof0
+assert session.live_ranks == (0, 1, 2, 3)
+loss, _ = session.step(ds.batch(2, B))
+assert np.isfinite(loss)
+print("incumbent plan, jitted step and profile untouched  OK")
+
+print("\nALL OK")

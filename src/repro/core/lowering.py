@@ -459,6 +459,13 @@ def _period_migrator(old: LoweredPlan, new: LoweredPlan):
     return f
 
 
+# ``old_owner`` sentinel for migrate_params: the period's old holder is not
+# any stage of the new plan — it streams *directly* from an off-plan source
+# (a draining/evicted leaver pushing its layers out, symmetric to a restore
+# but from live state) instead of hopping adjacent-stage boundaries.
+DIRECT_SOURCE = -1
+
+
 @dataclasses.dataclass(frozen=True)
 class MigrationReport:
     """What ``migrate_params`` moved, per boundary of the NEW plan."""
@@ -469,16 +476,26 @@ class MigrationReport:
     boundary_bytes: tuple[float, ...]         # actual array bytes crossing
     period_bytes: float                       # bytes of one period's params
     total_bytes: float
+    direct_periods: tuple[int, ...] = ()      # streamed off an off-plan source
+    direct_bytes: float = 0.0
 
 
 def migrate_params(params, old: LoweredPlan, new: LoweredPlan, *,
                    old_owner=None):
     """Pure migration of the stacked period params across a plan swap.
 
-    ``old_owner``: per-canonical-period owner in the NEW plan's survivor
-    stage coordinates; ``None`` entries mark periods restored from a backup
-    (excluded from boundary accounting).  Defaults to the old plan's own
-    stage indices, which is exact when the stage count is unchanged.
+    The gather itself (``migration_index``) is direction-agnostic: it
+    realizes any old->new stage re-arrangement, scale-in (a survivor
+    absorbing a failed stage) and scale-out (periods landing on a freshly
+    admitted device's stage) alike, bit-identically for every period that
+    has an owner in both stacks.
+
+    ``old_owner``: per-canonical-period owner in the NEW plan's stage
+    coordinates; ``None`` entries mark periods restored from a backup and
+    ``DIRECT_SOURCE`` entries periods streamed off an off-plan source (a
+    draining leaver) — both excluded from boundary accounting.  Defaults to
+    the old plan's own stage indices, which is exact when the stage count
+    is unchanged.
 
     Returns ``(migrated_params, MigrationReport)``.  Leaves outside
     ``params["periods"]`` are returned untouched (vocab re-padding for a tp
@@ -494,7 +511,11 @@ def migrate_params(params, old: LoweredPlan, new: LoweredPlan, *,
         old_owner = period_owner(old)
     new_own = period_owner(new)
     moved = tuple(t for t in range(new.n_periods)
-                  if old_owner[t] is not None and old_owner[t] != new_own[t])
+                  if old_owner[t] is not None
+                  and old_owner[t] != DIRECT_SOURCE
+                  and old_owner[t] != new_own[t])
+    direct = tuple(t for t in range(new.n_periods)
+                   if old_owner[t] == DIRECT_SOURCE)
     restored = tuple(t for t in range(new.n_periods) if old_owner[t] is None)
     period_bytes = sum(leaf.nbytes / leaf.shape[0]
                        for leaf in jax.tree.leaves(params["periods"]))
@@ -508,7 +529,9 @@ def migrate_params(params, old: LoweredPlan, new: LoweredPlan, *,
         boundary_bytes.append(period_bytes * len(crossing))
     report = MigrationReport(moved, restored, tuple(boundary_periods),
                              tuple(boundary_bytes), period_bytes,
-                             period_bytes * len(moved))
+                             period_bytes * len(moved)
+                             + period_bytes * len(direct),
+                             direct, period_bytes * len(direct))
     return out, report
 
 
@@ -535,17 +558,30 @@ def migrate_opt_state(opt_state, old: LoweredPlan, new: LoweredPlan):
 def reconcile_migration(mig: MigrationReport, report, new: LoweredPlan,
                         table, pattern_len: int,
                         rel_tol: float = 1e-6) -> dict:
-    """Assert ``migrate_params``'s boundary bytes match the analytical
-    ``RecoveryReport`` migration inputs (``lightweight_replay`` run with
+    """Assert ``migrate_params``'s moved bytes match the analytical
+    ``RecoveryReport`` migration inputs (a replay run with
     ``layer_quantum=pattern_len`` so its cuts are period-aligned).
 
+    Prices both directions: boundary crossings are checked per boundary of
+    the new plan whether the periods flowed toward a survivor (scale-in) or
+    onto a freshly admitted stage (scale-out) — the crossing predicate is
+    symmetric in old/new owner.  Reports carrying ``direct_moves`` (a
+    draining leaver streaming its layers straight to their new owners) are
+    additionally reconciled against ``mig.direct_periods``.
+
     Returns per-boundary ``{analytic_bytes, table_bytes, runtime_bytes}``
-    where ``table_bytes`` re-prices the runtime's moved periods with the
+    (plus a ``"direct"`` entry when direct streams were priced) where
+    ``table_bytes`` re-prices the runtime's moved periods with the
     profiler's layer table — the quantity that must equal the analytical
     bytes exactly.
     """
+    def period_table_bytes(periods):
+        return sum(
+            table.param_bytes(1 + t * pattern_len, 1 + (t + 1) * pattern_len)
+            for t in periods)
+
     analytic = {bm.boundary: bm for bm in report.boundary_moves}
-    out: dict[int, dict[str, float]] = {}
+    out: dict = {}
     for p in range(new.stage - 1):
         periods = mig.boundary_periods[p]
         bm = analytic.get(p)
@@ -557,15 +593,38 @@ def reconcile_migration(mig: MigrationReport, report, new: LoweredPlan,
         hull = set(range((bm.lo - 1) // pattern_len,
                          -(-(bm.hi - 1) // pattern_len)))
         assert set(periods) <= hull, (p, periods, sorted(hull))
-        table_bytes = sum(
-            table.param_bytes(1 + t * pattern_len, 1 + (t + 1) * pattern_len)
-            for t in periods)
+        table_bytes = period_table_bytes(periods)
         assert abs(table_bytes - bm.nbytes) <= rel_tol * max(table_bytes, 1.0), (
             f"boundary {p}: runtime periods {periods} price to "
             f"{table_bytes:.0f} B in the layer table, but the recovery "
             f"report migrated {bm.nbytes:.0f} B")
         out[p] = {"analytic_bytes": bm.nbytes, "table_bytes": table_bytes,
                   "runtime_bytes": mig.boundary_bytes[p]}
+
+    direct_moves = getattr(report, "direct_moves", ())
+    if mig.direct_periods or direct_moves:
+        hull = set()
+        for dm in direct_moves:
+            hull |= set(range((dm.lo - 1) // pattern_len,
+                              -(-(dm.hi - 1) // pattern_len)))
+        assert set(mig.direct_periods) <= hull, (
+            f"runtime direct-streamed periods {mig.direct_periods} outside "
+            f"the report's direct-move hull {sorted(hull)}")
+        table_bytes = period_table_bytes(mig.direct_periods)
+        # the analytic moves may also carry the leaver's embed/head bytes
+        # (table edge pseudo-layers); compare on the real-layer span only
+        L = table.L
+        analytic_bytes = sum(
+            table.param_bytes(max(dm.lo, 1), min(dm.hi, L - 1))
+            for dm in direct_moves)
+        assert abs(table_bytes - analytic_bytes) <= \
+            rel_tol * max(table_bytes, 1.0), (
+            f"direct streams: runtime periods {mig.direct_periods} price to "
+            f"{table_bytes:.0f} B, but the report streams "
+            f"{analytic_bytes:.0f} B of real layers off the leaver")
+        out["direct"] = {"analytic_bytes": analytic_bytes,
+                         "table_bytes": table_bytes,
+                         "runtime_bytes": mig.direct_bytes}
     return out
 
 

@@ -236,6 +236,21 @@ def _stages_from_steps(steps, P: int) -> tuple[StagePlan, ...]:
     return tuple(stages)
 
 
+def replan_for_membership(profile: Profile, incumbent: Plan,
+                          allowed_stages=None) -> Plan:
+    """Full Algorithm-2 re-plan after a membership change, keeping the
+    incumbent's batch geometry and gradient-sync semantics.
+
+    This is the FTPipeHD-style fallback the membership controller reaches
+    for when incremental candidates (``replay.admission_replay`` /
+    ``replay.departure_replay``) are infeasible: ``profile`` is the
+    cluster *after* the change (see ``profiler.extend_profile`` for
+    joins), and every weight placement is up for grabs."""
+    return plan_hpp(profile, incumbent.global_batch, incumbent.micro_batch,
+                    arch=incumbent.arch, allowed_stages=allowed_stages,
+                    staleness=getattr(incumbent, "staleness", 0))
+
+
 def auto_microbatch(profile: Profile, global_batch: int,
                     candidates=(1, 2, 4, 8, 16, 32, 64), arch: str = "",
                     **kw) -> Plan:

@@ -148,14 +148,10 @@ class Profile:
         D, L = len(cluster.devices), table.L
         tf = np.zeros((D, max_batch + 1, L + 1))
         tb = np.zeros((D, max_batch + 1, L + 1))
-        flops = np.array([l.flops_fwd for l in table.layers])
         for di, dev in enumerate(cluster.devices):
-            for beta in range(1, max_batch + 1):
-                work = flops * beta
-                eff = dev.eff(beta) * flops / (flops + dev.sat_flops)
-                per_layer_f = work / (dev.flops * np.maximum(eff, 1e-9)) + dev.overhead
-                tf[di, beta, 1:] = np.cumsum(per_layer_f)
-                tb[di, beta, 1:] = np.cumsum(per_layer_f * BWD_FLOP_RATIO)
+            f, b = analytic_layer_times(dev, table, max_batch)
+            tf[di, :, 1:] = np.cumsum(f, axis=1)
+            tb[di, :, 1:] = np.cumsum(b, axis=1)
         return Profile(table, cluster, max_batch, tf, tb)
 
     @staticmethod
@@ -191,6 +187,84 @@ class Profile:
         tf[:, :, 1:] = np.cumsum(tf_samples, axis=2)
         tb[:, :, 1:] = np.cumsum(tb_samples, axis=2)
         return Profile(table, cluster, max_batch, tf, tb, source="measured")
+
+
+def analytic_layer_times(device: DeviceProfile, table: LayerTable,
+                         max_batch: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-layer analytic ``(tf, tb)`` sample tables for one device.
+
+    Shape ``(max_batch+1, L)`` with row 0 zero — the single-device slice of
+    what ``Profile.analytic`` builds, exposed so ``extend_profile`` can
+    price an unprofiled newcomer with the identical FLOP model."""
+    L = table.L
+    tf = np.zeros((max_batch + 1, L))
+    flops = np.array([l.flops_fwd for l in table.layers])
+    for beta in range(1, max_batch + 1):
+        work = flops * beta
+        eff = device.eff(beta) * flops / (flops + device.sat_flops)
+        tf[beta] = work / (device.flops * np.maximum(eff, 1e-9)) + device.overhead
+    return tf, tf * BWD_FLOP_RATIO
+
+
+def extend_profile(profile: Profile, device: DeviceProfile,
+                   tf_samples: np.ndarray | None = None,
+                   tb_samples: np.ndarray | None = None, *,
+                   bw: float | None = None) -> Profile:
+    """Append one device to ``profile`` as the LAST cluster rank.
+
+    The scale-out half of elastic membership
+    (``core.replay.admission_replay``): incumbent devices keep their ranks —
+    the running plan and the migration accounting stay addressable by the
+    same device identities — and the newcomer becomes rank ``D``.
+
+    ``tf_samples``/``tb_samples``: the newcomer's per-layer time tables of
+    shape ``(max_batch+1, L)`` with row 0 zero, e.g. its measured on-arrival
+    sweep densified by ``MeasuredProfile.device_rows``.  Omitted, the
+    analytic FLOP model of ``device`` fills the row (the fallback when a
+    newcomer arrives unprofiled).
+
+    ``bw``: D2D bandwidth between the newcomer and every incumbent when the
+    cluster prices links through a ``bw_matrix`` (defaults to the
+    cluster-wide bandwidth)."""
+    table, mb = profile.table, profile.max_batch
+    D, L = len(profile.cluster.devices), table.L
+    measured_row = tf_samples is not None and tb_samples is not None
+    if (tf_samples is None) != (tb_samples is None):
+        raise ProfileError(
+            "pass both tf_samples and tb_samples, or neither")
+    if not measured_row:
+        tf_samples, tb_samples = analytic_layer_times(device, table, mb)
+    arrs = []
+    for name, s in (("tf_samples", tf_samples), ("tb_samples", tb_samples)):
+        s = np.asarray(s, dtype=np.float64)
+        if s.shape != (mb + 1, L):
+            raise ProfileError(
+                f"{name} shape {s.shape} != {(mb + 1, L)}: the newcomer's "
+                f"table must cover batch sizes 0..{mb} for all {L} layers "
+                f"of {table.name!r}")
+        if not np.isfinite(s).all() or (s < 0).any():
+            raise ProfileError(
+                f"{name} contains negative or non-finite layer times")
+        arrs.append(s)
+    tf_samples, tb_samples = arrs
+    tfp = np.zeros((D + 1, mb + 1, L + 1))
+    tbp = np.zeros((D + 1, mb + 1, L + 1))
+    tfp[:D], tbp[:D] = profile.tf_prefix, profile.tb_prefix
+    tfp[D, :, 1:] = np.cumsum(tf_samples, axis=1)
+    tbp[D, :, 1:] = np.cumsum(tb_samples, axis=1)
+    bwm = profile.cluster.bw_matrix
+    if bwm is not None:
+        link = bw if bw is not None else profile.cluster.bandwidth
+        bwm = tuple(tuple(row) + (link,) for row in bwm) \
+            + (tuple([link] * D + [0.0]),)
+    cluster = Cluster(profile.cluster.devices + (device,),
+                      profile.cluster.bandwidth, bwm)
+    source = profile.source
+    if measured_row and source == "analytic":
+        source = "mixed"
+    elif not measured_row and source == "measured":
+        source = "mixed"
+    return Profile(table, cluster, mb, tfp, tbp, source)
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +473,27 @@ class MeasuredProfile:
                               cluster.bandwidth, cluster.bw_matrix)
             tf_s, tb_s = tf_s[order], tb_s[order]
         return Profile.measured(table, cluster, max_batch, tf_s, tb_s)
+
+    def device_rows(self, table: LayerTable, max_batch: int,
+                    dev: int = 0) -> tuple[np.ndarray, np.ndarray]:
+        """One device's densified ``(tf, tb)`` tables, ``(max_batch+1, L)``.
+
+        The newcomer-admission view: a single-device on-arrival sweep
+        (``launch.profile.measure_model`` on the joining board) becomes the
+        row ``extend_profile`` appends.  Validates the measured layers
+        against ``table`` like ``to_profile`` does — an incompatible sweep
+        raises ``ProfileError`` so callers can fall back to the analytic
+        device model."""
+        if not 0 <= dev < self.D:
+            raise ProfileError(f"device index {dev} out of range "
+                               f"(artifact has {self.D} rows)")
+        if table.L != self.L or tuple(l.name for l in table.layers) != \
+                self.layer_names:
+            raise ProfileError(
+                f"layer table {table.name!r} ({table.L} layers) does not "
+                f"match the measured layers {list(self.layer_names)}")
+        tf_s, tb_s = self.densify(max_batch)
+        return tf_s[dev], tb_s[dev]
 
     # -- staleness / compatibility ------------------------------------------
 

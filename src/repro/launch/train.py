@@ -88,24 +88,47 @@ def main():
     ap.add_argument("--env", default="D", choices=list("ABCD"),
                     help="edge environment (analytic profile) for --plan; "
                          "ignored when a valid --profile artifact is given")
+    ap.add_argument("--bandwidth", type=float, default=None, metavar="MBPS",
+                    help="override the analytic environment's D2D link "
+                         "bandwidth (megabits/s; default: the env preset's)")
     ap.add_argument("--profile", default=None, metavar="PATH",
                     help="measured profile artifact from "
                          "repro.launch.profile; the planner/lowering/"
                          "simulator run on its measured (tf, tb) tables, "
                          "falling back to the analytic model with a warning "
                          "if the artifact is stale or incompatible")
+    ap.add_argument("--events", default=None, metavar="SCHEDULE",
+                    help="membership event schedule, comma-separated "
+                         "'kind@step[:arg]' entries, e.g. "
+                         "'join@40:dev.json,drain@80:2'.  Kinds: fail/"
+                         "drain/evict take a cluster rank (default: last "
+                         "stage's lead device); join takes a device preset "
+                         "(nano/tx2/nx/a100/v5e, default nx), a device-spec "
+                         "JSON file ({name, mem_bytes, flops, ...}), or a "
+                         "repro.launch.profile artifact measured on the "
+                         "joining device (its sweep prices the admission). "
+                         "Requires --plan")
+    ap.add_argument("--hysteresis", type=float, default=None,
+                    help="admission hysteresis margin for join events "
+                         "(default: replay.ADMISSION_HYSTERESIS)")
     ap.add_argument("--fail-at", type=int, default=None,
-                    help="kill a rank before this step and recover through "
+                    help="sugar for --events 'fail@STEP[:--fail-rank]': "
+                         "kill a rank before this step and recover through "
                          "the live replay session (requires --plan)")
     ap.add_argument("--fail-rank", type=int, default=None,
                     help="edge-cluster rank to kill (default: last stage's "
                          "lead device)")
     ap.add_argument("--backup-every", type=int, default=5,
-                    help="stage-replication cadence in steps (with --fail-at)")
+                    help="stage-replication cadence in steps (with --events)")
     args = ap.parse_args()
-    if args.fail_at is not None and not args.plan:
-        raise SystemExit("--fail-at requires --plan (the replay session "
-                         "recovers by re-lowering a planner Plan)")
+    events = _parse_events(args.events)
+    if args.fail_at is not None:     # old flags kept as sugar
+        arg = "" if args.fail_rank is None else str(args.fail_rank)
+        events.append((args.fail_at, "fail", arg))
+    events.sort(key=lambda e: e[0])
+    if events and not args.plan:
+        raise SystemExit("--events/--fail-at require --plan (the membership "
+                         "session recovers by re-lowering a planner Plan)")
     if args.profile and not args.plan:
         raise SystemExit("--profile requires --plan (a measured profile "
                          "only feeds the planner)")
@@ -181,9 +204,15 @@ def main():
                   f"{len(prof.cluster.devices)} devices, "
                   f"batches<={max(measured.batch_sizes)} measured)")
         else:
-            prof = Profile.analytic(table, ENVS[args.env]().sorted_by_memory(),
+            cluster = ENVS[args.env]()
+            if args.bandwidth:
+                from repro.core.hardware import Cluster
+                cluster = Cluster(cluster.devices, args.bandwidth * 1e6 / 8)
+            prof = Profile.analytic(table, cluster.sorted_by_memory(),
                                     max_batch=max_batch)
-            print(f"profile=analytic(env {args.env})")
+            print(f"profile=analytic(env {args.env}"
+                  + (f", {args.bandwidth:g} Mbps" if args.bandwidth else "")
+                  + ")")
         n_periods = cfg.n_layers // len(cfg.pattern)
         divisors = {d for d in range(1, model_axis + 1)
                     if model_axis % d == 0 and d <= n_periods}
@@ -204,7 +233,7 @@ def main():
         plan = plan_hpp(prof, args.global_batch, mb, arch=cfg.name,
                         allowed_stages=divisors, intra_opt=intra_opt,
                         staleness=args.staleness)
-        if args.fail_at is not None:
+        if events:
             from repro.runtime.session import PipelineSession
             session = PipelineSession(cfg, mesh, plan, prof, optimizer=opt,
                                       backup_every=args.backup_every,
@@ -214,7 +243,7 @@ def main():
             print(f"asteroid plan: {lowered.stage} stages periods="
                   f"{lowered.stage_periods} M={lowered.n_micro} "
                   f"K_p={lowered.warmup} predicted latency {plan.latency:.3f}s")
-            return _run_session(session, cfg, args)
+            return _run_session(session, cfg, args, events)
         ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt,
                                          staleness=args.staleness,
                                          double_buffer=args.double_buffer)
@@ -283,8 +312,102 @@ def main():
     return float(loss)
 
 
-def _run_session(session, cfg, args) -> float:
-    """Drive a live replay session: train, kill a rank, keep training."""
+def _parse_events(spec: str | None) -> list:
+    """Parse a ``--events`` schedule into ``(step, kind, arg)`` triples."""
+    events = []
+    if not spec:
+        return events
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        head, _, arg = entry.partition(":")
+        kind, at, step = head.partition("@")
+        kind = kind.strip().lower()
+        if kind not in ("fail", "join", "drain", "evict") or not at:
+            raise SystemExit(f"--events entry {entry!r} is not "
+                             "'kind@step[:arg]' with kind in "
+                             "fail/join/drain/evict")
+        try:
+            events.append((int(step), kind, arg.strip()))
+        except ValueError:
+            raise SystemExit(f"--events entry {entry!r}: step {step!r} is "
+                             "not an integer")
+    return events
+
+
+def _resolve_join(arg: str):
+    """Resolve a join event's argument to ``(device, arrival_sweep)``.
+
+    A preset name or device-spec JSON prices the newcomer analytically;
+    a ``repro.launch.profile`` artifact supplies its measured on-arrival
+    sweep (the device identity then comes from the sweep itself)."""
+    import json
+
+    from repro.core.hardware import (A100, JETSON_NANO, JETSON_NX,
+                                     JETSON_TX2, TPU_V5E, DeviceProfile)
+    presets = {"nano": JETSON_NANO, "tx2": JETSON_TX2, "nx": JETSON_NX,
+               "a100": A100, "v5e": TPU_V5E}
+    if not arg:
+        return JETSON_NX, None
+    if arg.lower() in presets:
+        return presets[arg.lower()], None
+    with open(arg) as f:
+        doc = json.load(f)
+    if "batch_sizes" in doc and "tf" in doc:     # a measured sweep artifact
+        from repro.core.profiler import load_profile
+        return None, load_profile(arg)
+    try:
+        dev = DeviceProfile(
+            name=doc.get("name", "custom"),
+            mem_bytes=float(doc["mem_bytes"]), flops=float(doc["flops"]),
+            **{k: doc[k] for k in ("sat_batch", "sat_flops", "overhead")
+               if k in doc})
+    except KeyError as e:
+        raise SystemExit(f"join device spec {arg} is missing {e} (need at "
+                         "least name/mem_bytes/flops, or pass a "
+                         "repro.launch.profile artifact)")
+    return dev, None
+
+
+def _apply_event(session, kind: str, arg: str, args) -> None:
+    """Fire one membership event on the live session and report it."""
+    from repro.core.replay import ADMISSION_HYSTERESIS
+
+    if kind == "join":
+        device, arrival = _resolve_join(arg)
+        out = session.admit(device, arrival=arrival,
+                            hysteresis=(args.hysteresis
+                                        if args.hysteresis is not None
+                                        else ADMISSION_HYSTERESIS))
+        dec = out.decision
+        if not out.accepted:
+            print(f"  join rejected ({dec.reason})")
+            return
+        rep = out.report
+        print(f"  joined ({dec.reason}): replan {rep.replan_s * 1e3:.1f}ms "
+              f"migrate {rep.migration_s:.2f}s replicate "
+              f"{rep.replicate_s:.2f}s | {dec.incumbent_latency:.3f}s -> "
+              f"{dec.candidate_latency:.3f}s/round | new stages "
+              f"{[(st.layers, st.group) for st in session.plan.stages]}")
+        return
+    rank = int(arg) if arg else session.plan.stages[-1].group[0]
+    if kind == "fail":
+        print(f"  killing rank {rank}")
+        session.fail(rank)      # detected + recovered inside the next step
+        return
+    out = session.drain(rank) if kind == "drain" else session.evict(rank)
+    rep = out.report
+    print(f"  {kind} rank {rank} ({out.mode}"
+          f"{', overlapped' if rep.overlapped else ''}): replan "
+          f"{rep.replan_s * 1e3:.1f}ms migrate {rep.migration_s:.2f}s "
+          f"stall {out.stall_s:.3f}s | new stages "
+          f"{[(st.layers, st.group) for st in session.plan.stages]}")
+
+
+def _run_session(session, cfg, args, events) -> float:
+    """Drive a live membership session: train through the scheduled
+    join/drain/evict/fail events without restarting."""
     import time
 
     from repro.data import SyntheticLM
@@ -296,19 +419,20 @@ def _run_session(session, cfg, args) -> float:
                      prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
     loss = float("nan")
     seen_recoveries = 0
+    pending = sorted(events, key=lambda e: e[0])
+    sim_busy = 0.0          # edge-cluster round time under the deployed plan
     t0 = time.perf_counter()
     t_warm = None
     # same compile accounting as the main path: the staleness path has two
     # jitted entry points (first-round grad_fn, then async_step_fn)
     n_compile = 2 if session.ts.spec.staleness >= 1 else 1
     for step in range(args.steps):
-        if step == args.fail_at:
-            rank = args.fail_rank
-            if rank is None:
-                rank = session.plan.stages[-1].group[0]
-            print(f"step {step}: killing rank {rank}")
-            session.fail(rank)
+        while pending and pending[0][0] <= step:
+            _, kind, arg = pending.pop(0)
+            print(f"step {step}: {kind} event")
+            _apply_event(session, kind, arg, args)
         loss, metrics = session.step(ds.batch(step, args.global_batch))
+        sim_busy += session.plan.latency
         if step == n_compile - 1 and args.steps > n_compile:
             jax.block_until_ready(session.params)
             t_warm = time.perf_counter()      # exclude compile from FINAL
@@ -338,6 +462,14 @@ def _run_session(session, cfg, args) -> float:
     # same steady-state definition as the main path (shared helper), so
     # FINAL lines stay comparable across the two paths
     tput = _steady_tok_s(args, n_compile, t0, t_warm, t_end)
+    # throughput on the simulated edge-cluster clock: per-round latency of
+    # whichever plan was deployed at each step, plus the stall every
+    # membership transition charged — the metric the churn benchmark tracks
+    stalls = sum(o.stall_s for o in session.memberships)
+    sim_tput = args.global_batch * args.seq * args.steps / max(
+        sim_busy + stalls, 1e-9)
+    print(f"FINAL sim_tok_s={sim_tput:.1f} (rounds {sim_busy:.2f}s + "
+          f"membership stalls {stalls:.3f}s)")
     print(f"FINAL tok_s={tput:.1f} loss={loss:.4f}")
     print("done")
     return loss

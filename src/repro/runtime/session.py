@@ -1,15 +1,16 @@
-"""Live pipeline replay: a session layer over the lowered runtime (§3.4).
+"""Live pipeline replay + elastic membership: a session layer over the
+lowered runtime (§3.4, DESIGN.md §9).
 
 ``PipelineSession`` makes a running pipeline a first-class, re-lowerable
 object.  It owns the full chain
 
     Plan -> LoweredPlan -> TrainStep -> (params, opt_state)
 
-and keeps training through a device failure without restarting:
+and keeps training through any membership change without restarting:
 
 1. every ``step()`` advances a simulated cluster clock and feeds heartbeats
-   to a ``core.replay.ReplayCoordinator``;
-2. on a failure (``fail(rank)``), the coordinator walks its state machine
+   to a ``core.replay.MembershipController``;
+2. on a failure (``fail(rank)``), the controller walks its state machine
    (missed heartbeat -> probe -> confirm) and then drives this session as
    its executor: ``replan`` (lightweight layer-wise replay, falling back to
    heavy rescheduling when the survivor stage count is not mesh-feasible),
@@ -17,8 +18,16 @@ and keeps training through a device failure without restarting:
    the stacked period params *and* the optimizer moments, plus restore of
    the failed stage from its ``StageBackupStore`` replica), ``resume``
    (re-jitted step on the re-lowered plan);
-3. single-device stages push period-row backups to their topology-assigned
-   backup node on a step cadence, so a fully-failed stage is recoverable.
+3. planned transitions take the same barrier: ``admit(device)`` /
+   ``admit(arrival=<measured sweep>)`` prices a hysteresis-gated join
+   (rejected joins are pure no-ops — plan, jitted step and profile stay
+   object-identical), ``drain(rank)`` lets a leaver keep serving while its
+   layers stream directly to the survivors, ``evict(rank)`` removes it
+   immediately; every transition is appended to ``memberships``;
+4. single-device stages push period-row backups to their topology-assigned
+   backup node on a step cadence, and every membership transition re-seeds
+   the backup topology for the *new* arrangement, so a crash right after a
+   churn event restores from replicas that match the deployed plan.
 
 The ``Profile`` handed to the constructor — analytic, or a measured one
 loaded from a ``repro.launch.profile`` artifact (``launch/train.py --plan
@@ -46,15 +55,21 @@ import jax
 
 from repro.checkpoint import StageBackupStore
 from repro.core.allocation import AllocationError
-from repro.core.lowering import (LoweredPlan, LoweringError, MigrationReport,
-                                 check_against_simulator, lower_plan,
-                                 migrate_opt_state, migrate_params,
-                                 period_owner, period_positions,
-                                 reconcile_migration, relower, snap_plan)
+from repro.core.hardware import DeviceProfile
+from repro.core.lowering import (DIRECT_SOURCE, LoweredPlan, LoweringError,
+                                 MigrationReport, check_against_simulator,
+                                 lower_plan, migrate_opt_state,
+                                 migrate_params, period_owner,
+                                 period_positions, reconcile_migration,
+                                 relower, snap_plan)
 from repro.core.planner import Plan
-from repro.core.profiler import Profile
-from repro.core.replay import (RecoveryReport, ReplayCoordinator,
-                               assign_backups, heavy_rescheduling,
+from repro.core.profiler import Profile, ProfileError, extend_profile
+from repro.core.replay import (ADMISSION_HYSTERESIS, AdmissionDecision,
+                               DeviceDraining, DeviceEvicted, DeviceFailed,
+                               DeviceJoined, MembershipController,
+                               MembershipEvent, RecoveryReport,
+                               admission_replay, assign_backups,
+                               departure_replay, heavy_rescheduling,
                                lightweight_replay)
 from repro.distributed.sharding import named
 from repro.models.config import ModelConfig
@@ -67,16 +82,22 @@ from .train import (_assemble_train_step, _opt_shardings, init_train_state,
 
 @dataclasses.dataclass(frozen=True)
 class RecoveryOutcome:
-    """Everything one recovery produced, for inspection and assertions."""
+    """Everything one membership transition produced, for inspection and
+    assertions.  A rejected admission records the pricing work alone:
+    ``accepted=False`` with ``report``/``migration`` of ``None``."""
 
-    report: RecoveryReport              # analytical timings + new plan
-    migration: MigrationReport          # what migrate_params actually moved
+    report: RecoveryReport | None       # analytical timings + new plan
+    migration: MigrationReport | None   # what migrate_params actually moved
     reconciliation: dict | None         # per-boundary byte agreement
     restored_stage: int | None          # old stage restored from backup
     restored_periods: tuple[int, ...]   # canonical periods it covered
-    mode: str                           # "lightweight" | "heavy"
+    mode: str                           # "lightweight"|"heavy"|"admission"|"drain"|"evict"
     detection_observed_s: float         # coordinator wall vs report.detection_s
     missing_backup_stages: tuple[int, ...] = ()   # lost with no replica yet
+    event: MembershipEvent | None = None   # the typed event driving it
+    accepted: bool = True               # False = admission rejected
+    stall_s: float = 0.0                # pipeline stall charged (report.stall_s)
+    decision: AdmissionDecision | None = None   # join pricing detail
 
 
 def _repad_vocab(tree: dict, cfg: ModelConfig, new_tp: int) -> dict:
@@ -129,15 +150,20 @@ class PipelineSession:
         self.step_count = 0
         self.clock = 0.0
         self._failed: set[int] = set()
+        self._departed: set[int] = set()
         self._pending_failure: int | None = None
-        self.coordinator = ReplayCoordinator(sorted(
+        self.coordinator = MembershipController(sorted(
             d for st in self.plan.stages for d in st.group))
-        self.recoveries: list[RecoveryOutcome] = []
-        # recovery-in-flight scratch (set by replan, read by migrate)
+        self.recoveries: list[RecoveryOutcome] = []    # crash recoveries
+        self.memberships: list[RecoveryOutcome] = []   # every transition
+        # transition-in-flight scratch (set by *_replan, read by migrate)
         self._recovering_rank: int | None = None
         self._next_lowered: LoweredPlan | None = None
         self._next_mode = ""
         self._detect_wall = 0.0
+        self._transition_event: MembershipEvent | None = None
+        self._transition_lost = False      # crash: lost stages restore
+        self._pending_profile: Profile | None = None   # extended, on join
 
     # -- installation ------------------------------------------------------
 
@@ -301,16 +327,95 @@ class PipelineSession:
         assert confirmed == failed, (confirmed, failed)
         self._detect_wall = t - self._fail_time
         self._recovering_rank = failed
+        self._transition_event = DeviceFailed(failed)
+        self._transition_lost = True
         _, outcome = self.coordinator.run_recovery(failed, self, now=t)
         self.clock = self.coordinator.events[-1][1]
         self._recovering_rank = None
+        self._transition_event = None
+        self._transition_lost = False
         self.recoveries.append(outcome)
+        self.memberships.append(outcome)
         return outcome
 
-    # -- ReplayCoordinator executor protocol -------------------------------
+    # -- elastic membership entry points ------------------------------------
+
+    def admit(self, device: DeviceProfile | None = None, *,
+              arrival=None,
+              hysteresis: float = ADMISSION_HYSTERESIS) -> RecoveryOutcome:
+        """Offer a newcomer to the pipeline (hysteresis-gated admission).
+
+        ``arrival`` is the newcomer's on-arrival measured sweep (a
+        ``core.profiler.MeasuredProfile``, e.g. from ``launch/profile.py``
+        run on the joining device); when given, its measured rows price the
+        admission and ``device`` may be omitted (taken from the sweep's
+        cluster).  Without it the analytic FLOP model of ``device`` is
+        used.  Returns the recorded outcome — ``accepted=False`` means the
+        pipeline keeps its incumbent plan untouched."""
+        if device is None:
+            if arrival is None:
+                raise ValueError("admit() needs a DeviceProfile, an "
+                                 "on-arrival measured sweep, or both")
+            device = arrival.cluster().devices[0]
+        event = DeviceJoined(device, arrival, hysteresis)
+        return self._membership_transition(event)
+
+    def drain(self, rank: int) -> RecoveryOutcome:
+        """Gracefully remove ``rank``: it keeps serving while its layers
+        stream off, so the pipeline stalls only for the re-plan."""
+        return self._membership_transition(DeviceDraining(self._live(rank)))
+
+    def evict(self, rank: int) -> RecoveryOutcome:
+        """Immediately remove ``rank`` (planned, so no detection latency or
+        backup restore, but the pipeline pauses for the migration)."""
+        return self._membership_transition(DeviceEvicted(self._live(rank)))
+
+    def _live(self, rank: int) -> int:
+        if rank not in self.live_ranks:
+            raise ValueError(f"rank {rank} is not a live device "
+                             f"({self.live_ranks})")
+        return rank
+
+    def _membership_transition(self, event: MembershipEvent) -> RecoveryOutcome:
+        """Drive one planned membership event through the controller with
+        this session as executor.  Any pending crash recovers first, and
+        in-flight staleness-1 gradients are flushed before the plan swap."""
+        if self._pending_failure is not None:
+            self.recover_now()
+        self.flush_gradients()
+        self._detect_wall = 0.0
+        self._transition_event = event
+        self._transition_lost = False
+        self._recovering_rank = getattr(event, "rank", None)
+        result, outcome = self.coordinator.handle(event, self, now=self.clock)
+        self.clock = self.coordinator.events[-1][1]
+        self._recovering_rank = None
+        self._transition_event = None
+        if isinstance(result, AdmissionDecision):
+            if not result.accepted:
+                outcome = RecoveryOutcome(
+                    None, None, None, None, (), "admission", 0.0,
+                    event=event, accepted=False, stall_s=result.replan_s,
+                    decision=result)
+            else:
+                outcome = dataclasses.replace(outcome, decision=result)
+        else:
+            self._departed.add(event.rank)
+        self.memberships.append(outcome)
+        return outcome
+
+    # -- MembershipController executor protocol ----------------------------
+
+    @property
+    def _lowerable_stages(self) -> set[int]:
+        """Stage counts the production mesh can lower (divisors of the
+        model axis, with at least one period per stage)."""
+        return {d for d in range(1, self.model_axis + 1)
+                if self.model_axis % d == 0
+                and d <= self.lowered.n_periods}
 
     def replan(self, failed_rank: int) -> RecoveryReport:
-        """Executor step 1: plan the survivors' pipeline (§3.4 replay).
+        """Executor step 1 (crash): plan the survivors' pipeline (§3.4).
 
         Lightweight layer-wise replay first — period-quantized cut moves
         priced on ``self.profile`` (the SAME profile object the session
@@ -331,12 +436,80 @@ class PipelineSession:
         except (LoweringError, AllocationError):
             # survivor stage count not mesh-feasible (or infeasible alloc):
             # heavy rescheduling restricted to lowerable stage counts
-            divisors = {d for d in range(1, self.model_axis + 1)
-                        if self.model_axis % d == 0
-                        and d <= self.lowered.n_periods}
             rep = heavy_rescheduling(self.plan, self.profile, failed_rank,
                                      fail_time=self._fail_time,
-                                     allowed_stages=divisors)
+                                     allowed_stages=self._lowerable_stages)
+            self._next_lowered = relower(self.lowered, rep.new_plan, self.cfg,
+                                         self.model_axis)
+            self._next_mode = "heavy"
+            return rep
+
+    def admit_replan(self, event: DeviceJoined) -> AdmissionDecision:
+        """Executor step 1 (join): price the newcomer into the pipeline.
+
+        The newcomer's measured on-arrival sweep extends the session
+        profile when usable (analytic FLOP-model fallback otherwise), and
+        incremental candidates are priced by ``replay.admission_replay``
+        restricted to mesh-lowerable stage counts.  The extended profile
+        is installed only if the join is accepted and survives lowering."""
+        quantum = len(self.cfg.pattern)
+        new_rank = len(self.profile.cluster.devices)
+        tf = tb = None
+        if event.arrival is not None:
+            try:
+                tf, tb = event.arrival.device_rows(self.profile.table,
+                                                   self.profile.max_batch)
+            except ProfileError as e:
+                warnings.warn(f"on-arrival sweep unusable ({e}); pricing "
+                              f"{event.device.name} with the analytic "
+                              "FLOP model instead")
+                tf = tb = None
+        ext = extend_profile(self.profile, event.device, tf, tb)
+        decision = admission_replay(self.plan, ext, new_rank,
+                                    hysteresis=event.hysteresis,
+                                    layer_quantum=quantum,
+                                    allowed_stages=self._lowerable_stages)
+        if not decision.accepted:
+            return decision
+        try:
+            self._next_lowered = relower(self.lowered,
+                                         decision.report.new_plan,
+                                         self.cfg, self.model_axis)
+        except LoweringError as e:
+            return dataclasses.replace(
+                decision, accepted=False, report=None,
+                reason=f"accepted candidate is not mesh-lowerable: {e}")
+        self._next_mode = "admission"
+        self._pending_profile = ext
+        return decision
+
+    def drain_replan(self, rank: int) -> RecoveryReport:
+        """Executor step 1 (graceful drain)."""
+        return self._departure_replan(rank, graceful=True)
+
+    def evict_replan(self, rank: int) -> RecoveryReport:
+        """Executor step 1 (planned evict)."""
+        return self._departure_replan(rank, graceful=False)
+
+    def _departure_replan(self, rank: int, graceful: bool) -> RecoveryReport:
+        """Plan a departure: layer-wise ``departure_replay`` first (leaver
+        streams its layers off directly), heavy rescheduling fallback when
+        the survivor stage count is not mesh-feasible — with detection
+        zeroed (the leaver announced itself) and the drain's overlap kept."""
+        quantum = len(self.cfg.pattern)
+        try:
+            rep = departure_replay(self.plan, self.profile, rank,
+                                   graceful=graceful, layer_quantum=quantum)
+            self._next_lowered = relower(self.lowered, rep.new_plan, self.cfg,
+                                         self.model_axis)
+            self._next_mode = rep.mode
+            return rep
+        except (LoweringError, AllocationError):
+            rep = heavy_rescheduling(self.plan, self.profile, rank,
+                                     fail_time=self.clock,
+                                     allowed_stages=self._lowerable_stages)
+            rep = dataclasses.replace(rep, detection_s=0.0,
+                                      overlapped=graceful)
             self._next_lowered = relower(self.lowered, rep.new_plan, self.cfg,
                                          self.model_axis)
             self._next_mode = "heavy"
@@ -347,14 +520,20 @@ class PipelineSession:
 
         Pure index migration of the stacked period params and both Adam
         moments (``core.lowering.migrate_params`` — bit-identical for
-        untouched periods), vocab re-padding when the stage-count change
-        re-widths tp, backup restore for a fully-failed single-device
-        stage, and (lightweight mode) exact byte reconciliation of the
-        runtime's moved periods against the analytical RecoveryReport
-        (DESIGN.md §7)."""
+        untouched periods, direction-agnostic, so a join's scale-out moves
+        use the same gather as a crash's scale-in), vocab re-padding when
+        the stage-count change re-widths tp, backup restore for a fully
+        *lost* single-device stage (crashes only — a draining or evicted
+        leaver streams its layers off directly), and exact byte
+        reconciliation of the runtime's moved periods against the
+        analytical RecoveryReport for every layer-wise mode (DESIGN.md §7;
+        the heavy fallback redistributes everything, so has no per-move
+        prediction to reconcile)."""
         old_lp, new_lp = self.lowered, self._next_lowered
-        failed = self._recovering_rank
-        old_owner = self._device_owner(failed, report.new_plan, new_lp)
+        departing = self._recovering_rank
+        lost = self._transition_lost
+        old_owner = self._device_owner(departing, report.new_plan, new_lp,
+                                       lost=lost)
         new_params, mig = migrate_params(self.params, old_lp, new_lp,
                                          old_owner=old_owner)
         new_opt = migrate_opt_state(self.opt_state, old_lp, new_lp)
@@ -370,14 +549,15 @@ class PipelineSession:
         restored_stage = None
         restored_periods: tuple[int, ...] = ()
         missing: list[int] = []
-        for q, st in enumerate(self.plan.stages):
-            if failed in st.group and len(st.group) == 1:
-                if self.store.has(q):
-                    new_params, restored_periods = self._restore_stage(
-                        new_params, q, new_lp)
-                    restored_stage = q
-                else:
-                    missing.append(q)
+        if lost:
+            for q, st in enumerate(self.plan.stages):
+                if departing in st.group and len(st.group) == 1:
+                    if self.store.has(q):
+                        new_params, restored_periods = self._restore_stage(
+                            new_params, q, new_lp)
+                        restored_stage = q
+                    else:
+                        missing.append(q)
         if missing:
             warnings.warn(
                 f"stage(s) {missing} failed before any backup was pushed: "
@@ -386,52 +566,73 @@ class PipelineSession:
                 "lost; lower backup_every or call backup_now() earlier)")
 
         reconciliation = None
-        if self._next_mode == "lightweight":
+        if self._next_mode in ("lightweight", "admission", "drain", "evict"):
             reconciliation = reconcile_migration(
                 mig, report, new_lp, self.profile.table, len(self.cfg.pattern))
 
         # swap in the re-lowered runtime, re-sharding the migrated state
         self._install(report.new_plan, new_lp)
+        if self._pending_profile is not None:
+            # an accepted join extends the cluster the session plans over
+            self.profile = self._pending_profile
+            self._pending_profile = None
         shardings = named(self.ts.mesh, self.ts.param_specs)
         self.params = jax.device_put(new_params, shardings)
         opt_sh = _opt_shardings(self.optimizer,
                                 jax.eval_shape(lambda: new_params), shardings)
         self.opt_state = jax.device_put(new_opt, opt_sh)
-        # backups are keyed by the old stage split — re-seed on new topology
-        for q in range(len(old_lp.stage_periods)):
-            self.store.drop(q)
+        self._reseed_backups(old_lp)
         return RecoveryOutcome(report, mig, reconciliation, restored_stage,
                                restored_periods, self._next_mode,
-                               self._detect_wall, tuple(missing))
+                               self._detect_wall, tuple(missing),
+                               event=self._transition_event,
+                               accepted=True, stall_s=report.stall_s)
+
+    def _reseed_backups(self, old_lp: LoweredPlan) -> None:
+        """Backups are keyed by the stage split, which every membership
+        transition changes: drop the old arrangement's replicas and re-seed
+        the NEW single-device stages immediately, so a follow-up failure
+        never restores rows scattered for a split that no longer exists.
+        Sessions that replicate manually (``backup_every=0`` with explicit
+        ``backup_now()`` calls) are re-seeded too — going from "replicated"
+        to "stale metadata" across a transition was the regression."""
+        had_replicas = any(self.store.has(q)
+                           for q in range(len(old_lp.stage_periods)))
+        for q in range(len(old_lp.stage_periods)):
+            self.store.drop(q)
+        if self.backup_every or had_replicas:
+            self.backup_now()
 
     def resume(self, report: RecoveryReport, outcome: RecoveryOutcome) -> None:
-        """Executor step 3: re-seed stage backups on the new topology (the
-        old replicas were keyed by the old stage split and dropped); the
-        re-jitted step was already installed by ``migrate``."""
-        if self.backup_every:
-            self.backup_now()
+        """Executor step 3: nothing left to do — ``migrate`` installed the
+        re-jitted step and re-seeded the stage backups for the new
+        arrangement before handing control back, so the pipeline is
+        restartable even if resumption itself is interrupted."""
 
     # -- helpers -----------------------------------------------------------
 
-    def _device_owner(self, failed_rank: int, new_plan: Plan,
-                      new_lp: LoweredPlan):
+    def _device_owner(self, departing_rank: int | None, new_plan: Plan,
+                      new_lp: LoweredPlan, lost: bool = True):
         """Per-canonical-period owner in NEW-plan stage coordinates, by
         *device identity*: a period is already resident on its new owner
         stage when some surviving device of its old stage belongs to that
         stage's new group; otherwise its owner is the new stage holding a
-        surviving old holder.  ``None`` marks a fully-failed stage's
-        periods (restored from backup, not migrated).  For a lightweight
-        replay (survivors keep their order) this reduces to the survivor
-        index map that the analytical boundary accounting uses; for the
-        heavy fallback it keeps moved/resident reporting truthful across a
-        stage-count change."""
+        surviving old holder.  A stage departing whole leaves no holder:
+        ``None`` when it is *lost* (crashed — restored from backup) and
+        ``DIRECT_SOURCE`` when the leaver is alive (drain/evict — its rows
+        stream straight to their new owners).  For a lightweight replay
+        (survivors keep their order) this reduces to the survivor index
+        map that the analytical boundary accounting uses; for joins and
+        the heavy fallback it keeps moved/resident reporting truthful
+        across a stage-count change.  ``departing_rank=None`` (a join)
+        keeps every incumbent a holder."""
         new_of_rank = {d: p for p, st in enumerate(new_plan.stages)
                        for d in st.group}
         new_own = period_owner(new_lp)
         owner: list[int | None] = []
         for q, (i, j) in enumerate(self.lowered.stage_periods):
             holders = [d for d in self.plan.stages[q].group
-                       if d != failed_rank]
+                       if d != departing_rank]
             for t in range(i, j):
                 if any(d in new_plan.stages[new_own[t]].group
                        for d in holders):
@@ -439,7 +640,9 @@ class PipelineSession:
                 elif holders:
                     owner.append(new_of_rank.get(holders[0]))
                 else:
-                    owner.append(None)           # whole stage lost
+                    # whole stage departed: lost -> backup restore;
+                    # alive -> direct stream off the leaver
+                    owner.append(None if lost else DIRECT_SOURCE)
         return owner
 
     def _restore_stage(self, tree: dict, q: int, new_lp: LoweredPlan):

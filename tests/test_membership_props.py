@@ -1,0 +1,216 @@
+"""Property tests: elastic-membership transitions are pure data movement.
+
+Two levels, both pinning the same invariant — **no sequence of membership
+transitions may touch a weight or an Adam moment**:
+
+* migration chains (fast, heavily randomized): arbitrary sequences of
+  stage re-splits ``A -> X1 -> ... -> A`` move the arranged period stack
+  and stamped optimizer moments around and must hand every row back
+  bit-identically (uses hypothesis when installed, seeded ``random``
+  chains otherwise — same test body either way);
+* live sessions (seeded): random join/drain/evict/fail sequences driven
+  through ``PipelineSession`` between training steps leave params + Adam
+  moments bit-identical to a never-churned twin trained on the same
+  batches, and the pipeline still trains afterwards.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.costmodel import kp_policy
+from repro.core.hardware import A100, JETSON_NX, JETSON_TX2, Cluster
+from repro.core.lowering import (LoweredPlan, migrate_opt_state,
+                                 migrate_params, period_positions)
+from repro.core.profiler import LayerTable, Profile
+from repro.models.model import init_model
+from repro.optim import AdamW
+from repro.runtime.pipeline import arrange_periods
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without hypothesis: seeded fallback
+    HAVE_HYPOTHESIS = False
+
+N_PERIODS = 8
+
+
+def _lp(stage_periods):
+    P = len(stage_periods)
+    return LoweredPlan(arch="t", stage=P, n_micro=4, micro_batch=2,
+                       global_batch=8, n_periods=N_PERIODS,
+                       stage_periods=tuple(stage_periods),
+                       stage_layers=tuple((0, 0) for _ in range(P)),
+                       device_groups=tuple((p,) for p in range(P)),
+                       micro_alloc=tuple((2,) for _ in range(P)),
+                       warmup=tuple(kp_policy(P, p) for p in range(P)))
+
+
+def _split_from_cuts(cuts) -> tuple:
+    pts = sorted({0, N_PERIODS, *cuts})
+    return tuple((a, b) for a, b in zip(pts, pts[1:]))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("phi3-mini-3.8b").replace(n_layers=N_PERIODS)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _check_chain(model, cut_sets) -> None:
+    """Migrate the arranged stack + stamped moments through every split in
+    the chain and back to the start; everything must return bit-identical."""
+    cfg, params = model
+    start = _split_from_cuts(cut_sets[0])
+    lps = [_lp(_split_from_cuts(c)) for c in cut_sets[1:]]
+    A = _lp(start)
+    pA = dict(params)
+    pA["periods"], _ = arrange_periods(params["periods"], A.stage_periods)
+    state = AdamW(lr=1e-3).init(pA)
+    # stamp each moment row with its arranged position so moves are visible
+    m = dict(state.m)
+    m["periods"] = jax.tree.map(
+        lambda x: (np.arange(x.shape[0], dtype=np.float32)
+                   .reshape(-1, *([1] * (x.ndim - 1)))
+                   * np.ones_like(np.asarray(x))),
+        state.m["periods"])
+    state = state._replace(m=m)
+    stamp = [np.asarray(x).copy() for x in jax.tree.leaves(state.m["periods"])]
+
+    cur_p, cur_s, cur_lp = pA, state, A
+    for lp in [*lps, A]:
+        cur_p, _ = migrate_params(cur_p, cur_lp, lp)
+        cur_s = migrate_opt_state(cur_s, cur_lp, lp)
+        cur_lp = lp
+    # compare the rows real periods live in (stage padding is don't-care)
+    pos = period_positions(A)
+    rows = [pos[t] for t in range(N_PERIODS)]
+    for a, b in zip(jax.tree.leaves(pA["periods"]),
+                    jax.tree.leaves(cur_p["periods"])):
+        a, b = np.asarray(a), np.asarray(b)
+        for r in rows:
+            assert np.array_equal(a[r], b[r])
+    for a, b in zip(stamp, jax.tree.leaves(cur_s.m["periods"])):
+        b = np.asarray(b)
+        for r in rows:
+            assert np.array_equal(a[r], b[r])
+    assert cur_s.step is state.step
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(cut_sets=hst.lists(
+        hst.sets(hst.integers(1, N_PERIODS - 1), max_size=3),
+        min_size=2, max_size=5))
+    def test_random_migration_chain_round_trips(model, cut_sets):
+        _check_chain(model, cut_sets)
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_migration_chain_round_trips(model, seed):
+        rng = random.Random(seed)
+        cut_sets = [set(rng.sample(range(1, N_PERIODS), rng.randint(0, 3)))
+                    for _ in range(rng.randint(2, 5))]
+        _check_chain(model, cut_sets)
+
+
+# ---------------------------------------------------------------------------
+# live sessions: random event sequences vs a never-churned twin
+# ---------------------------------------------------------------------------
+
+_B, _S = 8, 32
+_STEPS_BEFORE = 2
+_JOINERS = (JETSON_TX2, JETSON_NX, A100)
+
+
+def _make_session():
+    from jax.sharding import Mesh
+
+    from repro.core.planner import plan_hpp
+    from repro.runtime.session import PipelineSession
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    cfg = cfg.replace(n_layers=2 * len(cfg.pattern))
+    table = LayerTable.from_model_config(cfg, _S)
+    prof = Profile.analytic(table, Cluster((JETSON_NX,) * 3, 1e9 / 8),
+                            max_batch=_B)
+    plan = plan_hpp(prof, _B, micro_batch=4, arch=cfg.name,
+                    allowed_stages={1})
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    session = PipelineSession(cfg, mesh, plan, prof, backup_every=1)
+    session.init(jax.random.PRNGKey(0))
+    return cfg, session
+
+
+def _leaves(session):
+    return ([np.asarray(jax.device_get(x)).copy()
+             for x in jax.tree.leaves(session.params)],
+            [np.asarray(jax.device_get(x)).copy()
+             for x in jax.tree.leaves(session.opt_state.m)],
+            [np.asarray(jax.device_get(x)).copy()
+             for x in jax.tree.leaves(session.opt_state.v)])
+
+
+@pytest.fixture(scope="module")
+def never_churned_twin():
+    """The reference state: same init, same batches, zero membership
+    events."""
+    from repro.data import SyntheticLM
+
+    cfg, session = _make_session()
+    ds = SyntheticLM(cfg.vocab_size, _S)
+    for s in range(_STEPS_BEFORE):
+        session.step(ds.batch(s, _B))
+    return _leaves(session)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_event_sequences_preserve_state(never_churned_twin, seed):
+    from repro.data import SyntheticLM
+
+    cfg, session = _make_session()
+    ds = SyntheticLM(cfg.vocab_size, _S)
+    for s in range(_STEPS_BEFORE):
+        session.step(ds.batch(s, _B))
+
+    rng = random.Random(seed)
+    n_events = rng.randint(3, 5)
+    applied = []
+    for _ in range(n_events):
+        live = list(session.live_ranks)
+        kinds = []
+        if len(live) < 4:                      # keep the DP group feedable
+            kinds.append("join")
+        if len(live) > 1:
+            kinds += ["drain", "evict", "fail"]
+        kind = rng.choice(kinds)
+        if kind == "join":
+            out = session.admit(rng.choice(_JOINERS), hysteresis=-10.0)
+            assert out.accepted, out.decision.reason
+        elif kind == "fail":
+            session.fail(rng.choice(live))
+            out = session.recover_now()
+        elif kind == "drain":
+            out = session.drain(rng.choice(live))
+        else:
+            out = session.evict(rng.choice(live))
+        applied.append((kind, out.mode))
+    assert len(session.memberships) == n_events, applied
+
+    # the churn was pure data movement: bit-identical to the twin
+    churned = _leaves(session)
+    for ours, theirs in zip(churned, never_churned_twin):
+        assert len(ours) == len(theirs)
+        for a, b in zip(ours, theirs):
+            assert np.array_equal(a, b), applied
+
+    # and the surviving membership still trains
+    loss, _ = session.step(ds.batch(_STEPS_BEFORE, _B))
+    assert np.isfinite(loss), applied

@@ -3,11 +3,15 @@
 import pytest
 
 from repro.core.costmodel import kp_policy
-from repro.core.hardware import JETSON_NX, Cluster, env_c, env_d
+from repro.core.hardware import JETSON_NX, JETSON_TX2, Cluster, env_c, env_d
 from repro.core.planner import Plan, StagePlan, plan_hpp
-from repro.core.profiler import LayerTable, Profile
-from repro.core.replay import (assign_backups, detection_latency,
-                               heavy_rescheduling, lightweight_replay)
+from repro.core.profiler import LayerTable, Profile, extend_profile
+from repro.core.replay import (AdmissionDecision, DeviceDraining,
+                               DeviceEvicted, DeviceJoined, RecoveryReport,
+                               MembershipController, admission_replay,
+                               assign_backups, departure_replay,
+                               detection_latency, heavy_rescheduling,
+                               lightweight_replay)
 from repro.models import AttentionConfig, LayerSpec, ModelConfig
 
 
@@ -167,3 +171,159 @@ def test_boundary_moves_power_migration_time():
             max(m.nbytes / m.link_bw for m in rep.boundary_moves))
     else:
         assert rep.migration_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership: admission, graceful departure, event dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_extend_profile_appends_newcomer_as_last_rank(setup):
+    profile, plan = setup
+    n = len(profile.cluster.devices)
+    ext = extend_profile(profile, JETSON_TX2)
+    assert len(ext.cluster.devices) == n + 1
+    assert ext.cluster.devices[-1].name == JETSON_TX2.name
+    assert ext.cluster.devices[:n] == profile.cluster.devices
+    assert ext.table is profile.table
+    # incumbent rows are untouched: any layer timing agrees rank-for-rank
+    for r in range(n):
+        assert ext.t_fwd(r, 4, 0, 3) == profile.t_fwd(r, 4, 0, 3)
+
+
+def test_admission_hysteresis_gates_acceptance(setup):
+    """The same newcomer is admitted or turned away purely by the
+    hysteresis margin; a rejection never produces a plan."""
+    profile, plan = setup
+    ext = extend_profile(profile, JETSON_TX2)
+    new_rank = len(ext.cluster.devices) - 1
+    always = admission_replay(plan, ext, new_rank, hysteresis=-10.0)
+    never = admission_replay(plan, ext, new_rank, hysteresis=0.99)
+    assert always.accepted and always.report is not None
+    assert always.report.mode == "admission"
+    assert always.report.detection_s == 0.0        # planned, not a crash
+    assert always.replan_s > 0.0
+    assert always.candidate_latency < always.incumbent_latency * 11.0
+    assert not never.accepted and never.report is None
+    assert never.replan_s > 0.0                    # pricing work still paid
+    assert "hysteresis" in never.reason
+
+
+def test_admitted_plan_covers_layers_and_uses_newcomer(setup):
+    profile, plan = setup
+    ext = extend_profile(profile, JETSON_TX2)
+    new_rank = len(ext.cluster.devices) - 1
+    decision = admission_replay(plan, ext, new_rank, hysteresis=-10.0)
+    stages = decision.report.new_plan.stages
+    assert stages[0].layers[0] == 0
+    assert stages[-1].layers[1] == ext.table.L
+    for a, b in zip(stages, stages[1:]):
+        assert a.layers[1] == b.layers[0]
+    holders = [st for st in stages if new_rank in st.group]
+    assert len(holders) == 1                       # joins exactly one stage
+    # a DP-peer join replicates the stage model onto the newcomer; an
+    # own-stage join pays boundary moves instead — never both zero when
+    # the newcomer actually holds layers
+    rep = decision.report
+    if len(holders[0].group) > 1:
+        assert rep.replicate_s > 0.0
+    assert rep.total_s >= rep.replan_s + rep.migration_s
+
+
+def test_departure_replay_drain_overlaps_evict_pauses():
+    """The sole owner of a stage leaves: every one of its layers streams
+    directly off the leaver; a graceful drain stalls the pipeline only for
+    the re-plan, an evict pauses for the migration too."""
+    table, profile, plan = _single_device_plan()
+    drain = departure_replay(plan, profile, 1, graceful=True)
+    evict = departure_replay(plan, profile, 1, graceful=False)
+    assert drain.mode == "drain" and evict.mode == "evict"
+    # the leaver is alive: no detection, nothing restored from backups
+    for rep in (drain, evict):
+        assert rep.detection_s == 0.0 and rep.restore_s == 0.0
+        assert rep.direct_moves, "fully-departed stage must stream directly"
+        assert all(dm.src_rank == 1 for dm in rep.direct_moves)
+        assert sum(dm.nbytes for dm in rep.direct_moves) == pytest.approx(
+            table.param_bytes(*plan.stages[1].layers))
+        for st in rep.new_plan.stages:
+            assert 1 not in st.group
+    assert drain.overlapped and not evict.overlapped
+    assert drain.stall_s == pytest.approx(drain.replan_s)
+    assert evict.stall_s == pytest.approx(evict.total_s)
+    assert evict.stall_s > drain.stall_s
+
+
+def test_controller_dispatches_typed_events():
+    """handle() routes each event type through its handler, stamping the
+    planned-transition state machine (no detection spine) and keeping the
+    heartbeat registry in sync with membership."""
+    from types import SimpleNamespace
+
+    plan_after_join = SimpleNamespace(
+        stages=(SimpleNamespace(group=(0, 1)), SimpleNamespace(group=(2, 3)),))
+    calls = []
+
+    class Exec:
+        def admit_replan(self, event):
+            calls.append(("admit", event.device))
+            rep = RecoveryReport(0.0, 0.25, 0.5, 0.0, plan_after_join,
+                                 "admission", replicate_s=0.75)
+            return AdmissionDecision(True, rep, 1.0, 0.5, 0.05, 0.25, "ok")
+
+        def drain_replan(self, rank):
+            calls.append(("drain", rank))
+            return RecoveryReport(0.0, 0.25, 2.0, 0.0, plan_after_join,
+                                  "drain", overlapped=True)
+
+        def migrate(self, report):
+            calls.append(("migrate", report.mode))
+            return "mig"
+
+        def resume(self, report, migration):
+            calls.append(("resume", migration))
+
+    c = MembershipController([0, 1, 2])
+    decision, mig = c.handle(DeviceJoined("newdev"), Exec(), now=10.0)
+    assert decision.accepted and mig == "mig"
+    assert [s for s, _, _ in c.events] == [
+        "monitoring", "admitting", "migrating", "resuming", "monitoring"]
+    assert 3 in c.last_beat                       # newcomer now monitored
+    times = {s: t for s, t, _ in c.events}
+    # migrating starts after pricing; resuming after boundary + replica push
+    assert times["migrating"] == pytest.approx(10.25)
+    assert times["resuming"] == pytest.approx(10.25 + 0.5 + 0.75)
+
+    report, mig = c.handle(DeviceDraining(2), Exec(), now=20.0)
+    assert report.mode == "drain" and 2 not in c.last_beat
+    states = [s for s, t, _ in c.events if t >= 20.0]
+    assert states == ["draining", "migrating", "resuming", "monitoring"]
+    # overlapped drain: resuming advances by the re-plan alone
+    t2 = {s: t for s, t, _ in c.events if t >= 20.0}
+    assert t2["resuming"] == pytest.approx(20.25)
+    assert calls[0] == ("admit", "newdev") and ("drain", 2) in calls
+
+
+def test_controller_rejected_join_returns_to_monitoring():
+    class Exec:
+        def admit_replan(self, event):
+            return AdmissionDecision(False, None, 1.0, 0.99, 0.05, 0.3,
+                                     "candidate misses hysteresis margin")
+
+    c = MembershipController([0, 1])
+    decision, mig = c.handle(DeviceJoined("newdev"), Exec(), now=5.0)
+    assert not decision.accepted and mig is None
+    assert [s for s, _, _ in c.events] == [
+        "monitoring", "admitting", "rejected", "monitoring"]
+    assert c.last_beat == {0: 0.0, 1: 0.0}        # membership unchanged
+    assert c.events[-1][1] == pytest.approx(5.3)  # only the pricing work
+
+
+def test_controller_planned_transitions_require_quiet_state():
+    c = MembershipController([0, 1])
+    c.heartbeat(0, 5.0)
+    c.poll(5.0)                                   # rank 1 now suspect
+    assert c.state == "probing"
+    with pytest.raises(RuntimeError):
+        c.handle(DeviceJoined("newdev"), object(), now=5.0)
+    with pytest.raises(RuntimeError):
+        c.handle(DeviceEvicted(1), object(), now=5.0)

@@ -317,6 +317,169 @@ def test_replay_reuses_jitted_step_when_spec_unchanged():
     assert np.isfinite(loss)
 
 
+# ---------------------------------------------------------------------------
+# Elastic membership at the session level (single-stage plans on a (1, 1)
+# mesh — the multi-stage, layer-moving paths run on 4 host devices in
+# examples/elastic_membership.py, driven by test_elastic_membership_example)
+# ---------------------------------------------------------------------------
+
+
+def _membership_session(staleness=0, backup_every=0):
+    from jax.sharding import Mesh
+
+    from repro.core.planner import plan_hpp
+    from repro.data import SyntheticLM
+    from repro.runtime.session import PipelineSession
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    cfg = cfg.replace(n_layers=2 * len(cfg.pattern))
+    B, S = 8, 32
+    table = LayerTable.from_model_config(cfg, S)
+    prof = Profile.analytic(table, Cluster((JETSON_NX,) * 3, 1e9 / 8),
+                            max_batch=B)
+    plan = plan_hpp(prof, B, micro_batch=4, arch=cfg.name,
+                    allowed_stages={1})
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    session = PipelineSession(cfg, mesh, plan, prof,
+                              backup_every=backup_every, staleness=staleness)
+    session.init(jax.random.PRNGKey(0))
+    return cfg, session, SyntheticLM(cfg.vocab_size, S)
+
+
+def test_session_drain_evict_and_backup_reseed():
+    """Planned departures shrink the membership without a restore, and —
+    the stale-backup regression — the backup store is re-seeded for the
+    NEW arrangement after every transition: once the surviving stage is
+    single-device it is backed up; once a join makes it multi-device
+    again, the now-stale single-stage key is dropped (DP peers replicate)."""
+    from repro.core.hardware import JETSON_TX2
+
+    cfg, session, ds = _membership_session(backup_every=1)
+    session.step(ds.batch(0, 8))
+    assert not session.store.has(0)           # multi-device stage: DP peers
+    out = session.drain(1)
+    assert out.accepted and out.report.mode == "drain"
+    assert out.report.detection_s == 0.0 and out.report.restore_s == 0.0
+    assert out.stall_s == pytest.approx(out.report.replan_s)
+    assert session.live_ranks == (0, 2)
+    out = session.evict(2)
+    assert out.report.mode == "evict"
+    assert out.stall_s == pytest.approx(out.report.total_s)
+    assert session.live_ranks == (0,)
+    # S1: the single-device survivor stage is backed up for the NEW plan
+    assert session.store.has(0)
+    loss, _ = session.step(ds.batch(1, 8))
+    assert np.isfinite(loss)
+    # a join widens the stage again: the stale single-device key must go
+    out = session.admit(JETSON_TX2, hysteresis=-10.0)
+    assert out.accepted
+    assert session.live_ranks == (0, 3)       # newcomer appended as rank 3
+    assert len(session.profile.cluster.devices) == 4
+    assert not session.store.has(0)
+    loss, _ = session.step(ds.batch(2, 8))
+    assert np.isfinite(loss)
+    # crash path still works after the churn (backups track the new plan)
+    session.fail(3)
+    rec = session.recover_now()
+    assert rec.mode in ("lightweight", "heavy")
+    assert session.live_ranks == (0,)
+    loss, _ = session.step(ds.batch(3, 8))
+    assert np.isfinite(loss)
+    # each transition was recorded in order
+    assert [o.report.mode if o.report else "admission"
+            for o in session.memberships] == [
+        "drain", "evict", "admission", rec.mode]
+
+
+def test_session_rejected_join_changes_nothing():
+    from repro.core.hardware import JETSON_TX2
+
+    cfg, session, ds = _membership_session()
+    plan0, ts0, prof0 = session.plan, session.ts, session.profile
+    out = session.admit(JETSON_TX2, hysteresis=0.99)
+    assert not out.accepted and out.mode == "admission"
+    assert out.decision is not None and not out.decision.accepted
+    assert "hysteresis" in out.decision.reason
+    assert out.stall_s == pytest.approx(out.decision.replan_s)
+    # the incumbent plan, jitted step and profile all survive untouched
+    assert session.plan is plan0 and session.ts is ts0
+    assert session.profile is prof0
+    assert session.live_ranks == (0, 1, 2)
+    assert session.memberships[-1] is out
+    loss, _ = session.step(ds.batch(0, 8))
+    assert np.isfinite(loss)
+
+
+def test_session_join_evict_round_trip_bit_identical():
+    """Acceptance pin: admit a newcomer, then evict it — params AND Adam
+    moments come back bit-identical to the pre-join state (migrations are
+    pure data movement; no transition may touch a weight)."""
+    from repro.core.hardware import A100
+
+    cfg, session, ds = _membership_session()
+    for s in range(2):
+        session.step(ds.batch(s, 8))
+    snap_p = [np.asarray(x).copy() for x in jax.tree.leaves(session.params)]
+    snap_m = [np.asarray(x).copy()
+              for x in jax.tree.leaves(session.opt_state.m)]
+    snap_v = [np.asarray(x).copy()
+              for x in jax.tree.leaves(session.opt_state.v)]
+    step0 = int(session.opt_state.step)
+
+    out = session.admit(A100, hysteresis=-10.0)
+    assert out.accepted
+    new_rank = len(session.profile.cluster.devices) - 1
+    assert new_rank in session.live_ranks
+    out = session.evict(new_rank)
+    assert out.accepted and new_rank not in session.live_ranks
+
+    assert int(session.opt_state.step) == step0
+    for a, b in zip(snap_p, jax.tree.leaves(session.params)):
+        assert np.array_equal(a, np.asarray(b))
+    for a, b in zip(snap_m, jax.tree.leaves(session.opt_state.m)):
+        assert np.array_equal(a, np.asarray(b))
+    for a, b in zip(snap_v, jax.tree.leaves(session.opt_state.v)):
+        assert np.array_equal(a, np.asarray(b))
+    loss, _ = session.step(ds.batch(2, 8))
+    assert np.isfinite(loss)
+
+
+def test_membership_transition_flushes_stale_gradients():
+    """A planned transition is a staleness barrier exactly like a crash
+    recovery: the in-flight gradient round applies before the plan swap."""
+    cfg, session, ds = _membership_session(staleness=1)
+    for s in range(2):
+        session.step(ds.batch(s, 8))
+    assert session._grad_buf is not None
+    out = session.drain(2)
+    assert out.accepted
+    assert session._grad_buf is None
+    loss, _ = session.step(ds.batch(2, 8))
+    assert np.isfinite(loss)
+
+
+def test_elastic_membership_example():
+    """The 4-host-device walkthrough (mid-training join with on-arrival
+    profiling, graceful drain with direct streams, hysteresis rejection,
+    join->evict bit-identity, crash-after-churn restore) as a subprocess —
+    the XLA host-device flag must be set before jax initializes."""
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "examples",
+                                      "elastic_membership.py"), "--quick"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=root)
+    assert proc.returncode == 0, (f"\nstdout:{proc.stdout}\n"
+                                  f"stderr:{proc.stderr[-2000:]}")
+    assert "ALL OK" in proc.stdout
+
+
 def test_install_rejits_only_on_spec_change():
     """Re-installing the same lowered plan is a cache hit; a spec-level
     change (e.g. different staleness spec_kw) rebuilds."""

@@ -1,0 +1,126 @@
+"""benchmarks.trend (perf-trend gate) + the churn benchmark's invariants."""
+
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")          # benchmarks/ is a root-level package
+
+from benchmarks.trend import (check, extract_metrics,  # noqa: E402
+                              main, sparkline)
+
+
+def _fault_doc(churn_tput=128.0, tput_light=73.0):
+    return {
+        "suite": "fig16", "quick": True,
+        "records": [
+            {"scenario": "drop_dev0", "failed_rank": 0,
+             "light_recovery_s": 0.3, "heavy_recovery_s": 5.0,
+             "recovery_speedup": 16.7, "tput_light": tput_light,
+             "tput_heavy": 85.0, "base_tput": 105.8,
+             "boundary_moves": []},
+        ],
+        "churn": [
+            {"event": 0, "kind": "join", "accepted": True, "stall_s": 0.7,
+             "recovery_s": 0.7, "within_replay_bound": True,
+             "ftpipehd_s": 9.6, "tput_before": 105.8, "tput_after": 158.5},
+        ],
+        "churn_summary": {
+            "n_events": 6, "accepted_joins": 3,
+            "base_tput_samples_s": 105.8,
+            "churn_tput_samples_s": churn_tput,
+            "replay_bound_s": 1.82, "max_recovery_s": 0.69,
+            "asteroid_stall_s": 13.6, "ftpipehd_stall_s": 52.0,
+            "stall_speedup": 3.8,
+        },
+    }
+
+
+def test_extract_metrics_flattens_fault_doc():
+    m = extract_metrics(_fault_doc())
+    assert m["fig16.tput_light"] == 73.0
+    assert m["churn.stall_s"] == 0.7
+    assert m["churn_summary.churn_tput_samples_s"] == 128.0
+    # booleans and nested lists are not metrics
+    assert "churn.within_replay_bound" not in m
+    assert "fig16.boundary_moves" not in m
+
+
+def test_extract_metrics_groups_throughput_records():
+    doc = {"suite": "throughput", "quick": True, "records": [
+        {"suite": "table4", "tput_samples_s": 120.0, "stages": 4},
+        {"suite": "table4", "tput_samples_s": 140.0, "stages": 2},
+        {"suite": "fig15a_runtime", "tok_s": 4242.0, "loss": 6.5},
+    ]}
+    m = extract_metrics(doc)
+    assert m["table4.tput_samples_s"] == pytest.approx(130.0)   # mean
+    assert m["fig15a_runtime.tok_s"] == 4242.0
+
+
+def test_check_passes_within_threshold_and_fails_beyond():
+    base = extract_metrics(_fault_doc())
+    ok = extract_metrics(_fault_doc(churn_tput=128.0 * 0.95))
+    bad = extract_metrics(_fault_doc(churn_tput=128.0 * 0.80))
+    _, regressions = check([base, base, ok], threshold=0.10)
+    assert regressions == []
+    _, regressions = check([base, base, bad], threshold=0.10)
+    assert any("churn_tput_samples_s" in r for r in regressions)
+    # lower-is-better wall times never gate, even when they blow up
+    worse = dict(base, **{"churn_summary.asteroid_stall_s": 1e9})
+    _, regressions = check([base, worse], threshold=0.10)
+    assert regressions == []
+
+
+def test_check_uses_rolling_median_window():
+    base = extract_metrics(_fault_doc())
+    spike = extract_metrics(_fault_doc(churn_tput=990.0))
+    # one old spike outside the comparison set must not fail the gate
+    series = [spike] + [base] * 9 + [base]
+    _, regressions = check(series, window=8, threshold=0.10)
+    assert regressions == []
+
+
+def test_sparkline_shape():
+    assert len(sparkline([1.0, 2.0, 3.0])) == 3
+    assert sparkline([5.0, 5.0]) == "▄▄"
+
+
+def test_main_exit_codes(tmp_path):
+    good = tmp_path / "a.json"
+    good.write_text(json.dumps(_fault_doc()))
+    bad = tmp_path / "b.json"
+    bad.write_text(json.dumps(_fault_doc(churn_tput=60.0, tput_light=30.0)))
+    assert main([str(good)]) == 0                      # nothing to compare
+    assert main([str(good), str(good)]) == 0
+    assert main([str(good), str(good), str(bad)]) == 1
+    # unreadable files are skipped, not fatal
+    assert main([str(tmp_path / "missing.json"), str(good)]) == 0
+
+
+def test_churn_benchmark_structure(monkeypatch):
+    """The analytic Poisson churn arm: a mid-training join improves
+    throughput-under-churn, every event's recovery latency stays within
+    the replay bound, and the FTPipeHD full-redistribution baseline pays
+    more cumulative stall."""
+    import benchmarks.bench_fig16_17_fault as mod
+
+    monkeypatch.setattr(
+        mod, "_launch_churn_session",
+        lambda **kw: {"sim_tok_s": 1.0, "base_sim_tok_s": 1.0,
+                      "join_accepted": True, "latency_before_s": 1.0,
+                      "latency_after_s": 1.0})
+    rows, records, summary = mod.run_churn_structured(quick=True)
+    assert len(records) == summary["n_events"]
+    assert summary["accepted_joins"] >= 1
+    assert records[0]["kind"] == "join"                # join guaranteed early
+    assert summary["churn_tput_samples_s"] > summary["base_tput_samples_s"]
+    assert summary["all_within_replay_bound"]
+    assert all(r["recovery_s"] <= r["replay_bound_s"] for r in records)
+    assert summary["ftpipehd_stall_s"] > summary["asteroid_stall_s"]
+    # deterministic under the fixed seed
+    _, records2, summary2 = mod.run_churn_structured(quick=True)
+    assert [r["kind"] for r in records2] == [r["kind"] for r in records]
+    # (rel tolerance: the stalls include measured re-plan wall time)
+    assert summary2["churn_tput_samples_s"] == pytest.approx(
+        summary["churn_tput_samples_s"], rel=1e-3)
