@@ -210,3 +210,119 @@ def round_latency_serialized(steps: Sequence[Step], M: int) -> float:
                                           eb=s.eb + pending_b))
         pending_f = pending_b = 0.0
     return round_latency(tuple(merged), M)
+
+
+# ---------------------------------------------------------------------------
+# Compressed-transfer pricing (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+#: (de)quantization arithmetic per element (abs, max-reduce, divide, round
+#: on the sender; multiply on the receiver) — charged against each
+#: endpoint's device flops.  Deliberately coarse: the kernels are
+#: bandwidth-bound single-pass maps, so a handful of flops/elem bounds
+#: them from above.
+QUANT_FLOPS_PER_ELEM = 8.0
+
+#: payload bits per fp32 element for each wire format (per-tile scale
+#: amortized separately via ``CompressionConfig.wire_ratio``)
+_FMT_BITS = {"int8": 8.0, "fp8": 8.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Planner-visible compressed-transfer configuration.
+
+    Mirrors the runtime knobs (``TrainSpec.compress`` / ``quant_tile`` /
+    ``bucket_mb`` / ``error_feedback``) so a ``Plan`` carries the choice
+    through replay replans and ``reprice_plan`` re-applies it on fresh
+    profiles.
+    """
+
+    fmt: str = "int8"              # 'int8' | 'fp8'
+    tile: int = 256                # elements per scale tile
+    bucket_mb: float | None = None # gradient bucket bound (None = per-group)
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        if self.fmt not in _FMT_BITS:
+            raise ValueError(f"unknown compression format {self.fmt!r}")
+        if self.tile <= 0:
+            raise ValueError(f"quant tile must be positive, got {self.tile}")
+
+    @property
+    def wire_ratio(self) -> float:
+        """Compressed bytes / fp32 bytes: payload bits plus one fp32 scale
+        per ``tile`` elements ((8 + 32/tile) / 32 ≈ 0.254 for int8@256)."""
+        return (_FMT_BITS[self.fmt] + 32.0 / self.tile) / 32.0
+
+
+def parse_compress(compress) -> CompressionConfig | None:
+    """Normalize the planner knob: None/'none' -> None, 'int8'/'fp8' -> a
+    default config, a ``CompressionConfig`` passes through."""
+    if compress is None or compress == "none":
+        return None
+    if isinstance(compress, CompressionConfig):
+        return compress
+    if isinstance(compress, str):
+        return CompressionConfig(fmt=compress)
+    raise TypeError(f"compress must be None, a format string or a "
+                    f"CompressionConfig, got {type(compress)}")
+
+
+def quant_endpoint_cost(nbytes: float, flops: float) -> float:
+    """Seconds to (de)quantize an ``nbytes`` fp32 buffer on a device with
+    ``flops`` peak throughput — the compute toll each endpoint pays for
+    the cheaper wire."""
+    if flops <= 0:
+        return 0.0
+    return (nbytes / 4.0) * QUANT_FLOPS_PER_ELEM / flops
+
+
+def compressed_comm_time(nbytes: float, bw: float, compress,
+                         flops_a: float, flops_b: float) -> float:
+    """One boundary transfer under (optional) compression: compressed
+    bytes over the link plus quantize on the sender and dequantize on the
+    receiver.  ``compress=None`` prices the raw fp32 transfer."""
+    cc = parse_compress(compress)
+    if cc is None:
+        return nbytes / bw
+    return (nbytes * cc.wire_ratio / bw
+            + quant_endpoint_cost(nbytes, flops_a)
+            + quant_endpoint_cost(nbytes, flops_b))
+
+
+def compressed_allreduce_time(param_bytes: float, group, cluster: Cluster,
+                              compress, min_flops: float) -> float:
+    """Eq. (5) over the compressed gradient stream: the ring moves
+    ``wire_ratio`` of the bytes, and every rank quantizes its local
+    contribution + dequantizes the result once per round."""
+    cc = parse_compress(compress)
+    if cc is None:
+        return allreduce_time(param_bytes, group, cluster)
+    t = allreduce_time(param_bytes * cc.wire_ratio, group, cluster)
+    if len(group) > 1:
+        t += 2.0 * quant_endpoint_cost(param_bytes, min_flops)
+    return t
+
+
+def bucketed_allreduce_residual(ta: float, backward_s: float,
+                                param_bytes: float, compress) -> float:
+    """Un-hidden AllReduce seconds under DDP-style bucketed overlap.
+
+    With the gradient tree split into size-bounded buckets, each bucket's
+    psum launches as soon as its layers' backward completes — only the
+    part of the total AllReduce that outlasts the remaining backward stays
+    on the critical path, and the LAST bucket can never be hidden (its
+    layers finish when the backward does).  Mirrors ``plan_dp``'s
+    ``max(ta - eb*M, 0.1*ta)`` overlap pricing, with the floor set by the
+    actual bucket count instead of a fixed 10%.
+    """
+    cc = parse_compress(compress)
+    if cc is None or ta <= 0.0:
+        return ta
+    if cc.bucket_mb is None:
+        n_buckets = 1
+    else:
+        n_buckets = max(1, -(-param_bytes * cc.wire_ratio
+                             // (cc.bucket_mb * (1 << 20))))
+    return max(ta - backward_s, ta / n_buckets)

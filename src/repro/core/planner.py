@@ -21,9 +21,12 @@ import time
 from functools import lru_cache
 
 from .allocation import Allocation, AllocationError, allocate_microbatch
-from .costmodel import (Step, allreduce_time, dominant_index,
-                        hpp_round_latency, hpp_volume, kp_policy,
-                        round_latency, stage_memory)
+from .costmodel import (CompressionConfig, Step, allreduce_time,
+                        bucketed_allreduce_residual,
+                        compressed_allreduce_time, compressed_comm_time,
+                        dominant_index, hpp_round_latency, hpp_volume,
+                        kp_policy, parse_compress, round_latency,
+                        stage_memory)
 from .profiler import Profile
 
 
@@ -68,6 +71,12 @@ class Plan:
     # (``costmodel.round_latency_async`` charges only un-hidden comm); the
     # runtime knob ``TrainSpec.staleness`` should match.
     staleness: int = 0
+    # Compressed-transfer configuration the plan was priced under
+    # (``costmodel.CompressionConfig`` or None = full-precision wire); the
+    # runtime knobs ``TrainSpec.compress``/``quant_tile``/``bucket_mb``
+    # should match.  ``dataclasses.replace``-based replay replans carry it
+    # automatically; ``simulator.reprice_plan`` re-applies it.
+    compress: CompressionConfig | None = None
 
     @property
     def global_batch(self) -> int:
@@ -101,20 +110,41 @@ class Plan:
 # ---------------------------------------------------------------------------
 
 
+def _group_flops(profile: Profile, group) -> float:
+    return min(profile.cluster.devices[d].flops for d in group)
+
+
 def _comm_step(profile: Profile, micro_batch: int, boundary_layer: int,
-               g_left, g_right) -> Step:
+               g_left, g_right, compress=None) -> Step:
     """Inter-stage activation transfer: one micro-batch's boundary tensor
-    over the slowest link between the two device groups."""
+    over the slowest link between the two device groups.  Under
+    compression the wire moves the quantized payload and each endpoint is
+    charged its (de)quantization time (DESIGN.md §10) — both directions,
+    since the custom VJP compresses the backward cotangent identically."""
     nbytes = micro_batch * profile.table.boundary_act(boundary_layer)
     bw = min(profile.cluster.bw(a, b) for a in g_left for b in g_right)
-    t = nbytes / bw
+    t = compressed_comm_time(nbytes, bw, compress,
+                             _group_flops(profile, g_left),
+                             _group_flops(profile, g_right))
     return Step("comm", ef=t, eb=t)
+
+
+def _stage_ta(profile: Profile, i: int, j: int, group, compress,
+              backward_s: float) -> float:
+    """Gradient-sync seconds charged to one stage: Eq. (5) over the
+    (possibly compressed) gradient bytes, minus what DDP-style bucketed
+    overlap hides behind the stage's own backward."""
+    pb = profile.table.param_bytes(i, j)
+    ta = compressed_allreduce_time(pb, group, profile.cluster, compress,
+                                   _group_flops(profile, group))
+    return bucketed_allreduce_residual(ta, backward_s, pb, compress)
 
 
 def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
              max_stages: int | None = None, arch: str = "",
              check_memory: bool = True, intra_opt=True,
-             allowed_stages=None, staleness: int = 0) -> Plan:
+             allowed_stages=None, staleness: int = 0,
+             compress=None) -> Plan:
     """Run Algorithm 2: DP over ``Q(l, n, p)`` with the Eq. 10 transition.
 
     Each candidate head stage is priced by Algorithm 1
@@ -137,10 +167,30 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
     ``staleness=1`` prices candidates with the two-stream overlapped round
     model (``costmodel.round_latency_async``): the gradient AllReduce
     leaves the critical path, which shifts stage cuts toward splits that
-    balance the Execution Phase instead of amortizing T_a."""
+    balance the Execution Phase instead of amortizing T_a.
+
+    ``compress``: None, 'int8'/'fp8', a ``costmodel.CompressionConfig``,
+    or 'auto'.  A set format prices every boundary transfer and gradient
+    AllReduce over the quantized wire (ratio + (de)quant endpoint cost —
+    Algorithm 2's cuts then chase the cheaper links harder), and the
+    resulting plan records the choice for the runtime and replay.
+    'auto' is the error/time trade made explicit: price both, keep the
+    compressed plan only when it is strictly faster — otherwise the
+    quantization error buys nothing and full precision wins."""
+    if compress == "auto":
+        kw = dict(max_stages=max_stages, arch=arch, check_memory=check_memory,
+                  intra_opt=intra_opt, allowed_stages=allowed_stages,
+                  staleness=staleness)
+        comp = plan_hpp(profile, global_batch, micro_batch,
+                        compress="int8", **kw)
+        base = plan_hpp(profile, global_batch, micro_batch,
+                        compress=None, **kw)
+        return comp if comp.latency < base.latency * (1.0 - 1e-9) else base
+    compress = parse_compress(compress)
     if intra_opt == "auto":
         kw = dict(max_stages=max_stages, arch=arch, check_memory=check_memory,
-                  allowed_stages=allowed_stages, staleness=staleness)
+                  allowed_stages=allowed_stages, staleness=staleness,
+                  compress=compress)
         full = plan_hpp(profile, global_batch, micro_batch,
                         intra_opt=True, **kw)
         if all(len(set(st.alloc)) <= 1 for st in full.stages):
@@ -180,8 +230,8 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
                     alloc = stage_eval(i, L, N - n, N, kp_policy(1, 0))
                     if alloc is None:
                         continue
-                    ta = allreduce_time(table.param_bytes(i, L),
-                                        tuple(range(N - n, N)), profile.cluster)
+                    ta = _stage_ta(profile, i, L, tuple(range(N - n, N)),
+                                   compress, alloc.eb * M)
                     steps = (Step("exec", alloc.ef, alloc.eb, ta,
                                   tuple(range(N - n, N)), (i, L), alloc.y),)
                     best = (steps, hpp_round_latency(steps, M, staleness))
@@ -196,12 +246,13 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
                             alloc = stage_eval(i, j, a, b, kp_policy(p, 0))
                             if alloc is None:
                                 continue
-                            ta = allreduce_time(table.param_bytes(i, j),
-                                                tuple(range(a, b)), profile.cluster)
+                            ta = _stage_ta(profile, i, j, tuple(range(a, b)),
+                                           compress, alloc.eb * M)
                             head = Step("exec", alloc.ef, alloc.eb, ta,
                                         tuple(range(a, b)), (i, j), alloc.y)
                             comm = _comm_step(profile, micro_batch, j,
-                                              tuple(range(a, b)), sub[0][0].group)
+                                              tuple(range(a, b)), sub[0][0].group,
+                                              compress)
                             steps = (head, comm) + sub[0]
                             lat = hpp_round_latency(steps, M, staleness)
                             if best is None or lat < best[1]:
@@ -222,7 +273,8 @@ def plan_hpp(profile: Profile, global_batch: int, micro_batch: int,
     steps = Q[(L, N, p_best)][0]
     stages = _stages_from_steps(steps, p_best)
     return Plan(arch, stages, steps, micro_batch, M, lat, "asteroid",
-                time.perf_counter() - t_start, staleness=staleness)
+                time.perf_counter() - t_start, staleness=staleness,
+                compress=compress)
 
 
 def _stages_from_steps(steps, P: int) -> tuple[StagePlan, ...]:
@@ -248,7 +300,8 @@ def replan_for_membership(profile: Profile, incumbent: Plan,
     joins), and every weight placement is up for grabs."""
     return plan_hpp(profile, incumbent.global_batch, incumbent.micro_batch,
                     arch=incumbent.arch, allowed_stages=allowed_stages,
-                    staleness=getattr(incumbent, "staleness", 0))
+                    staleness=getattr(incumbent, "staleness", 0),
+                    compress=getattr(incumbent, "compress", None))
 
 
 def auto_microbatch(profile: Profile, global_batch: int,

@@ -19,8 +19,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
-from .costmodel import (Step, allreduce_time, hpp_round_latency,
-                        stage_memory)
+from .costmodel import Step, hpp_round_latency, stage_memory
 from .planner import Plan
 from .profiler import Profile
 from .schedule import Op, schedule_orders
@@ -246,23 +245,26 @@ def reprice_plan(plan: Plan, profile: Profile) -> Plan:
     costs from ``profile``: Eq. (8) stage times at the allocated counts,
     Eq. (5) AllReduce over the stage group, boundary-activation transfer
     over the slowest inter-group link.  ``latency`` is re-evaluated with
-    Eqs. (4)–(6).  This is how "what would this plan actually cost on the
-    measured device times" is asked of an analytically-planned pipeline.
+    Eqs. (4)–(6).  The plan's compression choice (``plan.compress``) is
+    re-applied, so a compressed plan stays priced over the quantized wire
+    on the new profile.  This is how "what would this plan actually cost
+    on the measured device times" is asked of an analytically-planned
+    pipeline.
     """
-    from .planner import _comm_step
+    from .planner import _comm_step, _stage_ta
 
-    table = profile.table
+    compress = getattr(plan, "compress", None)
     exec_in = [s for s in plan.steps if s.kind == "exec"]
     steps: list[Step] = []
     for k, s in enumerate(exec_in):
         i, j = s.layers
         ef = max(profile.t_fwd(d, y, i, j) for d, y in zip(s.group, s.alloc))
         eb = max(profile.t_bwd(d, y, i, j) for d, y in zip(s.group, s.alloc))
-        ta = allreduce_time(table.param_bytes(i, j), s.group, profile.cluster)
+        ta = _stage_ta(profile, i, j, s.group, compress, eb * plan.n_micro)
         steps.append(Step("exec", ef, eb, ta, s.group, s.layers, s.alloc))
         if k < len(exec_in) - 1:
             steps.append(_comm_step(profile, plan.micro_batch, j, s.group,
-                                    exec_in[k + 1].group))
+                                    exec_in[k + 1].group, compress))
     lat = hpp_round_latency(tuple(steps), plan.n_micro,
                             getattr(plan, "staleness", 0))
     return dataclasses.replace(plan, steps=tuple(steps), latency=lat)

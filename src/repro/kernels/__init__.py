@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels with pure-jnp oracles (``ref.py``) and jitted
+dispatch wrappers (``ops.py``).
+
+The quantized-transfer ops are exported at package level because the
+distributed runtime (``runtime.pipeline`` / ``runtime.train``) calls them
+on every boundary transfer and gradient bucket: they dispatch to the
+Pallas kernels on TPU and to the bit-identical jnp oracles everywhere
+else, so CPU CI (no GPU/TPU) exercises the exact wire numerics without a
+hardware backend — ``quantize_tiles(..., interpret=True)`` remains
+available for running the kernel bodies themselves off-TPU.
+"""
+
+from .quant_transfer import (QDIV, QUANT_FORMATS, dequantize_op,
+                             dequantize_tiles, pack_tiles, quant_dtype,
+                             quantize_op, quantize_tiles, roundtrip,
+                             roundtrip_ef, unpack_tiles, wire_bits)
+
+__all__ = ["QDIV", "QUANT_FORMATS", "dequantize_op", "dequantize_tiles",
+           "pack_tiles", "quant_dtype", "quantize_op", "quantize_tiles",
+           "roundtrip", "roundtrip_ef", "unpack_tiles", "wire_bits"]

@@ -83,6 +83,50 @@ def naive_swiglu(x, wg, wu, wd, act: str = "silu"):
     return (h @ wd.astype(jnp.float32)).astype(x.dtype)
 
 
+#: power-of-two scale divisor per wire format (mirrors quant_transfer.QDIV
+#: without a circular import — quant_transfer imports these oracles).
+#: Dividing the tile abs-max by a power of two is EXACT in binary floating
+#: point, so the scale is bitwise identical whether computed eagerly, under
+#: jit (XLA rewrites constant divisions to reciprocal multiplies — 1 ULP
+#: off for non-power-of-two divisors), or inside the Pallas kernel.
+#: int8: amax maps to +-128, clipped to the symmetric [-127, 127] payload.
+#: fp8 (e4m3, max finite 448): amax maps to +-256 — float formats are
+#: scale-invariant in relative error, so the headroom costs no precision.
+_QDIV = {"int8": 128.0, "fp8": 256.0}
+
+
+def quant_scale(amax, fmt: str):
+    """Per-tile scale from the row abs-max; 1.0 for all-zero tiles (their
+    payload quantizes to zeros regardless, and 0/0 must not appear)."""
+    if fmt not in _QDIV:
+        raise ValueError(f"unknown quantization format {fmt!r}")
+    return jnp.where(amax > 0, amax / _QDIV[fmt], 1.0)
+
+
+def naive_quantize_tiles(x, *, fmt: str = "int8"):
+    """x: (R, tile) float -> (q (R, tile) int8/fp8, scales (R, 1) f32).
+
+    The arithmetic ground truth for ``quant_transfer.quantize_tiles`` —
+    same ops in the same order, so parity with the Pallas kernel is
+    bitwise, not approximate."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = quant_scale(amax, fmt)
+    y = xf / scale
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    elif fmt == "fp8":
+        q = y.astype(jnp.float8_e4m3fn)
+    else:
+        raise ValueError(f"unknown quantization format {fmt!r}")
+    return q, scale
+
+
+def naive_dequantize_tiles(q, scales, *, out_dtype=jnp.float32):
+    """(q (R, tile), scales (R, 1)) -> (R, tile) ``out_dtype``."""
+    return (q.astype(jnp.float32) * scales).astype(out_dtype)
+
+
 def naive_mamba_scan(dt, b, c, x, a):
     """Step-by-step selective-scan reference.  dt/x: (B,S,d); b/c: (B,S,N);
     a: (d,N)."""

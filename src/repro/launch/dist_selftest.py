@@ -274,6 +274,108 @@ def run_async(arch: str, devices) -> float:
     return gap
 
 
+INT8_TOL = 5e-2           # pinned compressed-vs-raw gradient rel-err bound
+
+
+def run_compress(arch: str, devices) -> float:
+    """Compressed boundary transfers + bucketed gradient AllReduce
+    (DESIGN.md §10) on the real runtime, staleness 0:
+
+    1. the *bucketed but uncompressed* gradient path matches the legacy
+       per-leaf psum path to float reassociation (~1e-5 rel — same math,
+       different reduction order);
+    2. int8-compressed gradients (quantized boundary activations AND the
+       quantized bucketed AllReduce) land within the pinned ``INT8_TOL``
+       of the uncompressed gradients on the same params/batch, with live
+       error-feedback residuals;
+    3. error feedback is unbiased in the telescoping-sum sense: the mean
+       of T compressed gradient rounds on a frozen params/batch drifts
+       toward the raw gradient, beating the no-feedback quantizer;
+    4. one compressed optimizer step reduces the loss.
+    """
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticLM
+    from repro.models.frontend import frontend_dim
+    from repro.runtime.train import build_train_step, init_train_state
+
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    B, S, M, T = 8, 64, 4, 6
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    ts_base = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                               n_micro=M)
+    ts_bkt = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                              n_micro=M, bucket_mb=4.0)
+    ts_q = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                            n_micro=M, compress="int8")
+    ts_qnef = build_train_step(cfg, mesh_prod, global_batch=B, stage=2,
+                               n_micro=M, compress="int8",
+                               error_feedback=False)
+    assert ts_bkt.spec.bucketed and ts_q.spec.bucketed
+
+    key = jax.random.PRNGKey(0)
+    ds = SyntheticLM(cfg.vocab_size, S, n_codebooks=cfg.n_codebooks,
+                     prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    batch_np = ds.batch(0, B)
+    params, opt0 = init_train_state(key, ts_base)
+
+    def rel(ga, gb):
+        worst = 0.0
+        for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            d = float(jnp.max(jnp.abs(a - b)))
+            scale = max(float(jnp.max(jnp.abs(b))), 1e-12)
+            worst = max(worst, d / scale)
+        return worst
+
+    (_, m0), g0 = ts_base.grad_fn(params, ts_base.shard_batch(batch_np))
+
+    # 1) bucketed-uncompressed == legacy up to reduction-order reassociation
+    (_, mb), gb, _ = ts_bkt.grad_fn(params, ts_bkt.shard_batch(batch_np),
+                                    ts_bkt.init_ef())
+    worst_bkt = rel(gb, g0)
+
+    # 2) int8 end-to-end (compressed ppermute + compressed bucketed psum)
+    batch_q = ts_q.shard_batch(batch_np)
+    (_, mq), gq, ef = ts_q.grad_fn(params, batch_q, ts_q.init_ef())
+    worst_q = rel(gq, g0)
+    ef_live = any(float(jnp.max(jnp.abs(x))) > 0 for x in jax.tree.leaves(ef))
+    ce_gap = abs(float(mq["ce"]) - float(m0["ce"]))
+
+    # 3) telescoping error feedback: mean of T rounds on frozen params/batch
+    #    approaches the raw gradient; without feedback the quantizer bias is
+    #    whatever round 1 produced, every round
+    acc = jax.tree.map(jnp.zeros_like, gq)
+    ef_t = ts_q.init_ef()
+    for _ in range(T):
+        (_, _), g_t, ef_t = ts_q.grad_fn(params, batch_q, ef_t)
+        acc = jax.tree.map(jnp.add, acc, g_t)
+    mean_ef = jax.tree.map(lambda x: x / T, acc)
+    bias_ef = rel(mean_ef, g0)
+    (_, _), g_nef, _ = ts_qnef.grad_fn(params, ts_qnef.shard_batch(batch_np),
+                                       ts_qnef.init_ef())
+    bias_nef = rel(g_nef, g0)
+    ef_wins = bias_ef < bias_nef
+
+    # 4) one compressed step reduces the loss (step_fn's bucketed arity)
+    p1, _, ef1, l0, _ = ts_q.step_fn(params, opt0, ts_q.init_ef(), batch_q)
+    l1, _ = ts_q.loss_fn(p1, batch_q)
+    improved = float(l1) < float(l0)
+
+    ok = (worst_bkt < 1e-4 and worst_q < INT8_TOL and ef_live and ce_gap < 0.02
+          and ef_wins and improved)
+    print(f"{arch:26s} [compress] bucketed rel={worst_bkt:.2e} int8 "
+          f"rel={worst_q:.2e} ce gap={ce_gap:.2e} ef-bias {bias_nef:.2e}->"
+          f"{bias_ef:.2e} step {float(l0):.4f}->{float(l1):.4f} "
+          f"{'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch}: compressed parity bucketed={worst_bkt} "
+                         f"int8={worst_q} ce={ce_gap} ef_live={ef_live} "
+                         f"ef {bias_nef}->{bias_ef} improved={improved}")
+    return worst_q
+
+
 def run_arch_planned(arch: str, devices) -> float:
     """Full planner->lowering->runtime path: profile an edge cluster, run
     Algorithm 2 restricted to mesh-feasible stage counts, lower the plan
@@ -481,6 +583,7 @@ def main():
     replay = "--replay" in sys.argv
     hetero = "--hetero" in sys.argv
     async_mode = "--async" in sys.argv
+    compress = "--compress" in sys.argv
     archs = args or DEFAULT_ARCHS
     devices = jax.devices()
     assert len(devices) >= 8, "needs 8 host devices"
@@ -495,6 +598,8 @@ def main():
             run_arch_hetero(arch, devices[:8])
         elif async_mode:
             run_async(arch, devices[:8])
+        elif compress:
+            run_compress(arch, devices[:8])
         else:
             run_arch(arch, devices[:8])
     print("ALL OK")

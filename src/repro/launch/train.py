@@ -85,6 +85,26 @@ def main():
                     help="double-buffer stage-boundary sends (2-tick hop, "
                          "transfer of micro-batch m overlaps compute of "
                          "m+1); default: on when --staleness 1")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "int8", "fp8", "auto"),
+                    help="quantize boundary activation/gradient transfers "
+                         "and the gradient AllReduce (DESIGN.md §10); "
+                         "'auto' (requires --plan) lets the planner keep "
+                         "compression only when it prices strictly faster")
+    ap.add_argument("--quant-tile", type=int, default=256,
+                    help="elements per quantization tile (one f32 scale "
+                         "per tile on the wire)")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="bucket the gradient AllReduce into size-bounded "
+                         "chunks (MiB of compressed wire bytes); implies "
+                         "the bucketed gradient path even without "
+                         "--compress")
+    ap.add_argument("--error-feedback", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="carry the per-bucket quantization residual into "
+                         "the next round's gradients (unbiased in the "
+                         "telescoping-sum sense); only active with "
+                         "--compress")
     ap.add_argument("--env", default="D", choices=list("ABCD"),
                     help="edge environment (analytic profile) for --plan; "
                          "ignored when a valid --profile artifact is given")
@@ -132,6 +152,9 @@ def main():
     if args.profile and not args.plan:
         raise SystemExit("--profile requires --plan (a measured profile "
                          "only feeds the planner)")
+    if args.compress == "auto" and not args.plan:
+        raise SystemExit("--compress auto requires --plan (the planner "
+                         "prices the compressed vs raw wire)")
 
     from repro import checkpoint
     from repro.configs import get_config, get_smoke_config
@@ -230,15 +253,32 @@ def main():
             intra_opt = True
         else:
             intra_opt = "auto"
+        from repro.core.costmodel import CompressionConfig
+        if args.compress == "auto":
+            plan_compress = "auto"
+        elif args.compress != "none":
+            plan_compress = CompressionConfig(
+                fmt=args.compress, tile=args.quant_tile,
+                bucket_mb=args.bucket_mb,
+                error_feedback=args.error_feedback)
+        else:
+            plan_compress = None
         plan = plan_hpp(prof, args.global_batch, mb, arch=cfg.name,
                         allowed_stages=divisors, intra_opt=intra_opt,
-                        staleness=args.staleness)
+                        staleness=args.staleness, compress=plan_compress)
+        # the runtime executes whatever the (possibly 'auto') plan chose
+        run_compress = plan.compress.fmt if plan.compress else "none"
+        compress_kw = dict(compress=run_compress,
+                           quant_tile=args.quant_tile,
+                           bucket_mb=args.bucket_mb,
+                           error_feedback=args.error_feedback)
         if events:
             from repro.runtime.session import PipelineSession
             session = PipelineSession(cfg, mesh, plan, prof, optimizer=opt,
                                       backup_every=args.backup_every,
                                       staleness=args.staleness,
-                                      double_buffer=args.double_buffer)
+                                      double_buffer=args.double_buffer,
+                                      **compress_kw)
             lowered = session.lowered
             print(f"asteroid plan: {lowered.stage} stages periods="
                   f"{lowered.stage_periods} M={lowered.n_micro} "
@@ -246,7 +286,8 @@ def main():
             return _run_session(session, cfg, args, events)
         ts, lowered = plan_to_train_step(plan, prof, cfg, mesh, optimizer=opt,
                                          staleness=args.staleness,
-                                         double_buffer=args.double_buffer)
+                                         double_buffer=args.double_buffer,
+                                         **compress_kw)
         print(f"asteroid plan: {lowered.stage} stages periods="
               f"{lowered.stage_periods} M={lowered.n_micro} "
               f"K_p={lowered.warmup} alloc={lowered.micro_alloc} "
@@ -255,12 +296,20 @@ def main():
         ts = build_train_step(cfg, mesh, global_batch=args.global_batch,
                               stage=args.stage, n_micro=args.n_micro,
                               optimizer=opt, staleness=args.staleness,
-                              double_buffer=args.double_buffer)
+                              double_buffer=args.double_buffer,
+                              compress=args.compress,
+                              quant_tile=args.quant_tile,
+                              bucket_mb=args.bucket_mb,
+                              error_feedback=args.error_feedback)
     print(f"plan: stage={ts.spec.plan.stage} tp={ts.spec.plan.tp} "
           f"M={ts.spec.n_micro} shard_alloc="
           f"{ts.spec.shard_alloc or 'uniform'} "
           f"staleness={ts.spec.staleness} "
-          f"double_buffer={ts.spec.double_buffer}")
+          f"double_buffer={ts.spec.double_buffer} "
+          f"compress={ts.spec.compress}"
+          + (f" bucket_mb={ts.spec.bucket_mb:g}" if ts.spec.bucket_mb else "")
+          + (" ef" if ts.spec.bucketed and ts.spec.compress != "none"
+             and ts.spec.error_feedback else ""))
 
     key = jax.random.PRNGKey(0)
     params, opt_state = init_train_state(key, ts, opt)
@@ -272,6 +321,8 @@ def main():
     t_warm = None
     loss = float("nan")
     grad_buf = None
+    bucketed = ts.spec.bucketed
+    ef = ts.init_ef() if bucketed else None
     # steady state starts once every jitted entry point has compiled: the
     # sync path compiles step_fn at step 0; the bounded-staleness path
     # compiles grad_fn (first round) at step 0 and async_step_fn at step 1
@@ -282,10 +333,20 @@ def main():
             if grad_buf is None:
                 # first bounded-staleness round: gradients only, no update
                 # (keeps the optimizer/schedule step count equal to sync)
-                (loss, metrics), grad_buf = ts.grad_fn(params, batch)
+                if bucketed:
+                    (loss, metrics), grad_buf, ef = \
+                        ts.grad_fn(params, batch, ef)
+                else:
+                    (loss, metrics), grad_buf = ts.grad_fn(params, batch)
+            elif bucketed:
+                params, opt_state, grad_buf, ef, loss, metrics = \
+                    ts.async_step_fn(params, opt_state, grad_buf, ef, batch)
             else:
                 params, opt_state, grad_buf, loss, metrics = \
                     ts.async_step_fn(params, opt_state, grad_buf, batch)
+        elif bucketed:
+            params, opt_state, ef, loss, metrics = \
+                ts.step_fn(params, opt_state, ef, batch)
         else:
             params, opt_state, loss, metrics = ts.step_fn(params, opt_state,
                                                           batch)

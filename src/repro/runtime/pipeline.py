@@ -37,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.schedule import scan_ticks
 from repro.distributed.compat import pcast_varying
+from repro.kernels.quant_transfer import dequantize_op, quantize_op
 from repro.distributed.mesh import MeshPlan
 from repro.models.blocks import apply_period, shard_config
 from repro.models.config import ModelConfig
@@ -139,13 +140,52 @@ def _stage_fn(periods_local, period_mask_local, x, positions, cfg_local,
 
 
 # ---------------------------------------------------------------------------
+# Compressed boundary transfer (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def compressed_ppermute(x, perm, fmt: str, tile: int):
+    """quantize → ppermute → dequantize over the ``stage`` axis.
+
+    The wire moves the packed int8/fp8 payload + per-tile scales instead of
+    full-precision activations ((8 + 32/tile)/32 of the fp32 bytes).  The
+    custom VJP quantizes the backward cotangent the same way and routes it
+    through the *inverse* permutation — exactly the transpose of ppermute,
+    so the reverse pipeline's boundary transfers are compressed too.  The
+    carried value stays full precision (quantization error enters once per
+    hop, not cumulatively), and all-zero tiles (pipeline warm-up bubbles)
+    round-trip exactly.
+    """
+    packed = quantize_op(x, fmt=fmt, tile=tile)
+    arrived = {k: lax.ppermute(v, "stage", perm) for k, v in packed.items()}
+    return dequantize_op(arrived, x.shape, x.dtype, tile=tile)
+
+
+def _cperm_fwd(x, perm, fmt, tile):
+    # no residuals: the cotangent has the primal's shape/dtype already
+    return compressed_ppermute(x, perm, fmt, tile), None
+
+
+def _cperm_bwd(perm, fmt, tile, _res, g):
+    inv = tuple((d, s) for s, d in perm)
+    packed = quantize_op(g, fmt=fmt, tile=tile)
+    arrived = {k: lax.ppermute(v, "stage", inv) for k, v in packed.items()}
+    return (dequantize_op(arrived, g.shape, g.dtype, tile=tile),)
+
+
+compressed_ppermute.defvjp(_cperm_fwd, _cperm_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Circular pipeline
 # ---------------------------------------------------------------------------
 
 
 def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
                    cfg_local: ModelConfig, ctx: ParallelCtx, n_stages: int,
-                   remat: bool = True, double_buffer: bool = False):
+                   remat: bool = True, double_buffer: bool = False,
+                   compress: str = "none", quant_tile: int = 256):
     """Run M micro-batches through the stage pipeline.
 
     x_micro: (M, mb, S, D) — identical on every stage (batch-sharded over
@@ -179,8 +219,14 @@ def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
     if P_st == 1:
         double_buffer = False
     stage = lax.axis_index("stage")
-    perm = [(i, (i + 1) % P_st) for i in range(P_st)]
+    perm = tuple((i, (i + 1) % P_st) for i in range(P_st))
     hop = 2 if double_buffer else 1
+    if compress != "none" and P_st > 1:
+        def boundary(x):
+            return compressed_ppermute(x, perm, compress, quant_tile)
+    else:
+        def boundary(x):
+            return lax.ppermute(x, "stage", perm)
 
     state0, outs0, aux0 = vary_all(
         (jnp.zeros_like(x_micro[0]), jnp.zeros_like(x_micro),
@@ -214,7 +260,7 @@ def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
             send, recv, outs, aux = carry
             # transfer of the PREVIOUS tick's output: independent of this
             # tick's compute, so the two streams overlap
-            arrived = lax.ppermute(send, "stage", perm)
+            arrived = boundary(send)
             out, outs, aux = compute(recv, outs, aux, t)
             return vary_all((out, arrived, outs, aux)), None
 
@@ -223,7 +269,7 @@ def pipeline_apply(periods_local, period_mask_local, x_micro, positions,
         def tick(carry, t):
             state, outs, aux = carry
             out, outs, aux = compute(state, outs, aux, t)
-            nxt = lax.ppermute(out, "stage", perm)
+            nxt = boundary(out)
             return vary_all((nxt, outs, aux)), None
 
         carry0 = (state0, outs0, aux0)
@@ -278,6 +324,27 @@ class TrainSpec:
     # Per-micro-batch math is unchanged — gradients stay bit-identical to
     # the synchronous pipeline.
     double_buffer: bool = False
+    # Compressed transfers (DESIGN.md §10): "none" | "int8" | "fp8".  When
+    # set, stage-boundary ppermutes move quantized payloads (per-tile
+    # scales, ``quant_tile`` elements per scale) in both directions, and
+    # the gradient AllReduce switches to the bucketed/compressed path in
+    # runtime.train (size-bounded buckets, per-bucket psum, quantized
+    # local contributions with an error-feedback accumulator).
+    compress: str = "none"
+    quant_tile: int = 256
+    # Gradient-bucket size bound in MiB; None = one bucket per free-axes
+    # group.  Setting it (without compress) still enables DDP-style
+    # bucketed psums so partial syncs overlap the backward.
+    bucket_mb: float | None = None
+    # Carry the per-bucket quantization residual across steps so the
+    # transmitted gradient stream is unbiased (bias -> 0 as 1/T).
+    error_feedback: bool = True
+
+    @property
+    def bucketed(self) -> bool:
+        """True when the gradient path uses explicit per-bucket psums (and
+        the step functions thread an error-feedback pytree)."""
+        return self.compress != "none" or self.bucket_mb is not None
 
     @property
     def cfg_local(self) -> ModelConfig:
@@ -371,7 +438,9 @@ def spmd_loss_fn(spec: TrainSpec):
         outs, aux = pipeline_apply(params["periods"], mask_local,
                                    x_micro, positions, cfg_local, ctx,
                                    plan.stage, spec.remat,
-                                   double_buffer=spec.double_buffer)
+                                   double_buffer=spec.double_buffer,
+                                   compress=spec.compress,
+                                   quant_tile=spec.quant_tile)
 
         # ---- redistribute last-stage outputs across stages ----------------
         # Every stage holds an `outs` buffer but only the last stage's is

@@ -136,6 +136,9 @@ class PipelineSession:
 
         self.ts = None
         self.step_cache_hits = 0
+        # error-feedback residuals for the compressed gradient stream
+        # (spec.bucketed); zeroed by _install on every (re-)lowering
+        self._ef = None
         lowered = lower_plan(plan, cfg, self.model_axis)
         if check:
             check_against_simulator(lowered, plan, profile)
@@ -184,6 +187,10 @@ class PipelineSession:
             return
         self.ts = _assemble_train_step(self.cfg, self.production_mesh, spec,
                                        self.optimizer, zero_opt=False)
+        # a re-lowered step re-buckets the gradient tree, so the carried
+        # quantization residuals no longer line up — drop them (one round
+        # of error feedback is lost, exactly like the staleness flush)
+        self._ef = self.ts.init_ef() if self.ts.spec.bucketed else None
 
     def init(self, key):
         self.params, self.opt_state = init_train_state(key, self.ts,
@@ -211,6 +218,7 @@ class PipelineSession:
         # ts.shard_batch re-packs for the current plan's (possibly
         # heterogeneous, possibly just-replayed) per-shard allocation
         batch = self.ts.shard_batch(batch_np)
+        bucketed = self.ts.spec.bucketed
         if self.ts.spec.staleness >= 1:
             # bounded-stale round: compute this round's gradients, apply
             # the previous round's (the buffer) — the gradient AllReduce
@@ -218,12 +226,25 @@ class PipelineSession:
             # round (no buffer yet) computes gradients only, keeping the
             # optimizer/schedule step count equal to the sync run.
             if self._grad_buf is None:
-                (loss, metrics), self._grad_buf = self.ts.grad_fn(
-                    self.params, batch)
+                if bucketed:
+                    (loss, metrics), self._grad_buf, self._ef = \
+                        self.ts.grad_fn(self.params, batch, self._ef)
+                else:
+                    (loss, metrics), self._grad_buf = self.ts.grad_fn(
+                        self.params, batch)
+            elif bucketed:
+                (self.params, self.opt_state, self._grad_buf, self._ef,
+                 loss, metrics) = self.ts.async_step_fn(
+                    self.params, self.opt_state, self._grad_buf, self._ef,
+                    batch)
             else:
                 (self.params, self.opt_state, self._grad_buf, loss,
                  metrics) = self.ts.async_step_fn(
                     self.params, self.opt_state, self._grad_buf, batch)
+        elif bucketed:
+            (self.params, self.opt_state, self._ef, loss,
+             metrics) = self.ts.step_fn(self.params, self.opt_state,
+                                        self._ef, batch)
         else:
             self.params, self.opt_state, loss, metrics = self.ts.step_fn(
                 self.params, self.opt_state, batch)

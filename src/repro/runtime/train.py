@@ -23,6 +23,7 @@ from repro.distributed.compat import shard_map, sharded_init
 from repro.distributed.mesh import MeshPlan, mesh_plan, pick_stage_count, refine_mesh
 from repro.distributed.sharding import (Layout, TRAIN_LAYOUT, named,
                                         param_pspecs)
+from repro.kernels.quant_transfer import roundtrip, roundtrip_ef
 from repro.models.config import ModelConfig
 from repro.models.model import init_model
 from repro.optim import AdamW
@@ -120,6 +121,21 @@ class TrainStep:
     # the buffered gradients synchronously (end of training / before a
     # replay migration — a failure forces a staleness barrier).
     flush_fn: object = None
+    # Bucketed/compressed gradient path (spec.bucketed, DESIGN.md §10): the
+    # step functions gain an error-feedback pytree argument and return its
+    # successor —
+    #   grad_fn(params, batch, ef) -> ((loss, metrics), grads, ef')
+    #   step_fn(params, opt_state, ef, batch)
+    #       -> (params', opt_state', ef', loss, metrics)
+    #   async_step_fn(params, opt_state, grad_buf, ef, batch)
+    #       -> (params', opt_state', grads, ef', loss, metrics)
+    # ``init_ef()`` materializes the zero residual state ({} when error
+    # feedback is off — the arity stays uniform); reset it whenever the
+    # step is re-lowered (membership changes re-bucket the tree).
+    init_ef: object = None
+    # Static bucket partition [(free_axes, leaf_indices, local_sizes), ...]
+    # for introspection (benchmarks / examples timeline).
+    buckets: tuple = ()
 
     def shard_batch(self, batch_np: dict) -> dict:
         """Place a host batch on the mesh, first packing it for the spec's
@@ -184,7 +200,10 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      hoist_varying: bool = True, zero_opt: bool = False,
                      stage_periods=None, shard_alloc=None,
                      staleness: int = 0,
-                     double_buffer: bool | None = None) -> TrainStep:
+                     double_buffer: bool | None = None,
+                     compress: str = "none", quant_tile: int = 256,
+                     bucket_mb: float | None = None,
+                     error_feedback: bool = True) -> TrainStep:
     n_heads = cfg.attn.n_heads if cfg.attn is not None else (
         cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else cfg.d_model)
     model_axis = production_mesh.shape["model"]
@@ -206,7 +225,10 @@ def build_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      stage_periods=stage_periods, shard_alloc=shard_alloc,
                      staleness=_check_staleness(staleness),
                      double_buffer=_default_double_buffer(double_buffer,
-                                                          staleness))
+                                                          staleness),
+                     compress=_check_compress(compress),
+                     quant_tile=int(quant_tile), bucket_mb=bucket_mb,
+                     error_feedback=bool(error_feedback))
     return _assemble_train_step(cfg, production_mesh, spec, optimizer,
                                 zero_opt)
 
@@ -218,6 +240,14 @@ def _check_staleness(staleness: int) -> int:
     return staleness
 
 
+def _check_compress(compress: str | None) -> str:
+    compress = "none" if compress is None else str(compress)
+    if compress not in ("none", "int8", "fp8"):
+        raise ValueError(f"compress must be 'none', 'int8' or 'fp8', "
+                         f"got {compress!r}")
+    return compress
+
+
 def _default_double_buffer(double_buffer: bool | None, staleness: int) -> bool:
     """The async runtime double-buffers by default; the sync runtime keeps
     the serialized sends (today's semantics) unless explicitly asked."""
@@ -227,7 +257,10 @@ def _default_double_buffer(double_buffer: bool | None, staleness: int) -> bool:
 def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
                             *, remat: bool = True, ce_chunk: int = 1024,
                             hoist_varying: bool = True, staleness: int = 0,
-                            double_buffer: bool | None = None) -> TrainSpec:
+                            double_buffer: bool | None = None,
+                            compress: str = "none", quant_tile: int = 256,
+                            bucket_mb: float | None = None,
+                            error_feedback: bool = True) -> TrainSpec:
     """Derive the static step configuration from a ``core.lowering``
     ``LoweredPlan`` (duck-typed: ``stage``/``n_micro``/``stage_periods``/
     ``global_batch``/``micro_alloc`` attributes), validating mesh
@@ -264,7 +297,10 @@ def train_spec_from_lowered(cfg: ModelConfig, production_mesh: Mesh, lowered,
                      stage_periods=stage_periods, shard_alloc=shard_alloc,
                      staleness=_check_staleness(staleness),
                      double_buffer=_default_double_buffer(double_buffer,
-                                                          staleness))
+                                                          staleness),
+                     compress=_check_compress(compress),
+                     quant_tile=int(quant_tile), bucket_mb=bucket_mb,
+                     error_feedback=bool(error_feedback))
 
 
 def build_train_step_from_lowered(cfg: ModelConfig, production_mesh: Mesh,
@@ -277,6 +313,166 @@ def build_train_step_from_lowered(cfg: ModelConfig, production_mesh: Mesh,
     spec = train_spec_from_lowered(cfg, production_mesh, lowered, **spec_kw)
     return _assemble_train_step(cfg, production_mesh, spec, optimizer,
                                 zero_opt)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed / compressed gradient AllReduce (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+MESH_AXES = ("pod", "data", "stage", "tp")
+
+
+def _leaf_axes(spec) -> set:
+    """Mesh axes appearing anywhere in a leaf's PartitionSpec."""
+    used = set()
+    for entry in spec:
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            if ax is not None:
+                used.add(ax)
+    return used
+
+
+def _free_axes(spec) -> tuple:
+    """Mesh axes a leaf's gradient must be psum'd over: every axis NOT
+    already sharding the leaf.  A leaf sharded over an axis holds distinct
+    shard values there (its gradient needs no reduction along it); a leaf
+    replicated over an axis is used by every device along it (each holds a
+    partial contribution).  This is exactly the reduction the shard_map
+    transpose inserts for the un-bucketed path (psum is elementwise —
+    reducing a concatenation equals concatenating the reductions), so
+    uncompressed bucketed gradients match the legacy path to float
+    reassociation (~1e-6 rel; XLA compiles a different reduction order)."""
+    used = _leaf_axes(spec)
+    return tuple(ax for ax in MESH_AXES if ax not in used)
+
+
+def _local_size(shape, spec, mesh: Mesh) -> int:
+    """Per-device element count of a leaf under its PartitionSpec."""
+    n = 1
+    for d, dim in enumerate(shape):
+        div = 1
+        if d < len(spec) and spec[d] is not None:
+            entry = spec[d]
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                div *= mesh.shape[ax]
+        n *= dim // div
+    return n
+
+
+def grad_buckets(abstract_params, pspecs, mesh: Mesh,
+                 bucket_mb: float | None):
+    """Static bucket partition of the gradient pytree.
+
+    Leaves are grouped by free-axes set (one psum serves a whole bucket)
+    and greedily packed into ``bucket_mb``-bounded buckets in tree-flatten
+    order.  Each bucket's psum depends only on its own leaves' cotangents,
+    so XLA's latency-hiding scheduler can launch early buckets' AllReduces
+    while later layers are still in backward (DDP-style partial syncs —
+    ``plan_dp(overlap=True)``'s pricing, now on the HPP gradient stream).
+
+    Returns ``[(free_axes, leaf_indices, local_sizes), ...]``; leaf indices
+    refer to ``jax.tree_util.tree_leaves`` order of the param tree.
+    """
+    leaves, _ = jax.tree_util.tree_flatten(abstract_params)
+    spec_leaves = jax.tree_util.tree_leaves(
+        jax.tree.map(lambda _, s: s, abstract_params, pspecs),
+        is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves), (len(leaves), len(spec_leaves))
+    cap = float("inf") if bucket_mb is None else float(bucket_mb) * (1 << 20)
+    groups: dict = {}
+    for i, (leaf, sp) in enumerate(zip(leaves, spec_leaves)):
+        groups.setdefault(_free_axes(sp), []).append(
+            (i, _local_size(leaf.shape, sp, mesh)))
+    buckets = []
+    for free, entries in sorted(groups.items()):
+        cur: list = []
+        cur_bytes = 0.0
+        for i, n in entries:
+            if cur and cur_bytes + n * 4 > cap:
+                buckets.append((free, tuple(j for j, _ in cur),
+                                tuple(m for _, m in cur)))
+                cur, cur_bytes = [], 0.0
+            cur.append((i, n))
+            cur_bytes += n * 4
+        if cur:
+            buckets.append((free, tuple(j for j, _ in cur),
+                            tuple(m for _, m in cur)))
+    return buckets
+
+
+def _ef_key(bi: int) -> str:
+    return f"bucket{bi}"
+
+
+def ef_specs_for(buckets):
+    """PartitionSpecs for the error-feedback pytree: one per-device flat
+    residual per bucket, stacked over every mesh axis on dim 0 (global
+    shape ``(n_devices, L_b)``, local ``(1, L_b)``)."""
+    return {_ef_key(bi): P(MESH_AXES, None) for bi in range(len(buckets))}
+
+
+def ef_zeros(buckets, mesh: Mesh, shardings):
+    """Materialize the zero error-feedback state on the mesh."""
+    n_dev = 1
+    for ax in MESH_AXES:
+        n_dev *= mesh.shape[ax]
+    out = {}
+    for bi, (_, _, sizes) in enumerate(buckets):
+        k = _ef_key(bi)
+        out[k] = jax.device_put(jnp.zeros((n_dev, sum(sizes)), jnp.float32),
+                                shardings[k])
+    return out
+
+
+def _bucketed_grad_fn(spec: TrainSpec, base_loss, buckets):
+    """Inside-shard_map gradient with explicit per-bucket psums.
+
+    ``jax.value_and_grad`` of the SPMD loss *inside* the shard_map body
+    yields each device's unreduced local contribution (boundary casts are
+    identity on this side of the shard_map boundary); every bucket is then
+    flattened, optionally quantized (with the error-feedback residual
+    carried across steps), and psum'd over its free axes.  The quantization
+    compresses exactly the bytes each device contributes to the AllReduce.
+    """
+    fmt, tile, ef_on = spec.compress, spec.quant_tile, spec.error_feedback
+    # Differentiating THROUGH the loss psum inside the body scales every
+    # cotangent by the psum's transpose (another psum of the unit seed =
+    # the device count over the reduced axes); undo it once here.  Device
+    # counts are powers of two on every supported mesh, so the division
+    # itself is exact.
+    plan = spec.plan
+    n_dev = plan.pod * plan.data * plan.stage * plan.tp
+
+    def fn(params, batch, ef):
+        (loss, metrics), grads = jax.value_and_grad(
+            base_loss, has_aux=True)(params, batch)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        new_leaves = list(leaves)
+        new_ef = dict(ef)
+        for bi, (free, idxs, _sizes) in enumerate(buckets):
+            flat = jnp.concatenate(
+                [leaves[i].astype(jnp.float32).reshape(-1) for i in idxs])
+            flat = flat * jnp.float32(1.0 / n_dev)
+            if fmt != "none":
+                if ef_on:
+                    k = _ef_key(bi)
+                    flat, res = roundtrip_ef(flat, ef[k][0], fmt=fmt,
+                                             tile=tile)
+                    new_ef[k] = res[None]
+                else:
+                    flat = roundtrip(flat, fmt=fmt, tile=tile)
+            if free:
+                flat = jax.lax.psum(flat, free)
+            off = 0
+            for i in idxs:
+                n = new_leaves[i].size
+                new_leaves[i] = flat[off:off + n].reshape(
+                    leaves[i].shape).astype(leaves[i].dtype)
+                off += n
+        return loss, metrics, jax.tree_util.tree_unflatten(
+            treedef, new_leaves), new_ef
+
+    return fn
 
 
 def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
@@ -297,13 +493,24 @@ def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
     bspecs = batch_pspecs(cfg)
 
     spmd = spmd_loss_fn(spec)
+    metrics_sp = {"ce": P(), "aux": P(), "mtp": P(), "tokens": P()}
     sharded_loss = shard_map(spmd, mesh=mesh,
                              in_specs=(pspecs, bspecs),
-                             out_specs=(P(), {"ce": P(), "aux": P(),
-                                              "mtp": P(), "tokens": P()}))
+                             out_specs=(P(), metrics_sp))
 
     def loss_fn(params, batch):
         return sharded_loss(params, batch)
+
+    param_shardings = named(mesh, pspecs)
+    batch_sh = named(mesh, bspecs)
+    jit_loss = jax.jit(loss_fn, in_shardings=(param_shardings, batch_sh))
+    opt_sh = _opt_shardings(optimizer, abstract, param_shardings,
+                            zero_sharding=zero_opt)
+
+    if spec.bucketed:
+        return _assemble_bucketed(spec, mesh, optimizer, abstract, pspecs,
+                                  bspecs, spmd, metrics_sp, param_shardings,
+                                  batch_sh, opt_sh, jit_loss)
 
     def grad_fn(params, batch):
         return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
@@ -313,12 +520,7 @@ def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, loss, metrics
 
-    param_shardings = named(mesh, pspecs)
-    batch_sh = named(mesh, bspecs)
-    jit_loss = jax.jit(loss_fn, in_shardings=(param_shardings, batch_sh))
     jit_grad = jax.jit(grad_fn, in_shardings=(param_shardings, batch_sh))
-    opt_sh = _opt_shardings(optimizer, abstract, param_shardings,
-                            zero_sharding=zero_opt)
     jit_step = jax.jit(step_fn, in_shardings=(
         param_shardings, opt_sh, batch_sh),
         out_shardings=(param_shardings, opt_sh, None, None))
@@ -352,6 +554,71 @@ def _assemble_train_step(cfg: ModelConfig, production_mesh: Mesh,
                      batch_specs=bspecs, step_fn=jit_step, loss_fn=jit_loss,
                      grad_fn=jit_grad, async_step_fn=jit_async,
                      flush_fn=jit_flush)
+
+
+def _assemble_bucketed(spec: TrainSpec, mesh: Mesh, optimizer, abstract,
+                       pspecs, bspecs, spmd, metrics_sp, param_shardings,
+                       batch_sh, opt_sh, jit_loss) -> TrainStep:
+    """Step assembly for the bucketed/compressed gradient path.
+
+    The gradient is taken INSIDE the shard_map body and reduced by explicit
+    per-bucket psums over each leaf's free axes — semantically the same
+    reduction the legacy outside-grad transpose inserts, but addressable:
+    each bucket is a separate, data-independent AllReduce that XLA can
+    launch as soon as its leaves' backward completes, and the compressed
+    variant quantizes exactly the per-device contribution that crosses the
+    wire (error-feedback residual carried in the ``ef`` pytree).
+    """
+    buckets = tuple(grad_buckets(abstract, pspecs, mesh, spec.bucket_mb))
+    use_ef = spec.compress != "none" and spec.error_feedback
+    ef_sp = ef_specs_for(buckets) if use_ef else {}
+    ef_sh = named(mesh, ef_sp)
+
+    sharded_grad = shard_map(_bucketed_grad_fn(spec, spmd, buckets),
+                             mesh=mesh,
+                             in_specs=(pspecs, bspecs, ef_sp),
+                             out_specs=(P(), metrics_sp, pspecs, ef_sp))
+
+    def grad_fn(params, batch, ef):
+        loss, metrics, grads, ef = sharded_grad(params, batch, ef)
+        return (loss, metrics), grads, ef
+
+    def step_fn(params, opt_state, ef, batch):
+        (loss, metrics), grads, ef = grad_fn(params, batch, ef)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, ef, loss, metrics
+
+    jit_grad = jax.jit(grad_fn, in_shardings=(param_shardings, batch_sh,
+                                              ef_sh))
+    jit_step = jax.jit(step_fn, in_shardings=(
+        param_shardings, opt_sh, ef_sh, batch_sh),
+        out_shardings=(param_shardings, opt_sh, ef_sh, None, None))
+
+    jit_async = jit_flush = None
+    if spec.staleness >= 1:
+        def async_step_fn(params, opt_state, grad_buf, ef, batch):
+            (loss, metrics), grads, ef = grad_fn(params, batch, ef)
+            new_params, new_opt = optimizer.update(grad_buf, opt_state, params)
+            return new_params, new_opt, grads, ef, loss, metrics
+
+        def flush_fn(params, opt_state, grad_buf):
+            return optimizer.update(grad_buf, opt_state, params)
+
+        jit_async = jax.jit(async_step_fn, in_shardings=(
+            param_shardings, opt_sh, param_shardings, ef_sh, batch_sh),
+            out_shardings=(param_shardings, opt_sh, param_shardings, ef_sh,
+                           None, None))
+        jit_flush = jax.jit(flush_fn, in_shardings=(
+            param_shardings, opt_sh, param_shardings),
+            out_shardings=(param_shardings, opt_sh))
+
+    def init_ef():
+        return ef_zeros(buckets, mesh, ef_sh) if use_ef else {}
+
+    return TrainStep(spec=spec, mesh=mesh, param_specs=pspecs,
+                     batch_specs=bspecs, step_fn=jit_step, loss_fn=jit_loss,
+                     grad_fn=jit_grad, async_step_fn=jit_async,
+                     flush_fn=jit_flush, init_ef=init_ef, buckets=buckets)
 
 
 def _zero_moment_shardings(abstract_params, param_shardings):

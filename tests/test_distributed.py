@@ -68,6 +68,17 @@ def test_train_async_equivalence():
 
 
 @pytest.mark.slow
+def test_train_compressed_transfers():
+    """Compressed boundary transfers + bucketed gradient AllReduce
+    (DESIGN.md §10): bucketed-uncompressed gradients match the legacy path
+    to float reassociation, int8-compressed gradients land within the
+    pinned tolerance of the uncompressed run on the same params/batch,
+    error feedback beats the no-feedback quantizer in mean-gradient bias,
+    and a compressed optimizer step reduces the loss."""
+    _run(["--compress", "phi3-mini-3.8b"])
+
+
+@pytest.mark.slow
 def test_replay_session():
     """Live pipeline replay (runtime.session): kill a rank mid-training,
     recover through lightweight replay + param migration, keep training —

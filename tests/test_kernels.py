@@ -242,3 +242,36 @@ def test_mamba_scan_matches_model_layer():
     y_kernel = mamba_scan(dt, b, c, x, a, chunk=S, interpret=True)
     np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
                                atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantized transfers (tile-exact parity; full suite in test_quant_transfer)
+# ---------------------------------------------------------------------------
+
+
+@given(rows=st.integers(1, 24), tile_pow=st.integers(4, 8),
+       fmt=st.sampled_from(["int8", "fp8"]),
+       scale=st.sampled_from([1e-3, 1.0, 1e3]))
+@settings(max_examples=16, deadline=None)
+def test_quantize_tiles_property(rows, tile_pow, fmt, scale):
+    """Kernel(interpret) is bitwise-identical to the jnp oracle for any
+    row count / tile size / dynamic range, and the round trip stays within
+    the per-format bound."""
+    from repro.kernels.quant_transfer import (dequantize_tiles,
+                                              quantize_tiles)
+    from repro.kernels.ref import (naive_dequantize_tiles,
+                                   naive_quantize_tiles)
+    T = 2 ** tile_pow
+    x = rand(jax.random.PRNGKey(rows * T), (rows, T), scale=scale)
+    qk, sk = quantize_tiles(x, fmt=fmt, interpret=True)
+    qr, sr = naive_quantize_tiles(x, fmt=fmt)
+    assert np.array_equal(np.asarray(qk, np.float32),
+                          np.asarray(qr, np.float32))
+    assert np.array_equal(np.asarray(sk), np.asarray(sr))
+    dk = dequantize_tiles(qk, sk, interpret=True)
+    assert np.array_equal(np.asarray(dk),
+                          np.asarray(naive_dequantize_tiles(qr, sr)))
+    tol = 0.02 if fmt == "int8" else 0.06
+    rel = (np.linalg.norm(np.asarray(dk) - np.asarray(x))
+           / max(np.linalg.norm(np.asarray(x)), 1e-30))
+    assert rel < tol, (fmt, rel)

@@ -1,0 +1,145 @@
+"""Quantized-transfer wire format: tile-exact kernel-vs-reference parity,
+round-trip error bounds, error-feedback telescoping.  No hypothesis
+dependency — these must run on the bare container (tier-1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quant_transfer import (QDIV, QUANT_FORMATS, dequantize_op,
+                                          dequantize_tiles, pack_tiles,
+                                          quant_dtype, quantize_op,
+                                          quantize_tiles, roundtrip,
+                                          roundtrip_ef, unpack_tiles,
+                                          wire_bits)
+from repro.kernels.ref import (naive_dequantize_tiles, naive_quantize_tiles,
+                               quant_scale)
+
+# single-shot relative round-trip error on N(0, 3) data; int8 rounds to
+# ~1/128 of the tile amax, fp8 e4m3 carries 3 mantissa bits (~2^-4 rel).
+ROUNDTRIP_TOL = {"int8": 0.02, "fp8": 0.06}
+
+
+def rand(key, shape, scale=3.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference: bitwise
+# ---------------------------------------------------------------------------
+
+PARITY_CASES = [
+    # (R, tile, block_rows)
+    (16, 64, 8),
+    (19, 64, 8),    # R not divisible by block_rows
+    (8, 256, 8),
+    (3, 32, 8),     # fewer rows than block
+]
+
+
+@pytest.mark.parametrize("fmt", QUANT_FORMATS)
+@pytest.mark.parametrize("case", PARITY_CASES)
+def test_quantize_kernel_bitwise_parity(fmt, case):
+    R, T, br = case
+    x = rand(jax.random.PRNGKey(R * T), (R, T))
+    qk, sk = quantize_tiles(x, fmt=fmt, block_rows=br, interpret=True)
+    qr, sr = naive_quantize_tiles(x, fmt=fmt)
+    assert qk.dtype == quant_dtype(fmt) == qr.dtype
+    # int8 compares exactly; fp8 compared via f32 view (same bit pattern)
+    assert np.array_equal(np.asarray(qk, np.float32),
+                          np.asarray(qr, np.float32))
+    assert np.array_equal(np.asarray(sk), np.asarray(sr))
+    dk = dequantize_tiles(qk, sk, block_rows=br, interpret=True)
+    dr = naive_dequantize_tiles(qr, sr)
+    assert np.array_equal(np.asarray(dk), np.asarray(dr))
+
+
+def test_scale_is_power_of_two_division():
+    """The scale divisor must be a power of two so eager/jit/kernel agree
+    bitwise (XLA rewrites constant divisions into reciprocal multiplies)."""
+    for fmt, div in QDIV.items():
+        assert div == 2.0 ** round(np.log2(div)), (fmt, div)
+        amax = jnp.asarray([[3.7], [0.0]], jnp.float32)
+        s = quant_scale(amax, fmt)
+        # division by 2^k is exact: result is the f32 amax scaled in exponent
+        assert float(s[0, 0]) == float(np.float32(3.7)) / div
+        assert float(s[1, 0]) == 1.0  # zero tile -> neutral scale
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack and the high-level ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5, 7, 33), (256,), (4, 64), (1, 1)])
+def test_pack_unpack_roundtrip_exact(shape):
+    x = rand(jax.random.PRNGKey(1), shape).astype(jnp.float32)
+    x2d = pack_tiles(x, 64)
+    assert x2d.shape[1] == 64 and x2d.shape[0] * 64 >= x.size
+    back = unpack_tiles(x2d, x.shape, x.dtype)
+    assert np.array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("fmt", QUANT_FORMATS)
+def test_quantize_op_roundtrip_error_bound(fmt):
+    x = rand(jax.random.PRNGKey(2), (5, 7, 33))
+    packed = quantize_op(x, fmt=fmt, tile=64)
+    assert packed["q"].dtype == quant_dtype(fmt)
+    assert packed["scale"].dtype == jnp.float32
+    xh = dequantize_op(packed, x.shape, x.dtype, tile=64)
+    rel = float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x))
+    assert rel < ROUNDTRIP_TOL[fmt], (fmt, rel)
+
+
+def test_quantize_op_zero_input_safe():
+    z = jnp.zeros((3, 5), jnp.float32)
+    for fmt in QUANT_FORMATS:
+        zh = roundtrip(z, fmt=fmt, tile=16)
+        assert np.array_equal(np.asarray(zh), np.zeros((3, 5), np.float32))
+
+
+def test_wire_bits_ratio():
+    # int8 + one f32 scale per 256-tile: (8 + 32/256) / 32 of fp32 bytes
+    assert wire_bits("int8", 256) == pytest.approx(8.125)
+    assert wire_bits("int8", 256) / 32.0 < 0.26
+
+
+def test_unknown_format_raises():
+    with pytest.raises(ValueError):
+        quant_dtype("int4")
+    with pytest.raises(ValueError):
+        naive_quantize_tiles(jnp.ones((2, 4)), fmt="int4")
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_telescopes():
+    """Mean of transmitted gradients converges to the true gradient: the
+    running bias after T steps is one residual / T."""
+    g = rand(jax.random.PRNGKey(3), (257,), scale=1.0)
+    err = jnp.zeros_like(g)
+    tot = jnp.zeros_like(g)
+    T = 8
+    for _ in range(T):
+        gh, err = roundtrip_ef(g, err, fmt="int8", tile=64)
+        tot = tot + gh
+    bias = float(jnp.linalg.norm(tot / T - g) / jnp.linalg.norm(g))
+    one_shot = float(jnp.linalg.norm(roundtrip(g, fmt="int8", tile=64) - g)
+                     / jnp.linalg.norm(g))
+    # telescoping: bias = |e_T| / T <= one_shot / T (up to residual growth)
+    assert bias < one_shot / 4, (bias, one_shot)
+
+
+def test_error_feedback_exact_sum_identity():
+    """sum_t x_hat_t + e_T == sum_t x_t + e_0 holds to fp accuracy."""
+    x = rand(jax.random.PRNGKey(4), (100,), scale=1.0)
+    err = jnp.zeros_like(x)
+    tot = jnp.zeros_like(x)
+    T = 5
+    for _ in range(T):
+        xh, err = roundtrip_ef(x, err, fmt="int8", tile=32)
+        tot = tot + xh
+    np.testing.assert_allclose(np.asarray(tot + err), np.asarray(x * T),
+                               atol=1e-4, rtol=1e-5)

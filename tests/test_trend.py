@@ -118,9 +118,19 @@ def test_churn_benchmark_structure(monkeypatch):
     assert summary["all_within_replay_bound"]
     assert all(r["recovery_s"] <= r["replay_bound_s"] for r in records)
     assert summary["ftpipehd_stall_s"] > summary["asteroid_stall_s"]
-    # deterministic under the fixed seed
+    # deterministic under the fixed seed: every plan-derived quantity is
+    # bit-exact across runs
     _, records2, summary2 = mod.run_churn_structured(quick=True)
     assert [r["kind"] for r in records2] == [r["kind"] for r in records]
-    # (rel tolerance: the stalls include measured re-plan wall time)
+    assert [(r.get("accepted"), r.get("rank"), r["tput_after"])
+            for r in records2] == \
+           [(r.get("accepted"), r.get("rank"), r["tput_after"])
+            for r in records]
+    assert summary2["base_tput_samples_s"] == summary["base_tput_samples_s"]
+    # the headline throughput folds measured re-plan wall time into the
+    # simulated clock, so it is only approximately reproducible: in a
+    # long-lived full-suite process a single gen-2 gc pass over the
+    # accumulated heap can land inside one of the two runs and shift it
+    # past any per-mille tolerance — bound it loosely
     assert summary2["churn_tput_samples_s"] == pytest.approx(
-        summary["churn_tput_samples_s"], rel=1e-3)
+        summary["churn_tput_samples_s"], rel=2e-2)
