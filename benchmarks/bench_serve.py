@@ -1,0 +1,222 @@
+"""Serving benchmark: planner-driven heterogeneous decode vs the uniform
+baseline (BENCH_serve.json).
+
+Two parts:
+
+* ``plan`` records — predicted p99 comparison on the heterogeneous smoke
+  cluster (2 Jetson NX + 2 TX2 shards, §10 link model): ``plan_serve``'s
+  greedy unbalanced slot split vs ``plan_serve_uniform`` (legacy
+  power-of-two stage probe + equal per-shard slots) at the same offered
+  load (75% of the uniform config's capacity).  The planner must win or
+  tie on predicted p99 — asserted here and again in CI.
+
+* ``measured`` records — a real continuous-batching run on the host:
+  the engine step is timed, a measured ``Profile`` is built from it, the
+  planner picks the slot count, and an open-loop Poisson token stream is
+  served through ``ContinuousBatcher``.  Records measured tokens/s +
+  p50/p95/p99 against the plan's predictions (``gap_ratio``), plus an
+  under-provisioned baseline arm (half the planned slots) at the same
+  offered load.
+
+Archs cover one attention family (phi3-mini) and one RWKV family
+(rwkv6) — decode pricing must hold for both KV-cache and recurrent-state
+models.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import row
+
+PLAN_ARCHS = ("phi3-mini-3.8b", "rwkv6-7b")
+UTILIZATION = 0.75            # offered load as a fraction of uniform capacity
+
+
+def _uniform_capacity(prof, *, dp_shards: int, model_axis: int,
+                      cache_len: int, seq_len: int) -> float:
+    """Max decode throughput (tokens/s) of the legacy uniform config
+    (stage=1, equal slots) — the load both arms are priced against."""
+    from repro.core.planner import (_price_serve_alloc, _serve_cuts,
+                                    _shard_slot_cap)
+
+    stage, tp = 1, model_axis
+    cuts = _serve_cuts(prof.table.L, stage)
+    caps = [_shard_slot_cap(prof, g, stage=stage, tp=tp, cuts=cuts,
+                            cache_len=cache_len, seq_len=seq_len,
+                            mem_fraction=0.9)
+            for g in range(dp_shards)]
+    best = 0.0
+    for y in range(1, max(min(caps), 0) + 1):
+        st, _, _ = _price_serve_alloc(prof, [y] * dp_shards, stage=stage,
+                                      tp=tp, cuts=cuts, seq_len=seq_len,
+                                      arrival_rate=0.0, compress=None)
+        if st > 0:
+            best = max(best, dp_shards * y / st)
+    return best
+
+
+def _plan_records(quick: bool) -> tuple[list[str], list[dict]]:
+    from repro.configs import get_smoke_config
+    from repro.core.hardware import Cluster, JETSON_NX, JETSON_TX2, MBPS_100
+    from repro.core.planner import plan_serve, plan_serve_uniform
+    from repro.core.profiler import LayerTable, Profile
+    from repro.runtime.serve import serve_head_count
+
+    lines, records = [], []
+    seq = 128 if quick else 256
+    cluster = Cluster((JETSON_NX,) * 2 + (JETSON_TX2,) * 2,
+                      bandwidth=MBPS_100)
+    for arch in PLAN_ARCHS:
+        cfg = get_smoke_config(arch)
+        table = LayerTable.from_model_config(cfg, seq_len=seq)
+        prof = Profile.analytic(table, cluster, max_batch=32)
+        kw = dict(dp_shards=2, model_axis=2, n_heads=serve_head_count(cfg),
+                  cache_len=seq, seq_len=seq, arch=arch)
+        lam = UTILIZATION * _uniform_capacity(prof, dp_shards=2, model_axis=2,
+                                              cache_len=seq, seq_len=seq)
+        uni = plan_serve_uniform(prof, lam, **kw)
+        plan = plan_serve(prof, lam, **kw)
+        if plan.predicted_p99 > uni.predicted_p99 * (1 + 1e-9):
+            raise AssertionError(
+                f"{arch}: planner p99 {plan.predicted_p99:.3e} worse than "
+                f"uniform {uni.predicted_p99:.3e} at load {lam:.0f} tok/s")
+        gain = uni.predicted_p99 / plan.predicted_p99
+        records.append({
+            "kind": "plan", "arch": arch, "env": "NXx2+TX2x2@100Mbps",
+            "arrival_tok_s": lam,
+            "uniform_alloc": list(uni.shard_alloc),
+            "planner_alloc": list(plan.shard_alloc),
+            "uniform_stage": uni.stage, "planner_stage": plan.stage,
+            "uniform_p99_s": uni.predicted_p99,
+            "planner_p99_s": plan.predicted_p99,
+            "uniform_tok_s": uni.throughput, "planner_tok_s": plan.throughput,
+            "p99_gain": gain, "plan_time_s": plan.plan_time,
+        })
+        lines.append(row(f"serve_plan/{arch}", plan.predicted_p99,
+                         uniform_p99_us=f"{uni.predicted_p99 * 1e6:.1f}",
+                         alloc="/".join(map(str, plan.shard_alloc)),
+                         p99_gain=f"{gain:.2f}x",
+                         load_tok_s=f"{lam:.0f}"))
+    return lines, records
+
+
+def _measure_step(engine, batch: int, reps: int) -> float:
+    """Median wall time of one full-batch engine step (post-warmup)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    tok = jnp.zeros(batch, jnp.int32)
+    pos = jnp.zeros(batch, jnp.int32)
+    rst = jnp.ones(batch, bool)
+    jax.device_get(engine(tok, pos, rst))       # compile
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        # device_get, not block_until_ready: the batcher's timed window
+        # fetches the logits to host, so the profile must price that too
+        jax.device_get(engine(tok, pos, rst))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _measured_profile(cfg, step_s: float, *, batch: int, seq_len: int):
+    """Single-host Profile whose forward slices reproduce the measured
+    engine step: the padded SPMD engine computes every row each step, so
+    the time-vs-batch curve is flat at ``step_s``."""
+    from repro.core.hardware import Cluster, DeviceProfile
+    from repro.core.profiler import LayerTable, Profile
+
+    table = LayerTable.from_model_config(cfg, seq_len=seq_len)
+    host = DeviceProfile("host", mem_bytes=64e9, flops=1e12)
+    L = table.L
+    tf = np.zeros((1, batch + 1, L + 1))
+    for b in range(batch + 1):
+        tf[0, b] = step_s * seq_len * np.arange(L + 1) / L
+    return Profile(table, Cluster((host,)), batch, tf, np.zeros_like(tf),
+                   source="measured-serve")
+
+
+def _run_batcher(engine, *, slots: int, batch: int, cache_len: int,
+                 rate_tok_s: float, n_requests: int, n_tokens: int):
+    """Serve an open-loop Poisson stream; returns (tok_s, p50, p95, p99)."""
+    from repro.runtime.continuous import ContinuousBatcher, poisson_requests
+
+    reqs = poisson_requests(rate_tok_s / n_tokens,
+                            horizon=n_requests * n_tokens / rate_tok_s,
+                            n_tokens=n_tokens, seed=0)
+    if not reqs:
+        raise AssertionError("empty arrival trace")
+    bat = ContinuousBatcher(engine, slots=list(range(slots)), batch=batch,
+                            cache_len=cache_len, seed=0)
+    done = bat.run(reqs)
+    lats = [l for c in done for l in c.token_latencies]
+    total = sum(len(c.tokens) for c in done)
+    span = max(c.finish for c in done) - min(c.arrival for c in done)
+    p50, p95, p99 = np.percentile(lats, [50, 95, 99])
+    return total / span, float(p50), float(p95), float(p99)
+
+
+def _measured_records(quick: bool) -> tuple[list[str], list[dict]]:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.planner import plan_serve
+    from repro.models.model import init_model
+    from repro.runtime.continuous import engine_from_decode_step
+    from repro.runtime.serve import serve_head_count
+
+    lines, records = [], []
+    batch = 4 if quick else 8
+    cache_len = 48
+    n_tokens = 8 if quick else 16
+    n_requests = 10 if quick else 24
+    for arch in PLAN_ARCHS:
+        cfg = get_smoke_config(arch).replace(prefix_len=0, mtp_depth=0)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        engine = engine_from_decode_step(params, cfg, batch=batch,
+                                         cache_len=cache_len)
+        step_s = _measure_step(engine, batch, reps=3 if quick else 6)
+        prof = _measured_profile(cfg, step_s, batch=batch, seq_len=cache_len)
+        lam = UTILIZATION * batch / step_s
+        plan = plan_serve(prof, lam, dp_shards=1, model_axis=1,
+                          n_heads=serve_head_count(cfg), cache_len=cache_len,
+                          seq_len=cache_len, arch=arch)
+        slots = plan.shard_alloc[0]
+        tok_s, p50, p95, p99 = _run_batcher(
+            engine, slots=slots, batch=batch, cache_len=cache_len,
+            rate_tok_s=lam, n_requests=n_requests, n_tokens=n_tokens)
+        base_slots = max(1, slots // 2)
+        b_tok_s, _, _, b_p99 = _run_batcher(
+            engine, slots=base_slots, batch=batch, cache_len=cache_len,
+            rate_tok_s=lam, n_requests=n_requests, n_tokens=n_tokens)
+        gap = p99 / plan.predicted_p99 if plan.predicted_p99 > 0 else 0.0
+        records.append({
+            "kind": "measured", "arch": arch, "slots": slots,
+            "baseline_slots": base_slots, "arrival_tok_s": lam,
+            "step_time_s": step_s, "tok_s": tok_s,
+            "measured_p50_s": p50, "measured_p95_s": p95,
+            "measured_p99_s": p99,
+            "predicted_p50_s": plan.predicted_p50,
+            "predicted_p99_s": plan.predicted_p99,
+            "baseline_tok_s": b_tok_s, "baseline_p99_s": b_p99,
+            "gap_ratio": gap,
+        })
+        lines.append(row(f"serve_measured/{arch}", p99,
+                         tok_s=f"{tok_s:.1f}", slots=slots,
+                         predicted_p99_us=f"{plan.predicted_p99 * 1e6:.1f}",
+                         gap=f"{gap:.2f}x",
+                         baseline_p99_us=f"{b_p99 * 1e6:.1f}"))
+    return lines, records
+
+
+def run_structured(quick: bool = False) -> tuple[list[str], list[dict]]:
+    plan_lines, plan_recs = _plan_records(quick)
+    meas_lines, meas_recs = _measured_records(quick)
+    return plan_lines + meas_lines, plan_recs + meas_recs
+
+
+def run() -> list[str]:
+    return run_structured(False)[0]

@@ -11,9 +11,12 @@ lightweight vs heavy; churn: per-membership-event recovery latency +
 throughput-under-churn, merged into the same document under the ``churn`` /
 ``churn_summary`` keys) and the throughput suite (table4) writes
 ``BENCH_throughput.json`` (Table 4 + Fig. 15a variants + the measured
-runtime ablation + the profile_gap predicted-vs-measured records) so the
-perf trajectory is recorded across PRs; ``--quick`` runs CI-friendly
-sizes.  Record schemas: benchmarks/README.md.
+runtime ablation + the profile_gap predicted-vs-measured records) and the
+serving suite (serve) writes ``BENCH_serve.json`` (planner-vs-uniform
+predicted p99 on the heterogeneous smoke cluster + measured continuous
+batching with its predicted-vs-measured gap) so the perf trajectory is
+recorded across PRs; ``--quick`` runs CI-friendly sizes.  Record schemas:
+benchmarks/README.md.
 """
 
 from __future__ import annotations
@@ -25,9 +28,9 @@ import time
 
 from . import (bench_fig13_systems, bench_fig14_convergence,
                bench_fig15_ablation, bench_fig16_17_fault,
-               bench_fig18_scalability, bench_roofline, bench_table1_ondevice,
-               bench_table2_comm_volume, bench_table4_throughput,
-               bench_table7_overhead)
+               bench_fig18_scalability, bench_roofline, bench_serve,
+               bench_table1_ondevice, bench_table2_comm_volume,
+               bench_table4_throughput, bench_table7_overhead)
 
 SUITES = {
     "table1": bench_table1_ondevice.run,
@@ -39,6 +42,7 @@ SUITES = {
     "fig16": bench_fig16_17_fault.run,
     "churn": bench_fig16_17_fault.run_churn,
     "fig18": bench_fig18_scalability.run,
+    "serve": bench_serve.run,
     "table7": bench_table7_overhead.run,
     "roofline": bench_roofline.run,
 }
@@ -65,7 +69,7 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=None, choices=list(SUITES))
     ap.add_argument("--quick", action="store_true",
                     help="reduced problem sizes where supported "
-                         "(fig16, churn, table4)")
+                         "(fig16, churn, table4, serve)")
     ap.add_argument("--json-out", default="BENCH_fault.json",
                     help="where the fault-family suites (fig16, churn) "
                          "write/merge their JSON record")
@@ -73,6 +77,10 @@ def main() -> None:
                     help="where the throughput suite (table4 + Fig. 15a "
                          "variants + measured runtime ablation) writes its "
                          "JSON record")
+    ap.add_argument("--serve-json-out", default="BENCH_serve.json",
+                    help="where the serving suite (planner-vs-uniform "
+                         "predicted p99 + measured continuous batching) "
+                         "writes its JSON record")
     ap.add_argument("--runtime-bench", action="store_true",
                     help="include the measured runtime ablation (two "
                          "8-host-device subprocess trainings) in table4 "
@@ -106,6 +114,13 @@ def main() -> None:
                     json.dump({"suite": "throughput", "quick": args.quick,
                                "records": records}, f, indent=2)
                 print(f"# throughput records -> {args.throughput_json_out}",
+                      file=sys.stderr)
+            elif name == "serve":
+                lines, records = bench_serve.run_structured(args.quick)
+                with open(args.serve_json_out, "w") as f:
+                    json.dump({"suite": "serve", "quick": args.quick,
+                               "records": records}, f, indent=2)
+                print(f"# serve records -> {args.serve_json_out}",
                       file=sys.stderr)
             else:
                 lines = SUITES[name]()

@@ -9,16 +9,19 @@ median of the previous ``--window`` files**:
     python -m benchmarks.trend artifacts/BENCH_fault_*.json BENCH_fault.json
     python -m benchmarks.trend --threshold 0.10 old1.json old2.json new.json
 
-Ingests both fault-family documents (``suite: fig16`` — Fig. 16/17
-records plus the elastic-membership ``churn``/``churn_summary`` keys) and
+Ingests the fault-family documents (``suite: fig16`` — Fig. 16/17
+records plus the elastic-membership ``churn``/``churn_summary`` keys),
 throughput documents (``suite: throughput`` — table4 / fig15a /
-fig15a_runtime / profile_gap records).  Per-record lists are aggregated
-to their mean per key; nested summaries are flattened.  Only
-higher-is-better metrics (throughput, tok/s, speedups, gains) gate the
-exit code — wall-clock metrics (re-plan and recovery seconds) are
-displayed with a ``v`` direction marker but carry too much host noise to
-gate on.  Fewer than two ingestible files is a pass (nothing to compare
-against yet).
+fig15a_runtime / profile_gap records) and serving documents (``suite:
+serve`` — planner-vs-uniform plan records + measured continuous-batching
+records).  Per-record lists are aggregated to their mean per key; nested
+summaries are flattened.  Higher-is-better metrics (throughput, tok/s,
+speedups, gains) gate the exit code, and so do the serving tail-latency
+percentiles (p50/p95/p99 — gated in the *opposite* direction: a >10%
+rise fails).  Other wall-clock metrics (re-plan and recovery seconds)
+are displayed with a ``v`` direction marker but carry too much host
+noise to gate on.  Fewer than two ingestible files is a pass (nothing to
+compare against yet).
 """
 
 from __future__ import annotations
@@ -33,20 +36,28 @@ SPARKS = "▁▂▃▄▅▆▇█"
 #: higher-is-better name fragments (checked first: "recovery_speedup" gates)
 _HIGHER = ("tput", "tok_s", "speedup", "gain", "throughput", "samples_s",
            "keep", "accepted_joins")
+#: gated lower-is-better fragments: the serving planner's *predicted* tail
+#: latencies are deterministic (analytic profile), so a rise is a real
+#: planner/cost-model regression, not host noise
+_GATED_LOWER = ("planner_p99", "uniform_p99", "predicted_p99",
+                "predicted_p50")
 #: lower-is-better fragments — displayed, never gated (host-noise wall time)
 _LOWER = ("_s", "recovery", "stall", "latency", "overhead", "loss", "bytes")
 #: identifiers / configuration, not performance
 _IGNORE = ("event", "rank", "steps", "stages", "n_events", "quick", "seed",
-           "boundary", "layers")
+           "boundary", "layers", "slots", "gap_ratio", "arrival")
 
 
 def _direction(name: str) -> int:
-    """+1 gated higher-is-better, -1 display-only lower-is-better, 0 skip."""
+    """+1 gated higher-is-better, -2 gated lower-is-better,
+    -1 display-only lower-is-better, 0 skip."""
     leaf = name.rsplit(".", 1)[-1]
     if any(f in leaf for f in _IGNORE):
         return 0
     if any(f in leaf for f in _HIGHER):
         return 1
+    if any(f in leaf for f in _GATED_LOWER):
+        return -2
     if any(f in leaf for f in _LOWER):
         return -1
     return 0
@@ -95,6 +106,14 @@ def extract_metrics(doc: dict) -> dict[str, float]:
                                   []).append(rec)
         for name, recs in groups.items():
             _aggregate(out, name, recs)
+    elif suite == "serve":
+        groups = {}
+        for rec in records:
+            if isinstance(rec, dict):
+                groups.setdefault(f"serve_{rec.get('kind', 'rec')}",
+                                  []).append(rec)
+        for name, recs in groups.items():
+            _aggregate(out, name, recs)
     elif isinstance(doc, dict):
         _scalars(out, suite or "doc", doc)
     return out
@@ -134,16 +153,20 @@ def check(series: list[dict[str, float]], window: int = 8,
             continue
         med = median(prior)
         delta = (latest - med) / med if med else 0.0
-        gated = direction > 0
-        bad = gated and delta < -threshold
+        gated = direction in (1, -2)
+        bad = gated and (delta < -threshold if direction == 1
+                         else delta > threshold)
         mark = ("REGRESSION" if bad else
-                ("^ ok" if gated else "v info"))
+                ("^ ok" if direction == 1 else
+                 "v ok" if gated else "v info"))
         lines.append(f"{name:44s} {spark:>10s} {med:12.3f} "
                      f"{latest:12.3f} {delta:+7.1%}  {mark}")
         if bad:
+            word = "below" if direction == 1 else "above"
             regressions.append(
-                f"{name}: {latest:.3f} is {-delta:.1%} below the rolling "
-                f"median {med:.3f} of the previous {len(prior)} run(s)")
+                f"{name}: {latest:.3f} is {abs(delta):.1%} {word} the "
+                f"rolling median {med:.3f} of the previous "
+                f"{len(prior)} run(s)")
     return lines, regressions
 
 

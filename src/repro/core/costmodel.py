@@ -305,6 +305,106 @@ def compressed_allreduce_time(param_bytes: float, group, cluster: Cluster,
     return t
 
 
+# ---------------------------------------------------------------------------
+# Serve-mode pricing (DESIGN.md §11): one-token decode steps, slot memory,
+# and the open-loop latency-percentile objective
+# ---------------------------------------------------------------------------
+
+
+def decode_step_time(profile: Profile, dev: int, beta: int, i: int, j: int,
+                     seq_len: int) -> float:
+    """Predicted seconds for ONE decode step of layers [i, j) at batch beta.
+
+    The profile's ``(tf)`` rows measure a full ``seq_len``-token forward;
+    a decode step runs the same layers over a single token, so we charge
+    the per-token slice ``t_fwd / seq_len``.  Deliberately coarse — it
+    ignores the worse arithmetic intensity of single-token GEMVs — but it
+    is *measured* (device-specific, batch-specific, layer-specific), which
+    is what makes heterogeneous stage/split choices comparable.
+    """
+    if seq_len <= 0:
+        raise ValueError(f"seq_len must be positive, got {seq_len}")
+    return profile.t_fwd(dev, max(beta, 1), i, j) / seq_len
+
+
+def decode_boundary_bytes(table: LayerTable, j: int, beta: int,
+                          seq_len: int) -> float:
+    """Wire bytes of one decode-step boundary hop after layer ``j``: the
+    profiled full-sequence boundary activation scaled to a single token."""
+    return table.boundary_act(j) / max(seq_len, 1) * beta
+
+
+def decode_boundary_time(table: LayerTable, j: int, beta: int, seq_len: int,
+                         bw: float, compress, flops_a: float,
+                         flops_b: float) -> float:
+    """One-token boundary transfer after layer ``j`` at batch ``beta``,
+    priced with the §10 compression-aware link model."""
+    nbytes = decode_boundary_bytes(table, j, beta, seq_len)
+    return compressed_comm_time(nbytes, bw, compress, flops_a, flops_b)
+
+
+def slot_cache_bytes(table: LayerTable, i: int, j: int,
+                     cache_len: int, seq_len: int) -> float:
+    """Per-slot KV/state cache bytes for layers [i, j).
+
+    The layer table's activation bytes are per-sample at ``seq_len``
+    tokens; the decode cache holds per-token K/V (or recurrent state) for
+    ``cache_len`` positions, so the per-token activation footprint is the
+    planner's proxy for per-token cache bytes.
+    """
+    return table.act_bytes_sum(i, j) / max(seq_len, 1) * cache_len
+
+
+def serve_stage_slots(table: LayerTable, i: int, j: int, mem_bytes: float,
+                      cache_len: int, seq_len: int,
+                      mem_fraction: float = 0.9) -> int:
+    """Admission-control cap: how many decode slots fit on a device serving
+    layers [i, j) — Eq. 3 with the training terms (grads, opt state, warm-up
+    activations) replaced by params + slots × per-slot cache."""
+    budget = mem_bytes * mem_fraction - table.param_bytes(i, j)
+    per_slot = slot_cache_bytes(table, i, j, cache_len, seq_len)
+    if budget <= 0 or per_slot <= 0:
+        return 0
+    return int(budget // per_slot)
+
+
+def queue_wait_quantile(arrival_rate: float, service_rate: float,
+                        p: float) -> float:
+    """M/M/1 waiting-time quantile: P(W > t) = rho * exp(-mu (1-rho) t).
+
+    Returns the smallest t with P(W <= t) >= p (0 when the tail is already
+    below 1-p at t=0), or +inf when the queue is unstable (rho >= 1).
+    """
+    import math
+
+    if service_rate <= 0:
+        return math.inf
+    rho = arrival_rate / service_rate
+    if rho >= 1.0:
+        return math.inf
+    if rho <= 0.0:
+        return 0.0
+    t = math.log(rho / (1.0 - p)) / (service_rate * (1.0 - rho))
+    return max(0.0, t)
+
+
+def serve_latency_quantile(step_time: float, slots: int,
+                           arrival_rate: float, p: float = 0.99) -> float:
+    """Predicted per-token latency percentile of an open-loop decode server.
+
+    The engine retires ``slots`` tokens every ``step_time`` seconds — an
+    M/M/1 approximation with service rate mu = slots/step_time serving
+    Poisson arrivals at ``arrival_rate`` tokens/s.  A token's latency is
+    its queueing delay plus the step that computes it.
+    """
+    import math
+
+    if step_time <= 0 or slots <= 0:
+        return math.inf
+    mu = slots / step_time
+    return step_time + queue_wait_quantile(arrival_rate, mu, p)
+
+
 def bucketed_allreduce_residual(ta: float, backward_s: float,
                                 param_bytes: float, compress) -> float:
     """Un-hidden AllReduce seconds under DDP-style bucketed overlap.

@@ -20,7 +20,8 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, scale: float, window, block_k: int, n_kv: int):
+                   *, scale: float, window, block_k: int, n_kv: int,
+                   group: int):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -32,7 +33,9 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
     q = q_ref[0].astype(jnp.float32)            # (1, d)
     k = k_ref[0].astype(jnp.float32)            # (bk, d)
     v = v_ref[0].astype(jnp.float32)
-    cache_len = len_ref[0]
+    # per-kv-row cache length (continuous batching: each slot decodes at its
+    # own position); lockstep callers broadcast a scalar to all rows
+    cache_len = len_ref[pl.program_id(0) // group]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale  # (1, bk)
@@ -62,9 +65,10 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_decode(q, k_cache, v_cache, cache_len, *, scale: float | None = None,
                  window: int | None = None, block_k: int = 512,
                  interpret: bool = False):
-    """q: (BH, D); k/v_cache: (BHkv, S, D); cache_len: () int32.
+    """q: (BH, D); k/v_cache: (BHkv, S, D); cache_len: () or (BHkv,) int32.
 
-    Returns (BH, D).  GQA via the KV index map (q row i -> kv row i//G)."""
+    Returns (BH, D).  GQA via the KV index map (q row i -> kv row i//G).
+    A per-row ``cache_len`` masks each KV row at its own valid length."""
     BH, D = q.shape
     BHkv, S, _ = k_cache.shape
     group = BH // BHkv
@@ -77,10 +81,10 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, scale: float | None = None,
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0)))
     q3 = q[:, None, :]
-    clen = jnp.broadcast_to(cache_len[None], (1,)).astype(jnp.int32)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len), (BHkv,)).astype(jnp.int32)
 
     kernel = functools.partial(_decode_kernel, scale=scale, window=window,
-                               block_k=block_k, n_kv=n_kv)
+                               block_k=block_k, n_kv=n_kv, group=group)
     out = pl.pallas_call(
         kernel,
         grid=(BH, n_kv),

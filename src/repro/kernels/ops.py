@@ -10,6 +10,7 @@ runtime uses the XLA-native paths by default and swaps kernels in with
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .decode_attention import flash_decode
 from .flash_attention import flash_attention
@@ -41,12 +42,14 @@ def flash_attention_op(q, k, v, **kw):
 
 
 def flash_decode_op(q, k_cache, v_cache, cache_len, **kw):
-    """q: (B, H, D); caches: (B, S, Hkv, D)."""
+    """q: (B, H, D); caches: (B, S, Hkv, D); cache_len: () or (B,)."""
     B, H, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     qf = q.reshape(B * H, D)
     kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
     vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    if jnp.ndim(cache_len) == 1:     # per-slot lengths -> per-kv-row
+        cache_len = jnp.repeat(cache_len, Hkv)
     out = flash_decode(qf, kf, vf, cache_len, interpret=_interp(), **kw)
     return out.reshape(B, H, D)
 

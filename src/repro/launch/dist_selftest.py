@@ -575,20 +575,107 @@ def run_serve(arch: str, devices, seq_shard: bool = False, stage=None) -> float:
     return worst
 
 
+def run_serve_hetero(arch: str, devices, stage=None) -> float:
+    """Heterogeneous slot-split decode (build_slot_serve_step) parity.
+
+    An unbalanced shard_alloc=(3, 1) with staggered slot admission must
+    reproduce the uniform lockstep single-device decode logits row-for-row:
+    slot s admitted at wall step ``delay[s]`` decodes position p at wall
+    step ``delay[s] + p`` with identical logits.  Also asserts padded slot
+    rows return exactly-zero logits (the sampling-head mask) and that the
+    per-row reset wipes recurrent state on admission (the staggered rows
+    would diverge without it on RWKV/Mamba archs)."""
+    from repro.configs import get_smoke_config
+    from repro.models.model import decode_step, init_decode_states, init_model
+    from repro.runtime.continuous import slot_rows
+    from repro.runtime.serve import build_slot_serve_step, prepare_serve_states
+    from repro.runtime.train import prepare_params
+    from repro.distributed.compat import sharded_init
+    from repro.distributed.sharding import named
+
+    cfg = get_smoke_config(arch).replace(prefix_len=0, mtp_depth=0)
+    if cfg.n_codebooks > 1:
+        print(f"{arch:26s} [serve-hetero] skipped (multi-codebook)", flush=True)
+        return 0.0
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    alloc, cache_len, steps = (3, 1), 64, 6
+    delay = (0, 1, 2, 1)                     # admission wall-step per slot
+    mesh_prod = Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+    ss = build_slot_serve_step(cfg, mesh_prod, cache_len=cache_len,
+                               shard_alloc=alloc, stage=stage)
+    rows = slot_rows(alloc)
+    B_live, B_pad = len(rows), ss.spec.batch_global
+
+    key = jax.random.PRNGKey(0)
+    params = sharded_init(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                          named(ss.mesh, ss.param_specs))(key)
+    states = sharded_init(
+        lambda: prepare_serve_states(cfg, ss.spec.plan, B_pad, cache_len),
+        named(ss.mesh, ss.state_specs))()
+
+    ref_params = init_model(key, cfg)
+    ref_states = init_decode_states(B_live, cache_len, cfg)
+    ref_step = jax.jit(lambda p, t, pos, st: decode_step(p, t, pos, st, cfg))
+
+    tokens = np.random.RandomState(0).randint(0, cfg.vocab_size,
+                                              size=(B_live, steps))
+    ref_logits = []
+    for t in range(steps):
+        lg, ref_states = ref_step(ref_params, jnp.asarray(tokens[:, t]),
+                                  jnp.int32(t), ref_states)
+        ref_logits.append(np.asarray(lg))
+
+    worst, pad_max = 0.0, 0.0
+    for w in range(steps + max(delay)):
+        tok = np.zeros(B_pad, np.int64)
+        pos = np.zeros(B_pad, np.int64)
+        reset = np.zeros(B_pad, bool)
+        live = {}
+        for s, row in enumerate(rows):
+            p = w - delay[s]
+            if p < 0 or p >= steps:
+                reset[row] = True            # idle slots stay wiped
+                continue
+            tok[row], pos[row], reset[row] = tokens[s, p], p, p == 0
+            live[s] = (row, p)
+        logits, states = ss.step_fn(params, jnp.asarray(tok, jnp.int32),
+                                    jnp.asarray(pos, jnp.int32),
+                                    jnp.asarray(reset), states)
+        logits = np.asarray(jax.device_get(logits))
+        for s, (row, p) in live.items():
+            worst = max(worst, float(np.max(np.abs(logits[row] -
+                                                   ref_logits[p][s]))))
+        for row in range(B_pad):
+            if row not in rows:
+                pad_max = max(pad_max, float(np.max(np.abs(logits[row]))))
+    ok = worst < TOL and pad_max == 0.0
+    print(f"{arch:26s} [serve-hetero] y={alloc} stage={ss.spec.plan.stage} "
+          f"tp={ss.spec.plan.tp} max_logit_diff={worst:.2e} "
+          f"pad_logits={pad_max:.1e} {'OK' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit(f"{arch} serve-hetero parity {worst} pad={pad_max}")
+    return worst
+
+
 def main():
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     serve = "--serve" in sys.argv
+    serve_hetero = "--serve-hetero" in sys.argv
     seq_shard = "--seq-shard" in sys.argv
     planned = "--plan" in sys.argv
     replay = "--replay" in sys.argv
     hetero = "--hetero" in sys.argv
     async_mode = "--async" in sys.argv
     compress = "--compress" in sys.argv
+    stage = 2 if "--stage2" in sys.argv else None
     archs = args or DEFAULT_ARCHS
     devices = jax.devices()
     assert len(devices) >= 8, "needs 8 host devices"
     for arch in archs:
-        if serve:
+        if serve_hetero:
+            run_serve_hetero(arch, devices[:8], stage=stage)
+        elif serve:
             run_serve(arch, devices[:8], seq_shard=seq_shard)
         elif planned:
             run_arch_planned(arch, devices[:8])

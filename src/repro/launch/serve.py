@@ -2,6 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
         --smoke --devices 8 --batch 8 --prompt-len 16 --gen 32
+
+Continuous-batching mode (DESIGN.md §11): plan_serve picks the stage
+split and the heterogeneous per-shard slot counts against a modeled
+edge cluster, build_slot_serve_step lowers them onto the local mesh,
+and an open-loop Poisson request stream is served through
+ContinuousBatcher with slot-level admission control:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
+        --smoke --devices 8 --continuous --requests 12 --gen 16
 """
 
 import argparse
@@ -26,6 +35,96 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 
+def run_continuous(args, cfg, mesh) -> None:
+    """Planner-driven continuous batching on the local mesh."""
+    import time
+
+    from repro.core.hardware import Cluster, JETSON_NX, JETSON_TX2, MBPS_100
+    from repro.core.planner import plan_serve
+    from repro.core.profiler import LayerTable, Profile
+    from repro.distributed.compat import sharded_init
+    from repro.distributed.sharding import named
+    from repro.runtime.continuous import (ContinuousBatcher,
+                                          engine_from_serve_step,
+                                          poisson_requests, slot_rows)
+    from repro.runtime.serve import build_slot_serve_step, serve_head_count
+    from repro.runtime.train import prepare_params
+
+    if cfg.n_codebooks > 1:
+        raise SystemExit("--continuous drives scalar token streams; "
+                         "multi-codebook archs are not supported")
+    dp, model_axis = mesh.shape["data"], mesh.shape["model"]
+    cache_len = args.prompt_len + args.gen
+
+    # Plan against a modeled heterogeneous edge cluster (alternating fast
+    # NX / slow TX2 shard blocks) so the slot split is visibly unbalanced;
+    # max_batch caps the per-shard slot count to what the host can pad.
+    devs = tuple((JETSON_NX if d % 2 == 0 else JETSON_TX2,) * model_axis
+                 for d in range(dp))
+    cluster = Cluster(sum(devs, ()), bandwidth=MBPS_100)
+    table = LayerTable.from_model_config(cfg, seq_len=cache_len)
+    prof = Profile.analytic(table, cluster, max_batch=args.max_slots)
+
+    # modeled offered load: --util of the equal-split capacity, so the
+    # greedy split has queueing pressure to plan against
+    from repro.core.planner import (_price_serve_alloc, _serve_cuts,
+                                    serve_stage_candidates)
+    stage0 = serve_stage_candidates(model_axis, serve_head_count(cfg))[0]
+    cuts0 = _serve_cuts(table.L, stage0)
+    cap = 0.0
+    for y in range(1, args.max_slots + 1):
+        st, _, _ = _price_serve_alloc(prof, [y] * dp, stage=stage0,
+                                      tp=model_axis // stage0, cuts=cuts0,
+                                      seq_len=cache_len, arrival_rate=0.0,
+                                      compress=None)
+        cap = max(cap, dp * y / st if st > 0 else 0.0)
+    plan = plan_serve(prof, args.util * cap, dp_shards=dp,
+                      model_axis=model_axis, n_heads=serve_head_count(cfg),
+                      cache_len=cache_len, seq_len=cache_len, arch=cfg.name)
+    print(f"serve plan: stage={plan.stage} tp={plan.tp} "
+          f"alloc={plan.shard_alloc} caps={plan.max_slots} "
+          f"modeled p99={plan.predicted_p99 * 1e3:.2f}ms")
+
+    ss = build_slot_serve_step(cfg, mesh, cache_len=cache_len,
+                               shard_alloc=plan.shard_alloc,
+                               stage=plan.stage)
+    key = jax.random.PRNGKey(0)
+    params = sharded_init(lambda k: prepare_params(k, cfg, ss.spec.plan),
+                          named(ss.mesh, ss.param_specs))(key)
+    engine = engine_from_serve_step(ss, params)
+
+    B = ss.spec.batch_global
+    zeros = jnp.zeros(B, jnp.int32)
+    jax.device_get(engine(zeros, zeros, jnp.ones(B, bool)))   # compile
+    t0 = time.perf_counter()
+    jax.device_get(engine(zeros, zeros, jnp.zeros(B, bool)))
+    step_s = time.perf_counter() - t0
+    rate = args.rate or args.util * plan.slots / step_s
+    print(f"engine step {step_s * 1e3:.1f}ms on this host -> offered load "
+          f"{rate:.1f} tok/s ({args.util:.0%} of capacity)")
+
+    reqs = poisson_requests(rate / args.gen,
+                            horizon=args.requests * args.gen / rate,
+                            n_tokens=args.gen, seed=0,
+                            vocab=cfg.vocab_size)
+    bat = ContinuousBatcher(engine, slots=slot_rows(plan.shard_alloc),
+                            batch=B, cache_len=cache_len, seed=0)
+    done = bat.run(reqs)
+    lats = np.array([l for c in done for l in c.token_latencies])
+    total = sum(len(c.tokens) for c in done)
+    span = max(c.finish for c in done) - min(c.arrival for c in done)
+    p50, p95, p99 = np.percentile(lats, [50, 95, 99])
+    from repro.core.costmodel import serve_latency_quantile
+    pred = [serve_latency_quantile(step_s, plan.slots, rate, p)
+            for p in (0.5, 0.95, 0.99)]
+    print(f"served {len(done)} requests / {total} tokens in {bat.steps} "
+          f"steps: {total / span:.1f} tok/s")
+    print(f"token latency p50/p95/p99 = {p50 * 1e3:.1f}/{p95 * 1e3:.1f}/"
+          f"{p99 * 1e3:.1f} ms (predicted from measured step: "
+          f"{pred[0] * 1e3:.1f}/{pred[1] * 1e3:.1f}/{pred[2] * 1e3:.1f} ms)")
+    print("done")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
@@ -36,6 +135,20 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="planner-driven continuous batching "
+                         "(plan_serve -> slot step -> Poisson stream)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="--continuous: requests in the Poisson trace")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="--continuous: offered load (tokens/s); default "
+                         "derives from the measured step time and --util")
+    ap.add_argument("--util", type=float, default=0.6,
+                    help="--continuous: target utilization for the "
+                         "derived offered load")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="--continuous: per-shard slot cap handed to the "
+                         "planner as profile.max_batch")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke_config
@@ -51,6 +164,9 @@ def main():
     data_axis = max(1, n // 4)
     mesh = Mesh(np.array(devs).reshape(data_axis, n // data_axis),
                 ("data", "model"))
+    if args.continuous:
+        run_continuous(args, cfg, mesh)
+        return
     cache_len = args.prompt_len + args.gen
     ss = build_serve_step(cfg, mesh, batch_global=args.batch,
                           cache_len=cache_len, seq_shard=args.seq_shard)

@@ -224,14 +224,18 @@ def decode_attention(
     q: jnp.ndarray,            # (B, Hq, D) single position
     k_cache: jnp.ndarray,      # (B, S_local, Hkv, D)   (seq-sharded if ctx.seq_axis)
     v_cache: jnp.ndarray,      # (B, S_local, Hkv, Dv)
-    cache_len: jnp.ndarray,    # () int32 — number of valid *global* positions
+    cache_len: jnp.ndarray,    # () or (B,) int32 — valid *global* positions
     *,
     scale: float,
     window: int | None = None,
     softcap: float | None = None,
     ctx: ParallelCtx = NO_PARALLEL,
 ) -> jnp.ndarray:
-    """One-token attention with partial-softmax combine over a sharded cache."""
+    """One-token attention with partial-softmax combine over a sharded cache.
+
+    ``cache_len`` may be per-row ``(B,)`` — continuous batching decodes each
+    slot at its own sequence position — or a scalar shared by the batch.
+    """
     B, S_local, Hkv, D = k_cache.shape
     Hq = q.shape[1]
     G = Hq // Hkv
@@ -241,14 +245,21 @@ def decode_attention(
     # Global positions owned by this shard.
     shard = ctx.seq_index()
     pos = shard * S_local + jnp.arange(S_local)  # (S_local,)
-    valid = pos < cache_len
-    if window is not None:
-        valid &= pos >= cache_len - window
+    if jnp.ndim(cache_len) == 1:
+        valid = pos[None, :] < cache_len[:, None]          # (B, S_local)
+        if window is not None:
+            valid &= pos[None, :] >= cache_len[:, None] - window
+        mask = valid[:, None, None, :]
+    else:
+        valid = pos < cache_len
+        if window is not None:
+            valid &= pos >= cache_len - window
+        mask = valid[None, None, None]
 
     s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s = jnp.where(mask, s, NEG_INF)
 
     m_local = s.max(axis=-1)                      # (B,Hkv,G)
     m = ctx.pmax_seq(m_local)
@@ -302,12 +313,16 @@ def attention_forward(
 def attention_decode(
     params,
     x: jnp.ndarray,            # (B, d_model) — single position
-    position: jnp.ndarray,     # () int32 — current position (== cache_len)
+    position: jnp.ndarray,     # () or (B,) int32 — current position (== cache_len)
     cache: dict,               # {"k": (B,S_loc,Hkv,D), "v": ...}
     cfg: AttentionConfig,
     ctx: ParallelCtx = NO_PARALLEL,
 ):
-    """One decode step.  Returns (out (B,d_model), updated cache)."""
+    """One decode step.  Returns (out (B,d_model), updated cache).
+
+    A ``(B,)`` position decodes each batch row at its own sequence position
+    (continuous-batching slots); a scalar decodes the whole batch in lockstep.
+    """
     if cfg.mla is not None:
         return mla_decode(params, x, position, cache, cfg, ctx)
     B, _ = x.shape
@@ -315,9 +330,14 @@ def attention_decode(
     q = (x @ params["wq"]).reshape(B, h, d)
     k = (x @ params["wk"]).reshape(B, kvh, d)
     v = (x @ params["wv"]).reshape(B, kvh, d)
-    cos, sin = rope_cos_sin(position[None], d, cfg.rope_theta)  # (1, d/2)
-    q = apply_rope(q[:, None], cos[None], sin[None])[:, 0]
-    k = apply_rope(k[:, None], cos[None], sin[None])[:, 0]
+    if jnp.ndim(position) == 1:
+        cos, sin = rope_cos_sin(position, d, cfg.rope_theta)    # (B, d/2)
+        q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+    else:
+        cos, sin = rope_cos_sin(position[None], d, cfg.rope_theta)  # (1, d/2)
+        q = apply_rope(q[:, None], cos[None], sin[None])[:, 0]
+        k = apply_rope(k[:, None], cos[None], sin[None])[:, 0]
 
     # cache keeps all local KV heads; when KV is replicated across tp the
     # shard's head is sliced at attention time (cache stays tp-identical)
@@ -342,16 +362,28 @@ def attention_decode(
 
 
 def _cache_insert(cache: dict, new: dict, position, ctx: ParallelCtx):
-    """Insert this step's K/V (or latent) into a (possibly seq-sharded) cache."""
+    """Insert this step's K/V (or latent) into a (possibly seq-sharded) cache.
+
+    Scalar ``position`` uses a single dynamic_update_slice (whole batch writes
+    one seq slot); per-row ``(B,)`` positions scatter each row into its own
+    slot via a one-hot select.  Rows whose position falls outside this shard's
+    seq range (seq-sharded cache) leave the buffer untouched.
+    """
     out = dict(cache)
+    per_row = jnp.ndim(position) == 1
     for name, val in new.items():
         buf = cache[name]                      # (B, S_local, ...)
         S_local = buf.shape[1]
         local_pos = position - ctx.seq_index() * S_local
-        owner = (local_pos >= 0) & (local_pos < S_local)
-        idx = jnp.clip(local_pos, 0, S_local - 1)
-        updated = lax.dynamic_update_slice_in_dim(buf, val[:, None].astype(buf.dtype), idx, axis=1)
-        out[name] = jnp.where(owner, updated, buf) if ctx.seq_axis is not None else updated
+        if per_row:
+            hit = jnp.arange(S_local)[None, :] == local_pos[:, None]  # (B, S_local)
+            hit = hit.reshape(hit.shape + (1,) * (buf.ndim - 2))
+            out[name] = jnp.where(hit, val[:, None].astype(buf.dtype), buf)
+        else:
+            owner = (local_pos >= 0) & (local_pos < S_local)
+            idx = jnp.clip(local_pos, 0, S_local - 1)
+            updated = lax.dynamic_update_slice_in_dim(buf, val[:, None].astype(buf.dtype), idx, axis=1)
+            out[name] = jnp.where(owner, updated, buf) if ctx.seq_axis is not None else updated
     return out
 
 
@@ -406,12 +438,16 @@ def mla_decode(params, x, position, cache, cfg: AttentionConfig, ctx: ParallelCt
     q = (cq @ params["wq_b"]).reshape(B, h, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
 
-    cos, sin = rope_cos_sin(position[None], m.qk_rope_dim, cfg.rope_theta)
-    q_rope = apply_rope(q_rope[:, None], cos[None], sin[None])[:, 0]
-
     kv_a = x @ params["wkv_a"]
     c_kv = rmsnorm(params["kv_norm"], kv_a[..., :rank])          # (B, rank)
-    k_rope = apply_rope(kv_a[..., rank:][:, None, None, :], cos[None], sin[None])[:, 0, 0]
+    if jnp.ndim(position) == 1:
+        cos, sin = rope_cos_sin(position, m.qk_rope_dim, cfg.rope_theta)  # (B, rope/2)
+        q_rope = apply_rope(q_rope[:, None], cos[:, None], sin[:, None])[:, 0]
+        k_rope = apply_rope(kv_a[..., rank:][:, None, None, :], cos[:, None], sin[:, None])[:, 0, 0]
+    else:
+        cos, sin = rope_cos_sin(position[None], m.qk_rope_dim, cfg.rope_theta)
+        q_rope = apply_rope(q_rope[:, None], cos[None], sin[None])[:, 0]
+        k_rope = apply_rope(kv_a[..., rank:][:, None, None, :], cos[None], sin[None])[:, 0, 0]
 
     cache = _cache_insert(cache, {"c_kv": c_kv, "k_rope": k_rope}, position, ctx)
 
@@ -424,13 +460,18 @@ def mla_decode(params, x, position, cache, cfg: AttentionConfig, ctx: ParallelCt
     S_local = ckv_buf.shape[1]
     shard = ctx.seq_index()
     pos = shard * S_local + jnp.arange(S_local)
-    valid = pos < (position + 1)
+    if jnp.ndim(position) == 1:
+        valid = pos[None, :] < (position[:, None] + 1)           # (B, S_local)
+        vmask = valid[:, None]
+    else:
+        valid = pos < (position + 1)
+        vmask = valid[None, None]
 
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     s = jnp.einsum("bhr,bkr->bhk", q_lat, ckv_buf.astype(jnp.float32))
     s += jnp.einsum("bhd,bkd->bhk", q_rope.astype(jnp.float32), krope_buf.astype(jnp.float32))
     s = s * scale
-    s = jnp.where(valid[None, None], s, NEG_INF)
+    s = jnp.where(vmask, s, NEG_INF)
 
     m_local = s.max(axis=-1)
     mx = ctx.pmax_seq(m_local)

@@ -230,7 +230,9 @@ def decode_step(params, token, position, states, cfg: ModelConfig,
                 ctx: ParallelCtx = NO_PARALLEL):
     """One decode step.
 
-    token: (B,) int32 (or (B, CB) for multi-codebook); position: () int32.
+    token: (B,) int32 (or (B, CB) for multi-codebook); position: () int32,
+    or (B,) int32 to decode each row at its own position (continuous
+    batching — attention masks per-row; recurrent archs are position-free).
     Returns (logits (B, V) or (B, CB, V), new_states).
     """
     if cfg.n_codebooks > 1:

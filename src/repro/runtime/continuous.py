@@ -1,0 +1,232 @@
+"""Continuous batching: slot-based decode with admit/retire (DESIGN.md §11).
+
+The engine owns a fixed set of decode *slots* (rows of the padded per-shard
+batch a ``build_slot_serve_step`` step decodes).  Requests queue on arrival,
+are admitted into free slots (resetting that row's recurrent state), decode
+one token per engine step at their own per-row position, and retire on
+completion — no lockstep batch boundaries, so a long request never stalls
+the batch behind it.
+
+Determinism contract: a sampled token depends only on ``(request_id,
+position)`` — the sampling key is ``fold_in(base, rid, pos)`` and decode is
+row-independent — so the generated text is identical regardless of arrival
+timing, admission order, or which slot a request lands in (the
+``test_continuous`` property).  MoE capacity routing is the one documented
+exception (rows couple through expert capacity).
+
+The clock is injectable: the benchmark uses the real ``perf_counter`` to
+measure step time, tests use a fake timer, and arrivals are replayed on the
+same simulated clock either way (open-loop: the arrival process does not
+slow down when the server falls behind).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    arrival: float             # seconds on the open-loop clock
+    prompt_token: int          # synthetic single-token prompt (decode-only)
+    n_tokens: int              # tokens to generate
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    arrival: float
+    finish: float
+    tokens: list[int]
+    token_latencies: list[float]   # completion clock - ready clock, per token
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+
+def poisson_requests(rate: float, horizon: float, *, n_tokens: int,
+                     seed: int = 0, vocab: int = 256) -> list[Request]:
+    """Open-loop Poisson arrival process at ``rate`` requests/s for
+    ``horizon`` seconds of simulated time."""
+    rng = np.random.RandomState(seed)
+    out, t, rid = [], 0.0, 0
+    while True:
+        t += float(rng.exponential(1.0 / rate))
+        if t >= horizon:
+            return out
+        out.append(Request(rid=rid, arrival=t,
+                           prompt_token=int(rng.randint(vocab)),
+                           n_tokens=n_tokens))
+        rid += 1
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    pos: int = 0
+    remaining: int = 0
+    next_token: int = 0
+    ready: float = 0.0         # clock at which the next token became due
+    fresh: bool = False        # admitted since the last engine step
+
+
+class ContinuousBatcher:
+    """Host-side admit/decode/retire loop over a per-slot decode step.
+
+    ``step``: callable ``(tokens (B,), positions (B,), reset (B,)) ->
+    logits (B, V)`` over the full padded batch (see
+    ``engine_from_serve_step`` / ``engine_from_decode_step``).  ``slots``
+    lists the live row indices — for a planner split this is
+    ``slot_rows(shard_alloc)``; padded rows are never admitted into.
+    """
+
+    def __init__(self, step: Callable, *, slots: Sequence[int], batch: int,
+                 cache_len: int, seed: int = 0,
+                 timer: Callable[[], float] | None = None):
+        self.step = step
+        self.slot_rows = list(slots)
+        self.batch = batch
+        self.cache_len = cache_len
+        self.key = jax.random.PRNGKey(seed)
+        self.timer = timer or time.perf_counter
+        self.free = list(self.slot_rows)
+        self.active: dict[int, _Slot] = {}
+        self.clock = 0.0
+        self.steps = 0
+        self.step_seconds: list[float] = []
+
+    # -- scheduling --------------------------------------------------------
+
+    def _admit(self, queue: list[Request]):
+        while queue and self.free:
+            req = queue.pop(0)
+            row = self.free.pop(0)
+            self.active[row] = _Slot(
+                rid=req.rid, pos=0,
+                remaining=min(req.n_tokens, self.cache_len),
+                next_token=req.prompt_token, ready=max(req.arrival, self.clock),
+                fresh=True)
+
+    def _sample(self, logits_row: np.ndarray, rid: int, pos: int) -> int:
+        key = jax.random.fold_in(jax.random.fold_in(self.key, rid), pos)
+        return int(jax.random.categorical(key, jnp.asarray(logits_row)))
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self, requests: Sequence[Request],
+            max_steps: int | None = None) -> list[Completion]:
+        """Serve ``requests`` (sorted by arrival) to completion."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        queue: list[Request] = []
+        done: dict[int, Completion] = {
+            r.rid: Completion(r.rid, r.arrival, 0.0, [], []) for r in pending}
+        tokens = np.zeros(self.batch, np.int32)
+        positions = np.zeros(self.batch, np.int32)
+        reset = np.zeros(self.batch, bool)
+
+        while pending or queue or self.active:
+            if max_steps is not None and self.steps >= max_steps:
+                break
+            # open-loop arrivals up to the current clock; if the server is
+            # idle, fast-forward to the next arrival
+            if not queue and not self.active and pending:
+                self.clock = max(self.clock, pending[0].arrival)
+            while pending and pending[0].arrival <= self.clock:
+                queue.append(pending.pop(0))
+            self._admit(queue)
+            if not self.active:
+                continue
+
+            reset[:] = False
+            for row, sl in self.active.items():
+                tokens[row] = sl.next_token
+                positions[row] = sl.pos
+                reset[row] = sl.fresh
+                sl.fresh = False
+            t0 = self.timer()
+            logits = self.step(jnp.asarray(tokens), jnp.asarray(positions),
+                               jnp.asarray(reset))
+            logits = np.asarray(jax.device_get(logits))
+            dt = self.timer() - t0
+            self.step_seconds.append(dt)
+            self.clock += dt
+            self.steps += 1
+
+            for row in list(self.active):
+                sl = self.active[row]
+                tok = self._sample(logits[row], sl.rid, sl.pos)
+                comp = done[sl.rid]
+                comp.tokens.append(tok)
+                comp.token_latencies.append(self.clock - sl.ready)
+                sl.ready = self.clock
+                sl.next_token = tok
+                sl.pos += 1
+                sl.remaining -= 1
+                if sl.remaining <= 0 or sl.pos >= self.cache_len:
+                    comp.finish = self.clock
+                    del self.active[row]
+                    self.free.append(row)
+        return [done[r.rid] for r in sorted(requests, key=lambda r: r.rid)
+                if done[r.rid].tokens]
+
+
+def slot_rows(shard_alloc: Sequence[int]) -> list[int]:
+    """Live row indices of the padded shard-major batch layout
+    (``build_slot_serve_step``): rows ``[d*B_max, d*B_max + alloc[d])``."""
+    b_max = max(shard_alloc)
+    rows = []
+    for d, y in enumerate(shard_alloc):
+        rows.extend(range(d * b_max, d * b_max + y))
+    return rows
+
+
+def engine_from_serve_step(ss, params):
+    """Adapt a ``build_slot_serve_step`` ServeStep into the batcher's step
+    callable (owns the decode state tree across calls)."""
+    from .serve import prepare_serve_states
+
+    spec = ss.spec
+    states = prepare_serve_states(spec.cfg, spec.plan, spec.batch_global,
+                                  spec.cache_len)
+    holder = {"states": states}
+
+    def step(tokens, positions, reset):
+        logits, holder["states"] = ss.step_fn(
+            params, tokens, positions, reset, holder["states"])
+        return logits
+
+    return step
+
+
+def engine_from_decode_step(params, cfg, *, batch: int, cache_len: int):
+    """Single-device engine over ``models.model.decode_step`` — the
+    mesh-free path the determinism test and quick benches use."""
+    from repro.models.model import decode_step, init_decode_states
+
+    holder = {"states": init_decode_states(batch, cache_len, cfg)}
+
+    @jax.jit
+    def _step(params, tokens, positions, reset, states):
+        # zero recurrent state rows on admission; state leaves are
+        # (n_periods, B, ...), batch on axis 1
+        def clear_leaf(s):
+            r = reset.reshape((1, -1) + (1,) * (s.ndim - 2))
+            return jnp.where(r, jnp.zeros_like(s), s)
+
+        states = jax.tree.map(clear_leaf, states)
+        return decode_step(params, tokens, positions, states, cfg)
+
+    def step(tokens, positions, reset):
+        logits, holder["states"] = _step(params, tokens, positions, reset,
+                                         holder["states"])
+        return logits
+
+    return step

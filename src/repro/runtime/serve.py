@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.planner import serve_stage_candidates
 from repro.distributed.compat import shard_map
 from repro.distributed.mesh import MeshPlan, mesh_plan, refine_mesh
 from repro.distributed.sharding import (Layout, SERVE_LAYOUT, named,
@@ -38,18 +39,20 @@ from .train import pad_vocab_params, prepare_params
 from .vocab_parallel import vp_embed
 
 
+def serve_head_count(cfg: ModelConfig) -> int:
+    """Head count that caps tensor parallelism for decode."""
+    return cfg.attn.n_heads if cfg.attn is not None else (
+        cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else 1)
+
+
 def pick_serve_stage(cfg: ModelConfig, model_axis: int) -> int:
     """Serve prefers TP: the smallest stage count whose tp divides the query
-    head count (query heads must shard; KV may replicate)."""
-    n_heads = cfg.attn.n_heads if cfg.attn is not None else (
-        cfg.d_model // cfg.rwkv.head_dim if cfg.rwkv is not None else 1)
-    for s in (1, 2, 4, 8, 16):
-        if model_axis % s:
-            continue
-        tp = model_axis // s
-        if n_heads % tp == 0:
-            return s
-    return model_axis
+    head count (query heads must shard; KV may replicate).  Candidates are
+    the divisors of ``model_axis`` — not a fixed power-of-two probe — so a
+    6-device model axis yields stage 2 (tp 3) rather than a 6-deep
+    pipeline.  ``core.planner.plan_serve`` makes the full latency-priced
+    choice; this is the profile-free default."""
+    return serve_stage_candidates(model_axis, serve_head_count(cfg))[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,10 +63,29 @@ class ServeSpec:
     batch_global: int
     seq_shard: bool            # long-context: shard cache seq over 'data'
     n_groups: int = 1          # decode pipelining groups (stage > 1)
+    # Heterogeneous decode slots per dp shard (the ``TrainSpec.shard_alloc``
+    # counterpart): shard d serves shard_alloc[d] live slots, every shard is
+    # padded to max(shard_alloc) rows (SPMD needs equal local shapes) and the
+    # padding rows are masked out of the sampling head.  Setting this also
+    # switches the step to the per-slot signature
+    # ``fn(params, token (B,), position (B,), reset (B,), states)``.
+    shard_alloc: tuple[int, ...] | None = None
 
     @property
     def batch_sharded(self) -> bool:
         return not self.seq_shard
+
+    @property
+    def per_slot(self) -> bool:
+        return self.shard_alloc is not None
+
+    @property
+    def slot_mask(self):
+        """(dp_shards, B_max) validity of each padded slot row."""
+        assert self.shard_alloc is not None
+        b_max = self.batch_global // self.plan.dp_shards
+        return jnp.asarray([[i < y for i in range(b_max)]
+                            for y in self.shard_alloc])
 
     @property
     def cfg_local(self) -> ModelConfig:
@@ -85,8 +107,10 @@ def spmd_decode_fn(spec: ServeSpec):
         w = params["head"]
         return w[cb] if cb is not None else w
 
-    def fn(params, token, position, states):
-        # token: (B_loc,) or (B_loc, CB); position: () int32
+    slot_mask = spec.slot_mask if spec.per_slot else None
+
+    def body(params, token, position, states):
+        # token: (B_loc,) or (B_loc, CB); position: () or (B_loc,) int32
         if cfg.n_codebooks > 1:
             x = sum(vp_embed(params["embed"][cb], token[:, cb], ctx)
                     for cb in range(cfg.n_codebooks))
@@ -95,7 +119,6 @@ def spmd_decode_fn(spec: ServeSpec):
         if cfg.embed_scale:
             x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
         x = x.astype(cfg.cdtype)
-        B_loc = x.shape[0]
 
         if P_st == 1:
             h, new_states = decode_periods(params["periods"], x, position,
@@ -120,7 +143,29 @@ def spmd_decode_fn(spec: ServeSpec):
                 "stage")
         return logits, new_states
 
-    return fn
+    if not spec.per_slot:
+        return body
+
+    def slot_fn(params, token, position, reset, states):
+        # per-slot decode: position/reset are (B_loc,); padded slot rows
+        # (beyond this shard's shard_alloc count) are masked out of the
+        # sampling head, and reset rows get their recurrent state zeroed
+        # before the step (attention caches need no reset — the per-row
+        # cache_len mask hides stale entries).
+        dp_idx = lax.axis_index("pod") * plan.data + lax.axis_index("data")
+        valid = lax.dynamic_index_in_dim(slot_mask, dp_idx, 0, keepdims=False)
+
+        def clear(s):
+            r = reset.reshape((1, -1) + (1,) * (s.ndim - 2))
+            return jnp.where(r, jnp.zeros_like(s), s)
+
+        states = jax.tree.map(clear, states)
+        logits, new_states = body(params, token, position, states)
+        vmask = valid.reshape((-1,) + (1,) * (logits.ndim - 1))
+        logits = jnp.where(vmask, logits, jnp.zeros_like(logits))
+        return logits, new_states
+
+    return slot_fn
 
 
 def _pipelined_decode(periods_local, x, position, states, cfg_local, ctx,
@@ -135,6 +180,12 @@ def _pipelined_decode(periods_local, x, position, states, cfg_local, ctx,
 
     def slice_b(s, g):
         return lax.dynamic_slice_in_dim(s, g * bg, bg, axis=1)
+
+    def slice_pos(g):
+        # per-row positions travel with their batch group
+        if jnp.ndim(position) == 1:
+            return lax.dynamic_slice_in_dim(position, g * bg, bg)
+        return position
 
     def update_b(s, new, g, active):
         upd = lax.dynamic_update_slice_in_dim(s, new.astype(s.dtype), g * bg, axis=1)
@@ -151,7 +202,7 @@ def _pipelined_decode(periods_local, x, position, states, cfg_local, ctx,
                                                  keepdims=False),
                         act)
         st_g = jax.tree.map(lambda s: slice_b(s, g), st)
-        h, st_new = decode_periods(periods_local, inp, position, st_g,
+        h, st_new = decode_periods(periods_local, inp, slice_pos(g), st_g,
                                    cfg_local, ctx)
         active = (t >= stage) & (t < stage + n_g)
         st = jax.tree.map(lambda s, n: update_b(s, n, g, active), st, st_new)
@@ -345,6 +396,72 @@ def build_serve_step(cfg: ModelConfig, production_mesh: Mesh, *,
                    in_shardings=(named(mesh, pspecs),
                                  named(mesh, tok_spec),
                                  named(mesh, P()),
+                                 named(mesh, sspecs)))
+    return ServeStep(spec=spec, mesh=mesh, param_specs=pspecs,
+                     state_specs=sspecs, step_fn=step)
+
+
+def build_slot_serve_step(cfg: ModelConfig, production_mesh: Mesh, *,
+                          cache_len: int, shard_alloc,
+                          stage: int | None = None,
+                          n_groups: int | None = None) -> ServeStep:
+    """Continuous-batching decode step with heterogeneous slot splits.
+
+    ``shard_alloc[d]`` live decode slots run on dp shard ``d`` (a planner
+    ``ServePlan.shard_alloc``, or any unbalanced split).  Every shard is
+    padded to ``B_max = max(shard_alloc)`` rows; the returned step is
+
+        ``step_fn(params, token (B,), position (B,), reset (B,), states)``
+
+    with ``B = dp_shards * B_max`` global padded rows in shard-major order
+    (rows ``[d*B_max, d*B_max + shard_alloc[d])`` are live).  ``position``
+    is per-row — each slot decodes at its own sequence position — and rows
+    with ``reset`` set have their recurrent state zeroed before the step
+    (slot admission).  Padded rows return zero logits.
+    """
+    model_axis = production_mesh.shape["model"]
+    if stage is None:
+        stage = pick_serve_stage(cfg, model_axis)
+    mesh = refine_mesh(production_mesh, stage)
+    plan = mesh_plan(production_mesh, stage)
+    shard_alloc = tuple(int(y) for y in shard_alloc)
+    assert len(shard_alloc) == plan.dp_shards, (shard_alloc, plan.dp_shards)
+    assert max(shard_alloc) >= 1, shard_alloc
+    b_max = max(shard_alloc)
+    batch_global = b_max * plan.dp_shards
+    if n_groups is None:
+        n_groups = stage if (b_max % stage == 0 and b_max >= stage) else 1
+    spec = ServeSpec(cfg=cfg, plan=plan, cache_len=cache_len,
+                     batch_global=batch_global, seq_shard=False,
+                     n_groups=n_groups, shard_alloc=shard_alloc)
+
+    kv_repl = cfg.attn is not None and cfg.attn.n_kv_heads % plan.tp != 0
+    layout = dataclasses.replace(SERVE_LAYOUT, kv_replicated=kv_repl,
+                                 ep_axis="data")
+
+    abstract_p = jax.eval_shape(lambda k: prepare_params(k, cfg, plan),
+                                jax.random.PRNGKey(0))
+    pspecs = param_pspecs(abstract_p, layout)
+    abstract_s = jax.eval_shape(
+        lambda: prepare_serve_states(cfg, plan, batch_global, cache_len))
+    sspecs = state_pspecs(abstract_s, layout, batch_sharded=True)
+
+    row_spec = P(("pod", "data"))
+    tok_spec = row_spec if cfg.n_codebooks == 1 else P(("pod", "data"), None)
+    logits_spec = P(("pod", "data"), "tp") if cfg.n_codebooks == 1 \
+        else P(("pod", "data"), None, "tp")
+
+    fn = spmd_decode_fn(spec)
+    sharded = shard_map(fn, mesh=mesh,
+                        in_specs=(pspecs, tok_spec, row_spec, row_spec,
+                                  sspecs),
+                        out_specs=(logits_spec, sspecs),
+                        check_vma=False)
+    step = jax.jit(sharded,
+                   in_shardings=(named(mesh, pspecs),
+                                 named(mesh, tok_spec),
+                                 named(mesh, row_spec),
+                                 named(mesh, row_spec),
                                  named(mesh, sspecs)))
     return ServeStep(spec=spec, mesh=mesh, param_specs=pspecs,
                      state_specs=sspecs, step_fn=step)

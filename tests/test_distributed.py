@@ -95,3 +95,21 @@ def test_serve_parity():
 @pytest.mark.slow
 def test_serve_seq_sharded_long_context():
     _run(["--serve", "--seq-shard", "gemma2-2b"])
+
+
+@pytest.mark.slow
+def test_serve_hetero_slot_split():
+    """Heterogeneous decode slot split (build_slot_serve_step): an
+    unbalanced shard_alloc=(3, 1) with per-row positions and staggered
+    slot admission reproduces the uniform lockstep single-device decode
+    logits row-for-row (one attention + one recurrent arch — the reset
+    mask must wipe RWKV state on admission), and padded slot rows return
+    exactly-zero logits."""
+    _run(["--serve-hetero", "gemma-2b", "rwkv6-7b"])
+
+
+@pytest.mark.slow
+def test_serve_hetero_pipelined():
+    """Same parity through the stage=2 pipelined slot path (per-row
+    positions sliced per decode group)."""
+    _run(["--serve-hetero", "--stage2", "gemma-2b"])

@@ -1,0 +1,195 @@
+"""Serve-mode planner (DESIGN.md §11): decode pricing, the M/M/1 latency
+objective, admission-control memory caps, and the plan_serve vs
+plan_serve_uniform p99 ordering on a heterogeneous cluster."""
+
+import math
+
+import pytest
+
+from repro.core.costmodel import (decode_boundary_bytes, decode_step_time,
+                                  queue_wait_quantile, serve_latency_quantile,
+                                  serve_stage_slots, slot_cache_bytes)
+from repro.core.hardware import (Cluster, DeviceProfile, JETSON_NX,
+                                 JETSON_TX2, MBPS_100)
+from repro.core.planner import (AllocationError, plan_serve,
+                                plan_serve_uniform, serve_stage_candidates)
+from repro.core.profiler import LayerCost, LayerTable, Profile
+from repro.core.simulator import reprice_serve_plan, serve_prediction_gap
+
+
+def _table(L=8, param=1e6, act=1e4):
+    layers = tuple(LayerCost(f"l{i}", 1e8, param, act) for i in range(L))
+    return LayerTable("toy", layers)
+
+
+def _hetero_profile(seq=128, max_batch=32):
+    cluster = Cluster((JETSON_NX,) * 2 + (JETSON_TX2,) * 2,
+                      bandwidth=MBPS_100)
+    return Profile.analytic(_table(), cluster, max_batch)
+
+
+# ---------------------------------------------------------------------------
+# stage candidates (the pick_serve_stage divisor fix)
+# ---------------------------------------------------------------------------
+
+
+def test_stage_candidates_are_divisors():
+    assert serve_stage_candidates(4, 8) == [1, 2, 4]
+    # 6-wide model axis: the legacy {1,2,4,8,16} probe missed 3 and 6
+    assert serve_stage_candidates(6, 4) == [3, 6]
+    assert serve_stage_candidates(6, 12) == [1, 2, 3, 6]
+    # odd head count: only tp=1 works
+    assert serve_stage_candidates(4, 3) == [4]
+
+
+def test_stage_candidates_every_axis_feasible():
+    # stage=model_axis (tp=1) is always a candidate -> never empty
+    for axis in range(1, 9):
+        for heads in (1, 3, 7, 8):
+            cands = serve_stage_candidates(axis, heads)
+            assert cands, (axis, heads)
+            for s in cands:
+                assert axis % s == 0
+                assert heads % (axis // s) == 0
+
+
+# ---------------------------------------------------------------------------
+# decode pricing units
+# ---------------------------------------------------------------------------
+
+
+def test_decode_step_time_is_per_token_slice():
+    prof = _hetero_profile()
+    seq = 128
+    full = prof.t_fwd(0, 4, 0, prof.table.L)
+    assert decode_step_time(prof, 0, 4, 0, prof.table.L, seq) == \
+        pytest.approx(full / seq)
+    with pytest.raises(ValueError):
+        decode_step_time(prof, 0, 4, 0, prof.table.L, 0)
+
+
+def test_decode_boundary_bytes_scale_with_batch():
+    t = _table(act=1e4)
+    one = decode_boundary_bytes(t, 4, 1, 128)
+    assert one == pytest.approx(1e4 / 128)
+    assert decode_boundary_bytes(t, 4, 6, 128) == pytest.approx(6 * one)
+
+
+def test_slot_cache_and_admission_cap():
+    t = _table(L=4, param=1e6, act=1e4)
+    per_slot = slot_cache_bytes(t, 0, 4, cache_len=64, seq_len=128)
+    assert per_slot == pytest.approx(4 * 1e4 / 128 * 64)
+    # memory sized so that 0.9 * mem == params + 10 cache slots
+    mem = (4 * 1e6 + 10 * per_slot) / 0.9
+    assert serve_stage_slots(t, 0, 4, mem, 64, 128) == 10
+    # params alone exhaust memory -> zero slots, never negative
+    assert serve_stage_slots(t, 0, 4, 1e6, 64, 128) == 0
+
+
+# ---------------------------------------------------------------------------
+# M/M/1 latency objective
+# ---------------------------------------------------------------------------
+
+
+def test_queue_wait_quantile_properties():
+    mu = 100.0
+    assert queue_wait_quantile(0.0, mu, 0.99) == 0.0
+    assert queue_wait_quantile(mu, mu, 0.99) == math.inf
+    assert queue_wait_quantile(50.0, 0.0, 0.99) == math.inf
+    w95 = queue_wait_quantile(80.0, mu, 0.95)
+    w99 = queue_wait_quantile(80.0, mu, 0.99)
+    assert 0 < w95 < w99
+    # closed form: log(rho/(1-p)) / (mu (1-rho))
+    assert w99 == pytest.approx(math.log(0.8 / 0.01) / (mu * 0.2))
+    # light load: tail already below 1-p at t=0 -> zero wait
+    assert queue_wait_quantile(0.5, mu, 0.99) == 0.0
+
+
+def test_serve_latency_quantile_monotone_in_load():
+    lats = [serve_latency_quantile(0.01, 8, lam) for lam in (100, 400, 780)]
+    assert lats == sorted(lats)
+    assert serve_latency_quantile(0.01, 8, 900) == math.inf  # rho > 1
+    assert serve_latency_quantile(0.0, 8, 100) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# plan_serve
+# ---------------------------------------------------------------------------
+
+
+def _plan_kw(prof, **over):
+    kw = dict(dp_shards=2, model_axis=2, n_heads=8, cache_len=128,
+              seq_len=128, arch="toy")
+    kw.update(over)
+    return kw
+
+
+def test_plan_serve_beats_uniform_on_hetero_cluster():
+    prof = _hetero_profile()
+    uni = plan_serve_uniform(prof, 1e5, **_plan_kw(prof))
+    plan = plan_serve(prof, 1e5, **_plan_kw(prof))
+    assert plan.predicted_p99 <= uni.predicted_p99
+    # fast NX shard absorbs more slots than the slow TX2 shard
+    assert plan.shard_alloc[0] > plan.shard_alloc[1]
+    assert uni.shard_alloc[0] == uni.shard_alloc[1]
+    assert plan.planner == "asteroid-serve"
+    assert uni.planner == "uniform-serve"
+    for y, cap in zip(plan.shard_alloc, plan.max_slots):
+        assert 0 <= y <= cap
+    assert plan.utilization < 1.0
+    assert plan.predicted_p50 <= plan.predicted_p95 <= plan.predicted_p99
+
+
+def test_plan_serve_respects_memory_caps():
+    tiny = DeviceProfile("tiny", mem_bytes=5.5e6, flops=1e12)
+    cluster = Cluster((tiny,) * 4)
+    prof = Profile.analytic(_table(), cluster, 32)
+    plan = plan_serve(prof, 1e4, **_plan_kw(prof))
+    for y, cap in zip(plan.shard_alloc, plan.max_slots):
+        assert y <= cap
+    assert max(plan.max_slots) < 32   # the cap bound, not max_batch
+
+
+def test_plan_serve_infeasible_memory_raises():
+    nomem = DeviceProfile("nomem", mem_bytes=1e5, flops=1e12)
+    prof = Profile.analytic(_table(), Cluster((nomem,) * 4), 32)
+    with pytest.raises(AllocationError):
+        plan_serve(prof, 1e4, **_plan_kw(prof))
+
+
+def test_plan_serve_mesh_larger_than_cluster_raises():
+    prof = _hetero_profile()
+    with pytest.raises(AllocationError):
+        plan_serve(prof, 1e4, **_plan_kw(prof, dp_shards=4, model_axis=2))
+
+
+def test_plan_serve_overload_still_returns_best_effort():
+    """Offered load beyond every config's capacity: percentiles are inf but
+    a plan (the max-throughput split) is still returned."""
+    prof = _hetero_profile()
+    plan = plan_serve(prof, 1e12, **_plan_kw(prof))
+    assert plan.predicted_p99 == math.inf
+    assert plan.slots > 0
+
+
+# ---------------------------------------------------------------------------
+# cross-profile repricing
+# ---------------------------------------------------------------------------
+
+
+def test_reprice_serve_plan_keeps_decisions():
+    prof = _hetero_profile()
+    plan = plan_serve(prof, 1e5, **_plan_kw(prof))
+    slow = Cluster(tuple(
+        DeviceProfile(d.name, d.mem_bytes, d.flops / 2, d.sat_batch,
+                      d.sat_flops, d.overhead)
+        for d in prof.cluster.devices), bandwidth=prof.cluster.bandwidth)
+    ref = Profile.analytic(prof.table, slow, prof.max_batch)
+    re = reprice_serve_plan(plan, ref)
+    assert re.shard_alloc == plan.shard_alloc
+    assert (re.stage, re.tp, re.cuts) == (plan.stage, plan.tp, plan.cuts)
+    assert re.step_time > plan.step_time
+    gap = serve_prediction_gap(plan, ref)
+    assert gap["gap_ratio"] > 1.0
+    assert gap["predicted_p99_s"] == plan.predicted_p99
+    assert gap["reference_p99_s"] == re.predicted_p99
