@@ -11,10 +11,15 @@ real shard_map runtime (``repro.launch.train --plan [--no-offload]`` in a
 subprocess with 8 host devices), the ``async_overlap`` suite (two-stream
 overlapped vs sync vs one-stream-serialized round latencies on the
 bandwidth-constrained Env B, plus measured sync/staleness-1 runtime
-arms — DESIGN.md §8), and the ``profile_gap`` suite (the host is
-profiled for real via ``repro.launch.profile.measure_model`` and plans
-made on the analytic vs the measured profile are both evaluated against
-the measured times — quantifying what measured profiling buys) — which
+arms — DESIGN.md §8), the ``profile_gap`` suite (the host is
+profiled for real via ``repro.launch.profile.measure_model`` for the
+smoke attention, RWKV and train_4k-shaped configs, and plans made on the
+analytic vs the measured profile are both evaluated against the measured
+times — quantifying what measured profiling buys), and the ``portfolio``
+suite (the DESIGN.md §12 closed-loop auction: a predicted record of the
+enumerated candidate set plus a measured ``--portfolio 3`` subprocess
+run gating winner-no-slower-than-first-choice and probation
+bit-identity) — which
 ``benchmarks/run.py`` writes to ``BENCH_throughput.json`` so the
 throughput trajectory is recorded across PRs (CI artifact).  See
 benchmarks/README.md for the record schemas.
@@ -93,26 +98,36 @@ def _fig15a_quick(models):
     return lines, records
 
 
-def _launch_tok_s(extra_args, steps: int, timeout: int = 1200):
+def _launch(extra_args, steps: int, timeout: int = 1200,
+            global_batch: int = 8, seq: int = 64) -> str:
     """Run ``repro.launch.train --smoke --plan`` in a subprocess on 8 host
-    devices; returns (tok_s, loss, shard_alloc string from the plan line)."""
+    devices and return its stdout.  ``global_batch``/``seq`` default to the
+    smoke shape; the train_4k-shaped arms widen them."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src")
     env.pop("XLA_FLAGS", None)
     args = [sys.executable, "-m", "repro.launch.train", "--smoke",
             "--devices", "8", "--plan", "--steps", str(steps),
-            "--global-batch", "8", "--seq", "64", *extra_args]
+            "--global-batch", str(global_batch), "--seq", str(seq),
+            *extra_args]
     proc = subprocess.run(args, capture_output=True, text=True,
                           timeout=timeout, env=env, cwd=root)
     if proc.returncode != 0:
         raise RuntimeError(
             f"launch.train {extra_args} failed:\n"
             f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
-    m = re.search(r"FINAL tok_s=([0-9.]+) loss=([0-9.]+)", proc.stdout)
-    assert m, proc.stdout[-2000:]
+    return proc.stdout
+
+
+def _launch_tok_s(extra_args, steps: int, timeout: int = 1200,
+                  global_batch: int = 8, seq: int = 64):
+    """``_launch`` + parse: (tok_s, loss, shard_alloc from the plan line)."""
+    out = _launch(extra_args, steps, timeout, global_batch, seq)
+    m = re.search(r"FINAL tok_s=([0-9.]+) loss=([0-9.]+)", out)
+    assert m, out[-2000:]
     # a heterogeneous allocation prints as a tuple with spaces: "(2, 1, 1)"
-    alloc = re.search(r"shard_alloc=(\([^)]*\)|\S+)", proc.stdout)
+    alloc = re.search(r"shard_alloc=(\([^)]*\)|\S+)", out)
     return (float(m.group(1)), float(m.group(2)),
             alloc.group(1) if alloc else "?")
 
@@ -263,6 +278,7 @@ def _async_overlap(models, quick: bool, runtime: bool = True):
         predicted_gain = (round_latency(plan_0.steps, plan_0.n_micro)
                           / round_latency_async(plan_1.steps, plan_1.n_micro))
         rec = {"suite": "async_overlap", "kind": "measured",
+               "model": "phi3_mini",
                "tok_s_sync": tok_sync, "tok_s_async": tok_async,
                "tok_s_async_nodb": tok_nodb,
                "tok_s_compressed": tok_comp,
@@ -291,6 +307,39 @@ def _async_overlap(models, quick: bool, runtime: bool = True):
                          gain=f"{measured_gain:.2f}x",
                          predicted=f"{predicted_gain:.2f}x"))
         records.append(rec)
+
+        # beyond the smoke config (ROADMAP "grow the trend gate's reach"):
+        # one SSM/RWKV architecture and one train_4k-shaped run, sync vs
+        # pure staleness-1 (no double buffer: its warm-up ticks have
+        # nothing to hide on host links), so attention- or scan-kernel
+        # regressions surface in the per-model trend series.  Floors are
+        # looser than the primary arm — these configs run fewer steady
+        # steps under the same ~10% CI timing noise.
+        extra_steps = 10 if quick else 20
+        for slug, arch, gb, seq in (
+                ("rwkv6", "rwkv6-7b", 8, 64),
+                ("phi3_mini_4k", "phi3-mini-3.8b", 16, 256)):
+            t_sync, l_sync, _ = _launch_tok_s(
+                ["--arch", arch, "--staleness", "0"], extra_steps,
+                global_batch=gb, seq=seq)
+            t_async, l_async, _ = _launch_tok_s(
+                ["--arch", arch, "--staleness", "1", "--no-double-buffer"],
+                extra_steps, global_batch=gb, seq=seq)
+            gain = t_async / max(t_sync, 1e-9)
+            mrec = {"suite": "async_overlap", "kind": "measured",
+                    "model": slug, "arch": arch,
+                    "global_batch": gb, "seq": seq,
+                    "tok_s_sync": t_sync, "tok_s_async_nodb": t_async,
+                    "loss_sync": l_sync, "loss_async": l_async,
+                    "measured_gain": gain, "steps": extra_steps}
+            assert gain >= 0.6, mrec
+            assert t_sync > 0 and t_async > 0, mrec
+            lines.append(row(f"async_overlap/runtime/{slug}",
+                             1.0 / max(t_async, 1e-9),
+                             sync_tok_s=f"{t_sync:.1f}",
+                             nodb_tok_s=f"{t_async:.1f}",
+                             gain=f"{gain:.2f}x"))
+            records.append(mrec)
     return lines, records
 
 
@@ -310,27 +359,108 @@ def _profile_gap(quick: bool):
     from repro.core.simulator import prediction_gap
     from repro.launch.profile import measure_model
 
-    cfg = get_smoke_config("phi3-mini-3.8b")
-    seq, B, mb, max_batch = 64, 8, 2, 8
-    mp = measure_model(cfg, seq, batch_sizes=(1, 2, 4),
-                       repeats=1 if quick else 3, replicate=4)
-    table = LayerTable.from_model_config(cfg, seq)
-    measured = mp.to_profile(table, max_batch)
-    analytic = Profile.analytic(table, measured.cluster, max_batch)
-
+    # smoke attention + RWKV + a train_4k-shaped sequence, so both kernel
+    # families and the long-sequence regime feed the per-model trend series
+    configs = [("phi3_mini", "phi3-mini-3.8b", 64),
+               ("rwkv6", "rwkv6-7b", 64),
+               ("phi3_mini_4k", "phi3-mini-3.8b", 256)]
     lines, records = [], []
-    for src, prof in (("analytic", analytic), ("measured", measured)):
-        plan = plan_hpp(prof, B, mb, arch=cfg.name)
-        gap = prediction_gap(plan, measured)
+    for slug, arch, seq in configs:
+        cfg = get_smoke_config(arch)
+        B, mb, max_batch = 8, 2, 8
+        mp = measure_model(cfg, seq, batch_sizes=(1, 2, 4),
+                           repeats=1 if quick else 3, replicate=4)
+        table = LayerTable.from_model_config(cfg, seq)
+        measured = mp.to_profile(table, max_batch)
+        analytic = Profile.analytic(table, measured.cluster, max_batch)
+
+        for src, prof in (("analytic", analytic), ("measured", measured)):
+            plan = plan_hpp(prof, B, mb, arch=cfg.name)
+            gap = prediction_gap(plan, measured)
+            lines.append(row(
+                f"profile_gap/{slug}/{src}", plan.latency,
+                predicted_s=f"{gap['predicted_s']:.4f}",
+                measured_s=f"{gap['reference_s']:.4f}",
+                gap=f"{gap['gap_ratio']:.2f}x",
+                stages=len(plan.stages)))
+            records.append({"suite": "profile_gap", "model": slug,
+                            "planned_on": src,
+                            "arch": cfg.name, "seq": seq, "global_batch": B,
+                            "stages": len(plan.stages), **gap})
+    return lines, records
+
+
+def _portfolio(quick: bool, runtime: bool = True):
+    """Closed-loop portfolio suite (DESIGN.md §12).
+
+    *Predicted* (deterministic): ``PlanPortfolio.enumerate`` on the same
+    planning inputs ``repro.launch.train --smoke --devices 8 --plan``
+    uses (analytic env D, smoke config) — records the candidate set, the
+    dedupe rate and the analytic first choice, so a planner change that
+    silently drops a strategy family moves this record.
+
+    *Measured* (recorded + gated): a ``--portfolio 3 --probation-rounds
+    2`` subprocess; its ``PORTFOLIO {json}`` line carries the probation
+    outcome.  The gates — measured winner no slower than the analytic
+    first choice's measured time, and training state bit-identical after
+    the full K-plan probation — are the two invariants the tentpole
+    promises."""
+    import json
+
+    from repro.configs import get_smoke_config
+    from repro.core.hardware import ENVS as HW_ENVS
+    from repro.core.portfolio import PlanPortfolio
+    from repro.core.profiler import LayerTable
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    table = LayerTable.from_model_config(cfg, 64)
+    prof_d = Profile.analytic(table, HW_ENVS["D"]().sorted_by_memory(),
+                              max_batch=8)
+    model_axis = 4                       # --devices 8 -> (data=2, model=4)
+    n_periods = cfg.n_layers // len(cfg.pattern)
+    divisors = {d for d in range(1, model_axis + 1)
+                if model_axis % d == 0 and d <= n_periods}
+    pf = PlanPortfolio.enumerate(prof_d, 8, 2, arch=cfg.name,
+                                 allowed_stages=divisors)
+    finalists = pf.finalists(3)
+    first = finalists[0]
+    rec = {"suite": "portfolio", "kind": "predicted",
+           "candidates": len(pf.candidates),
+           "enumerated": pf.n_enumerated,
+           "runnable": sum(1 for c in pf.candidates if c.runnable),
+           "families": [c.family for c in pf.candidates],
+           "first_choice": first.family,
+           "first_choice_predicted_s": first.predicted_s,
+           "finalist_spread":
+               finalists[-1].predicted_s / max(first.predicted_s, 1e-12)}
+    assert rec["candidates"] >= 3, rec
+    lines = [row("portfolio/predicted", first.predicted_s,
+                 candidates=rec["candidates"],
+                 enumerated=rec["enumerated"],
+                 first=first.family,
+                 spread=f"{rec['finalist_spread']:.2f}x")]
+    records = [rec]
+
+    if runtime:
+        steps = 6 if quick else 12
+        out = _launch(["--portfolio", "3", "--probation-rounds", "2"], steps)
+        m = re.search(r"^PORTFOLIO (\{.*\})$", out, re.M)
+        assert m, out[-2000:]
+        prec = json.loads(m.group(1))
+        mrec = {"suite": "portfolio", "kind": "measured",
+                "model": "phi3_mini", "steps": steps, **prec}
+        # the two tentpole invariants, gated in CI
+        assert mrec["winner_measured_s"] <= \
+            mrec["first_choice_measured_s"] * (1 + 1e-9), mrec
+        assert mrec["bit_identical"], mrec
         lines.append(row(
-            f"profile_gap/{src}", plan.latency,
-            predicted_s=f"{gap['predicted_s']:.4f}",
-            measured_s=f"{gap['reference_s']:.4f}",
-            gap=f"{gap['gap_ratio']:.2f}x",
-            stages=len(plan.stages)))
-        records.append({"suite": "profile_gap", "planned_on": src,
-                        "arch": cfg.name, "seq": seq, "global_batch": B,
-                        "stages": len(plan.stages), **gap})
+            "portfolio/runtime", mrec["winner_measured_s"],
+            winner=mrec["winner"],
+            first=mrec["first_choice"],
+            gain=f"{mrec['measured_winner_gain']:.2f}x",
+            finalists=mrec["finalists"],
+            bit_identical=mrec["bit_identical"]))
+        records.append(mrec)
     return lines, records
 
 
@@ -351,6 +481,9 @@ def run_structured(quick: bool = False, runtime: bool = True):
     l4, r4 = _profile_gap(quick)
     lines += l4
     records += r4
+    l6, r6 = _portfolio(quick, runtime=runtime)
+    lines += l6
+    records += r6
     return lines, records
 
 

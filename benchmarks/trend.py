@@ -102,8 +102,14 @@ def extract_metrics(doc: dict) -> dict[str, float]:
         groups: dict[str, list] = {}
         for rec in records:
             if isinstance(rec, dict):
-                groups.setdefault(str(rec.get("suite", "rec")),
-                                  []).append(rec)
+                sub = str(rec.get("suite", "rec"))
+                groups.setdefault(sub, []).append(rec)
+                # per-model series alongside the plain aggregate, so a
+                # regression confined to one architecture (e.g. the RWKV
+                # scan kernel) isn't averaged away by the others
+                if rec.get("model"):
+                    groups.setdefault(f"{sub}.{rec['model']}",
+                                      []).append(rec)
         for name, recs in groups.items():
             _aggregate(out, name, recs)
     elif suite == "serve":

@@ -445,7 +445,11 @@ def plan_homogeneous_hpp(profile: Profile, global_batch: int, micro_batch: int,
         i, j = st.layers
         ef = max(profile.t_fwd(d, y, i, j) for d, y in zip(st.group, st.alloc))
         eb = max(profile.t_bwd(d, y, i, j) for d, y in zip(st.group, st.alloc))
-        ta = st.ta if include_allreduce else st.ta
+        # Dapple charges the synchronous AllReduce re-priced on the real
+        # devices; PipeDream's async weight updates keep it off the round's
+        # critical path entirely.
+        ta = (_stage_ta(profile, i, j, st.group, None, eb * plan.n_micro)
+              if include_allreduce else 0.0)
         steps.append(Step("exec", ef, eb, ta, st.group, st.layers, st.alloc))
     lat = round_latency(tuple(steps), plan.n_micro)
     return Plan(arch, plan.stages, tuple(steps), micro_batch, plan.n_micro,

@@ -180,6 +180,14 @@ class Profile:
             if not np.isfinite(s).all() or (s < 0).any():
                 raise ProfileError(
                     f"{name} contains negative or non-finite layer times")
+            zero = np.argwhere(s[:, 1:, :].sum(axis=2) == 0.0)
+            if zero.size:
+                d, b = (int(x) for x in zero[0])
+                raise ProfileError(
+                    f"{name} has a zero measured-time row: device {d} at "
+                    f"batch {b + 1} totals 0s across all {L} layers — an "
+                    f"all-zero sweep row means the measurement failed for "
+                    f"that (device, batch); re-profile or drop the device")
             arrs.append(s)
         tf_samples, tb_samples = arrs
         tf = np.zeros((D, max_batch + 1, L + 1))
@@ -265,6 +273,60 @@ def extend_profile(profile: Profile, device: DeviceProfile,
     elif not measured_row and source == "measured":
         source = "mixed"
     return Profile(table, cluster, mb, tfp, tbp, source)
+
+
+def subset_profile(profile: Profile, ranks: Sequence[int]) -> Profile:
+    """``profile`` restricted to cluster ranks ``ranks`` (order preserved).
+
+    The post-churn planning view: after failures/evictions the session's
+    profile still carries every original device, but a portfolio auction
+    must only enumerate plans over the survivors.  Device ``i`` of the
+    returned profile is original rank ``ranks[i]``; use
+    ``portfolio.renumber_plan(plan, ranks)`` to map a plan made on the
+    subset back into the parent cluster's numbering."""
+    ranks = tuple(int(r) for r in ranks)
+    D = len(profile.cluster.devices)
+    if not ranks or len(set(ranks)) != len(ranks) or \
+            any(not 0 <= r < D for r in ranks):
+        raise ProfileError(
+            f"ranks {ranks} must be distinct indices into 0..{D - 1}")
+    bwm = profile.cluster.bw_matrix
+    if bwm is not None:
+        bwm = tuple(tuple(bwm[a][b] for b in ranks) for a in ranks)
+    cluster = Cluster(tuple(profile.cluster.devices[r] for r in ranks),
+                      profile.cluster.bandwidth, bwm)
+    idx = np.asarray(ranks)
+    return Profile(profile.table, cluster, profile.max_batch,
+                   profile.tf_prefix[idx], profile.tb_prefix[idx],
+                   profile.source)
+
+
+def resolve_profile(measured, cfg, seq_len: int, table: LayerTable,
+                    max_batch: int, *, label: str = "measured profile",
+                    fallback_note: str = "") -> Profile | None:
+    """Turn a loaded ``MeasuredProfile`` into a planner ``Profile``, or
+    ``None`` (with a warning) when it no longer describes this run.
+
+    The stale-artifact policy in one place: fingerprint mismatches and
+    densification errors degrade to the analytic fallback with a warning —
+    never a crash — because a stale measurement is an expected state (model
+    edited, different host), not a bug."""
+    import warnings
+
+    if measured is None:
+        return None
+    issues = measured.compatibility_issues(cfg, seq_len)
+    prof = None
+    if not issues:
+        try:
+            prof = measured.to_profile(table, max_batch)
+        except ProfileError as e:
+            issues = [str(e)]
+    if prof is None:
+        warnings.warn(
+            f"{label} is stale or incompatible — falling back to the "
+            f"analytic profile{fallback_note}: " + "; ".join(issues))
+    return prof
 
 
 # ---------------------------------------------------------------------------

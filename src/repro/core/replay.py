@@ -202,6 +202,17 @@ class MembershipController:
         self._probe_sent = 0.0
         self.events: list[tuple[str, float, int | None]] = [
             ("monitoring", now, None)]
+        # called as auction_hook(kind, rank) after every COMPLETED plan swap
+        # (crash recovery, accepted join, drain, evict) — rejected
+        # admissions change nothing, so they don't fire.  The portfolio
+        # session registers a callback here to re-arbitrate the post-churn
+        # analytic replan against the runner-up with a cheap 2-candidate
+        # probation (DESIGN.md §12) instead of trusting the cost model.
+        self.auction_hook = None
+
+    def _post_swap(self, kind: str, rank: int | None) -> None:
+        if self.auction_hook is not None:
+            self.auction_hook(kind, rank)
 
     def _transition(self, state: str, now: float, rank: int | None = None):
         self.state = state
@@ -270,6 +281,7 @@ class MembershipController:
         self._transition("resuming", t, failed_rank)
         executor.resume(report, migration)
         self._transition("monitoring", t, None)
+        self._post_swap("failed", failed_rank)
         return report, migration
 
     def _on_joined(self, event: DeviceJoined, executor, now: float):
@@ -298,6 +310,7 @@ class MembershipController:
             for d in st.group:
                 self.last_beat.setdefault(d, t)
         self._transition("monitoring", t, None)
+        self._post_swap("joined", None)
         return decision, migration
 
     def _on_departing(self, rank: int, executor, now: float, *,
@@ -323,6 +336,7 @@ class MembershipController:
         executor.resume(report, migration)
         self.last_beat.pop(rank, None)
         self._transition("monitoring", t, None)
+        self._post_swap("drained" if graceful else "evicted", rank)
         return report, migration
 
 

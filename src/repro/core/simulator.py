@@ -297,6 +297,28 @@ def prediction_gap(plan: Plan, reference: Profile,
     }
 
 
+def observed_gap(plan: Plan, reference: Profile, observed_s: float) -> dict:
+    """``prediction_gap``'s closed-loop sibling: compare a *measured* round
+    latency against the plan re-priced on ``reference``.
+
+    Where ``prediction_gap`` compares two analytic pricings (planning
+    profile vs reference profile), this compares the reference pricing
+    against what the live mesh actually measured — the quantity the
+    portfolio drift watchdog (DESIGN.md §12) tracks.  ``gap_ratio`` is
+    observed/predicted; host wall-seconds and simulated-cluster seconds
+    live on different scales, so consumers should track *drift* of this
+    ratio, not its absolute value.
+    """
+    repriced = reprice_plan(plan, reference)
+    return {
+        "reference_source": reference.source,
+        "predicted_s": repriced.latency,
+        "observed_s": observed_s,
+        "gap_ratio": (observed_s / repriced.latency
+                      if repriced.latency > 0 else float("inf")),
+    }
+
+
 def reprice_serve_plan(plan, profile: Profile):
     """Re-price a ``ServePlan``'s latency figures under ``profile``.
 

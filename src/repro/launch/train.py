@@ -140,6 +140,22 @@ def main():
                          "lead device)")
     ap.add_argument("--backup-every", type=int, default=5,
                     help="stage-replication cadence in steps (with --events)")
+    ap.add_argument("--portfolio", type=int, default=0, metavar="K",
+                    help="closed-loop portfolio planning (DESIGN.md §12): "
+                         "enumerate every strategy family, give the top-K "
+                         "finalists a live probation window each, and "
+                         "install the measured winner before training. "
+                         "Requires --plan")
+    ap.add_argument("--probation-rounds", type=int, default=2, metavar="N",
+                    help="timed rounds per finalist in a portfolio "
+                         "probation (plus one warmup round that the robust "
+                         "stat trims)")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="arm the portfolio drift watchdog: re-open the "
+                         "auction when the EWMA of observed/predicted round "
+                         "latency drifts more than this fraction from its "
+                         "baseline (default: off — probe once, keep the "
+                         "winner)")
     args = ap.parse_args()
     events = _parse_events(args.events)
     if args.fail_at is not None:     # old flags kept as sugar
@@ -155,6 +171,9 @@ def main():
     if args.compress == "auto" and not args.plan:
         raise SystemExit("--compress auto requires --plan (the planner "
                          "prices the compressed vs raw wire)")
+    if args.portfolio and not args.plan:
+        raise SystemExit("--portfolio requires --plan (the auction probes "
+                         "re-lowered planner Plans)")
 
     from repro import checkpoint
     from repro.configs import get_config, get_smoke_config
@@ -200,28 +219,17 @@ def main():
     opt = AdamW(lr=cosine_schedule(args.lr, warmup=min(20, args.steps // 5),
                                    total=args.steps))
     if args.plan:
-        import warnings
-
         from repro.core.hardware import ENVS
         from repro.core.lowering import plan_to_train_step
         from repro.core.planner import plan_hpp
-        from repro.core.profiler import LayerTable, Profile, ProfileError
+        from repro.core.profiler import (LayerTable, Profile,
+                                         resolve_profile)
 
         table = LayerTable.from_model_config(cfg, args.seq)
         max_batch = max(args.global_batch, 1)
-        prof = None
-        if measured is not None:
-            issues = measured.compatibility_issues(cfg, args.seq)
-            if not issues:
-                try:
-                    prof = measured.to_profile(table, max_batch)
-                except ProfileError as e:
-                    issues = [str(e)]
-            if prof is None:
-                warnings.warn(
-                    f"measured profile {args.profile} is stale or "
-                    f"incompatible — falling back to the analytic profile "
-                    f"(env {args.env}): " + "; ".join(issues))
+        prof = resolve_profile(measured, cfg, args.seq, table, max_batch,
+                               label=f"measured profile {args.profile}",
+                               fallback_note=f" (env {args.env})")
         if prof is not None:
             print(f"profile=measured({args.profile}, "
                   f"{len(prof.cluster.devices)} devices, "
@@ -272,10 +280,17 @@ def main():
                            quant_tile=args.quant_tile,
                            bucket_mb=args.bucket_mb,
                            error_feedback=args.error_feedback)
-        if events:
+        if events or args.portfolio:
             from repro.runtime.session import PipelineSession
+            watchdog = None
+            if args.portfolio and args.drift_threshold is not None:
+                from repro.core.portfolio import DriftWatchdog
+                watchdog = DriftWatchdog(threshold=args.drift_threshold)
             session = PipelineSession(cfg, mesh, plan, prof, optimizer=opt,
                                       backup_every=args.backup_every,
+                                      portfolio_k=args.portfolio,
+                                      probation_window=args.probation_rounds,
+                                      drift_watchdog=watchdog,
                                       staleness=args.staleness,
                                       double_buffer=args.double_buffer,
                                       **compress_kw)
@@ -478,6 +493,30 @@ def _run_session(session, cfg, args, events) -> float:
     session.init(key)
     ds = SyntheticLM(cfg.vocab_size, args.seq, n_codebooks=cfg.n_codebooks,
                      prefix_len=cfg.prefix_len, prefix_dim=frontend_dim(cfg))
+    if getattr(args, "portfolio", 0):
+        # opening auction (DESIGN.md §12): probe the top-K finalists on the
+        # live mesh before the first training step; the probation is
+        # invisible to training state — pinned by the bit-identity line the
+        # portfolio-smoke CI job greps for
+        import json
+
+        before = session.canonical_leaves()
+        report = session.probe_portfolio(ds.batch(0, args.global_batch),
+                                         k=args.portfolio,
+                                         window=args.probation_rounds)
+        after = session.canonical_leaves()
+        identical = all(
+            np.array_equal(a, b)
+            for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)))
+        w, f = report.winner, report.first_choice
+        print(f"portfolio: winner installed {w.family} measured "
+              f"{w.measured_s * 1e3:.2f}ms/round (analytic first choice "
+              f"{f.family} measured {f.measured_s * 1e3:.2f}ms; "
+              f"{len(report.results)} finalists of {report.n_candidates} "
+              f"candidates, {report.window}-round probation)")
+        print(f"portfolio: probation state bit-identical: {identical}")
+        rec = dict(report.to_record(), bit_identical=identical)
+        print("PORTFOLIO " + json.dumps(rec))
     loss = float("nan")
     seen_recoveries = 0
     pending = sorted(events, key=lambda e: e[0])
@@ -485,7 +524,9 @@ def _run_session(session, cfg, args, events) -> float:
     t0 = time.perf_counter()
     t_warm = None
     # same compile accounting as the main path: the staleness path has two
-    # jitted entry points (first-round grad_fn, then async_step_fn)
+    # jitted entry points (first-round grad_fn, then async_step_fn); the
+    # spec is read AFTER any opening auction — the installed winner's
+    # semantics decide which entry points exist
     n_compile = 2 if session.ts.spec.staleness >= 1 else 1
     for step in range(args.steps):
         while pending and pending[0][0] <= step:

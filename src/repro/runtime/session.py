@@ -49,6 +49,7 @@ params or moments.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 import warnings
 
 import jax
@@ -63,7 +64,8 @@ from repro.core.lowering import (DIRECT_SOURCE, LoweredPlan, LoweringError,
                                  period_positions, reconcile_migration,
                                  relower, snap_plan)
 from repro.core.planner import Plan
-from repro.core.profiler import Profile, ProfileError, extend_profile
+from repro.core.profiler import (Profile, ProfileError, extend_profile,
+                                 subset_profile)
 from repro.core.replay import (ADMISSION_HYSTERESIS, AdmissionDecision,
                                DeviceDraining, DeviceEvicted, DeviceFailed,
                                DeviceJoined, MembershipController,
@@ -125,7 +127,9 @@ class PipelineSession:
 
     def __init__(self, cfg: ModelConfig, production_mesh, plan: Plan,
                  profile: Profile, *, optimizer: AdamW | None = None,
-                 backup_every: int = 5, check: bool = True, **spec_kw):
+                 backup_every: int = 5, check: bool = True,
+                 portfolio_k: int = 0, probation_window: int = 2,
+                 drift_watchdog=None, **spec_kw):
         self.cfg = cfg
         self.production_mesh = production_mesh
         self.profile = profile
@@ -133,6 +137,16 @@ class PipelineSession:
         self.backup_every = backup_every
         self.spec_kw = spec_kw
         self.model_axis = production_mesh.shape["model"]
+        # -- portfolio auctions (DESIGN.md §12) --------------------------
+        # portfolio_k > 0 arms the closed loop: a drift-watchdog trip or a
+        # completed membership swap marks an auction pending, and the next
+        # step() (which has a batch to probe with) runs it before training
+        self.portfolio_k = portfolio_k
+        self.probation_window = probation_window
+        self.watchdog = drift_watchdog
+        self.auctions: list = []           # ProbeReports, in order
+        self._auction_pending = False
+        self._auction_k = portfolio_k
 
         self.ts = None
         self.step_cache_hits = 0
@@ -157,6 +171,12 @@ class PipelineSession:
         self._pending_failure: int | None = None
         self.coordinator = MembershipController(sorted(
             d for st in self.plan.stages for d in st.group))
+        if self.portfolio_k:
+            # post-churn replans re-arbitrate analytic-vs-runner-up with a
+            # cheap 2-candidate probation at the next step
+            self.coordinator.auction_hook = self._on_membership_swap
+        if self.watchdog is not None:
+            self.watchdog.install(self.plan, self.profile)
         self.recoveries: list[RecoveryOutcome] = []    # crash recoveries
         self.memberships: list[RecoveryOutcome] = []   # every transition
         # transition-in-flight scratch (set by *_replan, read by migrate)
@@ -171,6 +191,16 @@ class PipelineSession:
     # -- installation ------------------------------------------------------
 
     def _install(self, plan: Plan, lowered: LoweredPlan) -> None:
+        # a pending bounded-staleness gradient round was computed under the
+        # OLD step's sharding and bucketing: apply it with the old step
+        # BEFORE anything about the runtime changes.  The membership paths
+        # flush at their own barrier, but rapid back-to-back re-lowerings
+        # with no membership event in between — portfolio probation adopts
+        # K plans in a row — reach _install directly, and a buffer carried
+        # across the swap would be applied under the wrong spec.
+        # (getattr: __init__ installs once before the buffer attr exists.)
+        if getattr(self, "_grad_buf", None) is not None:
+            self.flush_gradients()
         self.lowered = lowered
         # the deployed plan owns the *snapped* layer ranges — replaying from
         # it keeps the analytical old-ownership aligned with the runtime
@@ -184,6 +214,11 @@ class PipelineSession:
             # bookkeeping above changes (device groups live in the Plan,
             # not in the TrainSpec)
             self.step_cache_hits += 1
+            # same spec means the same bucketing, so carried EF residuals
+            # still line up — but repair the invariant if a prior swap
+            # dropped them (bucketed steps always need a residual tree)
+            if self.ts.spec.bucketed and self._ef is None:
+                self._ef = self.ts.init_ef()
             return
         self.ts = _assemble_train_step(self.cfg, self.production_mesh, spec,
                                        self.optimizer, zero_opt=False)
@@ -215,6 +250,13 @@ class PipelineSession:
         """
         if self._pending_failure is not None:
             self.recover_now()
+        if self._auction_pending and self.portfolio_k:
+            # a watchdog trip or membership swap re-opened the auction;
+            # this step's batch doubles as the probe batch
+            self._auction_pending = False
+            self.probe_portfolio(batch_np, k=self._auction_k,
+                                 window=self.probation_window)
+        t0 = _time.perf_counter() if self.watchdog is not None else 0.0
         # ts.shard_batch re-packs for the current plan's (possibly
         # heterogeneous, possibly just-replayed) per-shard allocation
         batch = self.ts.shard_batch(batch_np)
@@ -248,6 +290,11 @@ class PipelineSession:
         else:
             self.params, self.opt_state, loss, metrics = self.ts.step_fn(
                 self.params, self.opt_state, batch)
+        if self.watchdog is not None:
+            jax.block_until_ready(loss)
+            if self.watchdog.observe(_time.perf_counter() - t0):
+                self._auction_pending = True
+                self._auction_k = self.portfolio_k or 2
         self.step_count += 1
         self.clock += max(self.plan.latency, self.coordinator.heartbeat_period)
         for r in self.live_ranks:
@@ -271,6 +318,208 @@ class PipelineSession:
             self.params, self.opt_state, self._grad_buf)
         self._grad_buf = None
         return True
+
+    # -- portfolio auctions (DESIGN.md §12) --------------------------------
+
+    def _on_membership_swap(self, kind: str, rank: int | None) -> None:
+        """``MembershipController.auction_hook``: a completed churn swap
+        installed an analytically-replanned pipeline — queue a cheap
+        2-candidate auction so the measured mesh, not the cost model,
+        confirms (or overturns) that choice at the next step."""
+        self._auction_pending = True
+        self._auction_k = 2
+
+    def _plan_spec_kw(self, plan: Plan) -> dict:
+        """Spec kwargs with ``plan``'s gradient-sync and wire semantics
+        merged in.  The TrainSpec knobs (staleness, compression) normally
+        come from the constructor's ``spec_kw`` — a portfolio candidate
+        carries its own, which must win, or "installing" an async or
+        compressed finalist would only swap the plan-side bookkeeping while
+        the compiled step kept the old semantics."""
+        kw = dict(self.spec_kw)
+        kw["staleness"] = getattr(plan, "staleness", 0)
+        comp = getattr(plan, "compress", None)
+        if comp is not None:
+            kw.update(compress=comp.fmt, quant_tile=comp.tile,
+                      bucket_mb=comp.bucket_mb,
+                      error_feedback=comp.error_feedback)
+        else:
+            # uncompressed candidate: raw wire, but keep any bucketed
+            # AllReduce the caller configured (bucketing without
+            # quantization is a valid standalone mode)
+            kw["compress"] = "none"
+        return kw
+
+    def _adopt_plan(self, plan: Plan, *, reseed: bool = True) -> None:
+        """Swap the session onto ``plan`` with no membership event: flush
+        in-flight staleness-1 gradients, migrate period params and
+        optimizer moments by the same pure gather a churn transition uses,
+        re-pad vocab leaves when the stage count re-widths tp, merge the
+        plan's sync/compression semantics into the spec, and re-install
+        (jitted-step cache applies).  This is the probation primitive —
+        called K times back-to-back by ``probe_portfolio``."""
+        self.flush_gradients()
+        old_lp = self.lowered
+        new_lp = relower(old_lp, plan, self.cfg, self.model_axis)
+        new_params, _ = migrate_params(self.params, old_lp, new_lp)
+        new_opt = migrate_opt_state(self.opt_state, old_lp, new_lp)
+        old_tp = self.ts.spec.plan.tp
+        new_tp = self.model_axis // new_lp.stage
+        if new_tp != old_tp:
+            new_params = _repad_vocab(new_params, self.cfg, new_tp)
+            new_opt = _repad_opt(new_opt, self.cfg, new_tp)
+        self.spec_kw = self._plan_spec_kw(plan)
+        self._install(plan, new_lp)
+        shardings = named(self.ts.mesh, self.ts.param_specs)
+        self.params = jax.device_put(new_params, shardings)
+        opt_sh = _opt_shardings(self.optimizer,
+                                jax.eval_shape(lambda: new_params), shardings)
+        self.opt_state = jax.device_put(new_opt, opt_sh)
+        if reseed:
+            self._reseed_backups(old_lp)
+
+    def _probe_rounds(self, batch_np: dict, window: int) -> list[float]:
+        """Time ``window + 1`` executions of the installed plan's entry
+        point WITHOUT committing any result — params, moments, EF residuals
+        and the staleness buffer are all left untouched, so a probation
+        sweep is invisible to training state (the bit-identity invariant).
+        The extra first round absorbs compilation / a cold step cache;
+        ``portfolio.robust_latency`` trims it."""
+        batch = self.ts.shard_batch(batch_np)
+        times = []
+        for _ in range(window + 1):
+            t0 = _time.perf_counter()
+            if self.ts.spec.staleness >= 1:
+                out = (self.ts.grad_fn(self.params, batch, self._ef)
+                       if self.ts.spec.bucketed
+                       else self.ts.grad_fn(self.params, batch))
+            elif self.ts.spec.bucketed:
+                out = self.ts.step_fn(self.params, self.opt_state, self._ef,
+                                      batch)
+            else:
+                out = self.ts.step_fn(self.params, self.opt_state, batch)
+            jax.block_until_ready(out)
+            times.append(_time.perf_counter() - t0)
+        return times
+
+    def probe_portfolio(self, batch_np: dict | None = None, k: int = 3,
+                        window: int = 2, *, hysteresis: float = 0.0,
+                        measure=None):
+        """Run one portfolio auction (DESIGN.md §12): enumerate every
+        strategy family on the session profile, take the top-``k``
+        mesh-lowerable finalists by predicted round latency, give each a
+        live ``window``-round probation, and install the measured winner.
+
+        Finalists probe in predicted order under ``portfolio.pick_winner``'s
+        strict comparison, so ties keep the analytically-best plan and a
+        measurement matching the predictions never churns.  ``measure``
+        overrides the live probe with a callable ``measure(candidate) ->
+        seconds | [rounds]`` (tests inject synthetic measurements; the full
+        adopt/migrate cycle still runs).  After churn the enumeration is
+        restricted to the surviving ranks via ``profiler.subset_profile``.
+        Returns the ``portfolio.ProbeReport`` (also kept in
+        ``self.auctions``)."""
+        from repro.core.portfolio import (PlanPortfolio, ProbeReport,
+                                          ProbeResult, pick_winner, plan_key,
+                                          robust_latency)
+        if batch_np is None and measure is None:
+            raise ValueError("probe_portfolio needs a probe batch "
+                             "(or a measure= override)")
+        if self._pending_failure is not None:
+            self.recover_now()
+        self.flush_gradients()
+        # the auction's device pool is membership-derived (profile cluster
+        # minus crashed/departed ranks), NOT the installed plan's groups: a
+        # winner that idles a device (e.g. a 1-stage gpipe candidate) must
+        # not shrink every later auction's planning universe
+        pool = tuple(sorted(set(range(len(self.profile.cluster.devices)))
+                            - self._failed - self._departed))
+        prof, ranks = self.profile, None
+        if len(pool) < len(self.profile.cluster.devices):
+            ranks = pool
+            prof = subset_profile(self.profile, pool)
+        portfolio = PlanPortfolio.enumerate(
+            prof, self.lowered.global_batch, self.lowered.micro_batch,
+            arch=self.plan.arch or self.cfg.name,
+            allowed_stages=self._lowerable_stages, ranks=ranks)
+
+        def _lowerable(c) -> bool:
+            try:
+                relower(self.lowered, c.plan, self.cfg, self.model_axis)
+                return True
+            except (LoweringError, AllocationError):
+                return False
+
+        finalists = portfolio.finalists(k, runnable=_lowerable)
+        if not finalists:
+            raise RuntimeError("portfolio produced no mesh-lowerable "
+                               "finalist for this session")
+        incumbent_key = plan_key(self.plan)
+        pre_lp = self.lowered       # backups in the store are keyed by this
+        results: list[ProbeResult] = []
+        keys = []
+        for c in finalists:
+            self._adopt_plan(c.plan, reseed=False)
+            keys.append(plan_key(self.plan))       # snapped, like incumbent
+            if measure is not None:
+                m = measure(c)
+                rounds = (tuple(float(x) for x in m)
+                          if isinstance(m, (list, tuple)) else (float(m),))
+                measured = robust_latency(list(rounds),
+                                          warmup=1 if len(rounds) > 1 else 0)
+            else:
+                rounds = tuple(self._probe_rounds(batch_np, window))
+                measured = robust_latency(list(rounds))
+            results.append(ProbeResult(c.family, c.predicted_s, measured,
+                                       rounds))
+        best = pick_winner([r.measured_s for r in results], hysteresis)
+        if keys[best] != plan_key(self.plan):
+            # we finished probation on a non-winning finalist — swap back
+            self._adopt_plan(finalists[best].plan, reseed=False)
+        self._reseed_backups(pre_lp)
+        results[best] = dataclasses.replace(results[best], installed=True)
+        if self.watchdog is not None:
+            self.watchdog.install(self.plan, self.profile)
+        report = ProbeReport(tuple(results), best, len(portfolio.candidates),
+                             portfolio.n_enumerated, window,
+                             churned=keys[best] != incumbent_key)
+        self.auctions.append(report)
+        return report
+
+    def canonical_leaves(self) -> dict:
+        """Training state in plan-independent canonical form, as numpy:
+        period rows re-ordered to canonical period order and vocab padding
+        stripped from the embed/head leaves (both are arrangement artifacts
+        of the installed plan's stage split / tp width).  Two sessions hold
+        bit-identical training state iff these trees are equal — the
+        comparison a probation cycle is pinned against."""
+        import numpy as np
+
+        pos = period_positions(self.lowered)
+        order = np.asarray([pos[t] for t in range(len(pos))])
+        axes = vocab_axes(self.cfg)
+
+        def canon(tree: dict) -> dict:
+            out = {}
+            for key, leaf in tree.items():
+                if key == "periods":
+                    out[key] = jax.tree.map(
+                        lambda x: np.asarray(x)[order], leaf)
+                elif key in axes:
+                    out[key] = jax.tree.map(
+                        np.asarray,
+                        strip_vocab_leaf(leaf, axes[key], self.cfg))
+                else:
+                    out[key] = jax.tree.map(np.asarray, leaf)
+            return out
+
+        trees = {"params": canon(self.params)}
+        if isinstance(self.opt_state, AdamWState):
+            trees["m"] = canon(self.opt_state.m)
+            trees["v"] = canon(self.opt_state.v)
+        elif isinstance(self.opt_state, SGDState):
+            trees["mom"] = canon(self.opt_state.mom)
+        return trees
 
     # -- replication -------------------------------------------------------
 

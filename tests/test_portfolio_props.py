@@ -1,0 +1,249 @@
+"""Property tests: the closed-loop plan portfolio (DESIGN.md §12).
+
+Four invariants the tentpole promises, each pinned at the level where it
+lives:
+
+* **winner optimality** (pure + session): ``pick_winner`` returns the
+  earliest measured argmin, so the installed plan's measured latency is
+  never above any probed finalist's;
+* **tie stability** (pure + session): measurements equal to predictions
+  keep the analytically-best finalist, and a repeat auction under the
+  same measurements never churns the installed plan;
+* **probation bit-identity** (session): a full K-plan probation sweep —
+  adopt, migrate, probe, swap back — leaves params and Adam moments
+  bit-identical to a never-probed twin trained on the same batches;
+* **reprice stability** (pure): ``simulator.reprice_plan`` is idempotent
+  and ``portfolio.plan_key`` is invariant under repricing on any
+  profile, so the structural dedupe can never split one candidate into
+  two.
+
+Uses hypothesis when installed, seeded ``random`` otherwise — same test
+bodies either way (the ``test_membership_props`` pattern).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.hardware import A100, JETSON_NX, JETSON_TX2, Cluster
+from repro.core.portfolio import (PlanPortfolio, pick_winner, plan_key,
+                                  robust_latency)
+from repro.core.profiler import LayerTable, Profile
+from repro.core.simulator import reprice_plan
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without hypothesis: seeded fallback
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# pure level: pick_winner / robust_latency / reprice stability
+# ---------------------------------------------------------------------------
+
+
+def _check_pick_winner(measured) -> None:
+    best = pick_winner(measured)
+    lo = min(measured)
+    assert measured[best] == lo                      # measured argmin...
+    assert all(m > lo for m in measured[:best])      # ...at its earliest index
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(measured=hst.lists(hst.floats(1e-3, 10.0), min_size=1,
+                              max_size=8))
+    def test_pick_winner_is_earliest_measured_argmin(measured):
+        _check_pick_winner(measured)
+else:
+    @pytest.mark.parametrize("seed", range(16))
+    def test_pick_winner_is_earliest_measured_argmin(seed):
+        rng = random.Random(seed)
+        measured = [rng.uniform(1e-3, 10.0)
+                    for _ in range(rng.randint(1, 8))]
+        if seed % 3 == 0 and len(measured) > 1:      # force ties sometimes
+            measured[-1] = measured[0]
+        _check_pick_winner(measured)
+
+
+def test_pick_winner_tie_and_hysteresis():
+    # exact tie: the earlier (analytically better) finalist keeps the slot
+    assert pick_winner([1.0, 1.0, 1.0]) == 0
+    # a 5% faster challenger loses under a 10% hysteresis margin...
+    assert pick_winner([1.0, 0.95], hysteresis=0.10) == 0
+    # ...and wins once it clears it
+    assert pick_winner([1.0, 0.85], hysteresis=0.10) == 1
+
+
+def test_robust_latency_trims_warmup():
+    # the jit-compile spike in round 0 must not leak into the estimate
+    assert robust_latency([50.0, 1.0, 1.2, 1.1]) == pytest.approx(1.1)
+    # degenerate windows fall back to the full median rather than dying
+    assert robust_latency([2.0]) == 2.0
+    with pytest.raises(ValueError):
+        robust_latency([])
+
+
+_S = 32
+_DEVICE_POOL = (JETSON_NX, JETSON_TX2, A100)
+
+
+@pytest.fixture(scope="module")
+def smoke_table():
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    cfg = cfg.replace(n_layers=2 * len(cfg.pattern))
+    return cfg, LayerTable.from_model_config(cfg, _S)
+
+
+def _random_profile(smoke_table, rng):
+    cfg, table = smoke_table
+    devs = tuple(rng.choice(_DEVICE_POOL)
+                 for _ in range(rng.randint(2, 4)))
+    bw = rng.uniform(1e7, 1e9)
+    return Profile.analytic(table, Cluster(devs, bw), max_batch=8)
+
+
+def _check_reprice_stability(smoke_table, rng) -> None:
+    cfg, _ = smoke_table
+    prof_a = _random_profile(smoke_table, rng)
+    prof_b = _random_profile(smoke_table, rng)
+    pf = PlanPortfolio.enumerate(prof_a, 8, 2, arch=cfg.name)
+    assert pf.candidates, "portfolio enumerated nothing"
+    for c in pf.candidates:
+        if c.plan is None:
+            continue
+        once = reprice_plan(c.plan, prof_b)
+        twice = reprice_plan(once, prof_b)
+        # idempotent: pricing a repriced plan changes nothing
+        assert twice.latency == once.latency
+        assert [(s.ef, s.eb, s.ta) for s in twice.steps] == \
+               [(s.ef, s.eb, s.ta) for s in once.steps]
+        # the dedupe key never moves under repricing, on either profile
+        assert plan_key(once) == plan_key(c.plan)
+        assert plan_key(reprice_plan(c.plan, prof_a)) == plan_key(c.plan)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=hst.integers(0, 2**31 - 1))
+    def test_reprice_idempotent_and_key_stable(smoke_table, seed):
+        _check_reprice_stability(smoke_table, random.Random(seed))
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_reprice_idempotent_and_key_stable(smoke_table, seed):
+        _check_reprice_stability(smoke_table, random.Random(seed))
+
+
+# ---------------------------------------------------------------------------
+# session level: live auctions on a 1-host-device smoke session
+# ---------------------------------------------------------------------------
+
+_B = 8
+_STEPS_BEFORE = 2
+
+
+def _make_session():
+    from jax.sharding import Mesh
+
+    from repro.core.planner import plan_hpp
+    from repro.runtime.session import PipelineSession
+
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    cfg = cfg.replace(n_layers=2 * len(cfg.pattern))
+    table = LayerTable.from_model_config(cfg, _S)
+    prof = Profile.analytic(table, Cluster((JETSON_NX,) * 3, 1e9 / 8),
+                            max_batch=_B)
+    plan = plan_hpp(prof, _B, micro_batch=4, arch=cfg.name,
+                    allowed_stages={1})
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    session = PipelineSession(cfg, mesh, plan, prof, backup_every=1)
+    session.init(jax.random.PRNGKey(0))
+    return cfg, session
+
+
+def _canon_leaves(session):
+    return [np.asarray(x) for x in jax.tree.leaves(session.canonical_leaves())]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_winner_measured_never_above_any_finalist(seed):
+    """Synthetic measurements (full adopt/migrate cycle, injected clock):
+    the installed winner's measured latency is the finalists' minimum, and
+    re-auctioning under the same measurements never churns it."""
+    rng = random.Random(seed)
+    _, session = _make_session()
+    report = session.probe_portfolio(
+        k=3, measure=lambda c: rng.uniform(0.01, 1.0))
+    assert report.winner.installed
+    assert all(report.winner.measured_s <= r.measured_s
+               for r in report.results)
+    assert report.to_record()["measured_winner_gain"] >= 1.0
+
+    # same measurements again: the winner is already installed -> no churn
+    fixed = {r.family: r.measured_s for r in report.results}
+    again = session.probe_portfolio(
+        k=3, measure=lambda c: fixed.get(c.family, 2.0))
+    assert again.winner.family == report.winner.family
+    assert not again.churned
+
+
+def test_ties_keep_analytic_first_choice():
+    """Measurements that exactly match the predictions must keep the
+    analytically-best finalist: the cost model is only ever *overruled by
+    evidence*, never by noise-free agreement."""
+    _, session = _make_session()
+    report = session.probe_portfolio(k=3, measure=lambda c: c.predicted_s)
+    assert report.winner_index == 0
+    assert report.winner.family == report.first_choice.family
+    # the analytic best is now installed; a repeat tie auction cannot churn
+    again = session.probe_portfolio(k=3, measure=lambda c: c.predicted_s)
+    assert again.winner_index == 0
+    assert not again.churned
+    # and literal ties across all finalists also resolve to index 0
+    flat = session.probe_portfolio(k=3, measure=lambda c: 1.0)
+    assert flat.winner_index == 0
+
+
+@pytest.fixture(scope="module")
+def never_probed_twin():
+    """Reference state: same init, same batches, zero auctions."""
+    from repro.data import SyntheticLM
+
+    cfg, session = _make_session()
+    ds = SyntheticLM(cfg.vocab_size, _S)
+    for s in range(_STEPS_BEFORE):
+        session.step(ds.batch(s, _B))
+    return _canon_leaves(session)
+
+
+def test_probation_sweep_is_bit_identical(never_probed_twin):
+    """A full live K-plan probation (real probe rounds, k=2, 1-round
+    window) between training steps leaves params + Adam moments
+    bit-identical to the never-probed twin, and the session still trains
+    on the installed winner."""
+    from repro.data import SyntheticLM
+
+    cfg, session = _make_session()
+    ds = SyntheticLM(cfg.vocab_size, _S)
+    for s in range(_STEPS_BEFORE):
+        session.step(ds.batch(s, _B))
+
+    report = session.probe_portfolio(ds.batch(_STEPS_BEFORE, _B),
+                                     k=2, window=1)
+    assert report.winner.installed
+    assert len(report.results) >= 1
+    assert all(len(r.rounds) == 2 for r in report.results)
+
+    ours = _canon_leaves(session)
+    assert len(ours) == len(never_probed_twin)
+    for a, b in zip(ours, never_probed_twin):
+        assert np.array_equal(a, b)
+
+    loss, _ = session.step(ds.batch(_STEPS_BEFORE, _B))
+    assert np.isfinite(loss)

@@ -1,0 +1,149 @@
+"""Regression tests for prediction-gap edge cases (DESIGN.md §12).
+
+Three failure modes the closed-loop portfolio machinery must degrade
+through gracefully, pinned so they stay behaviors and not crashes:
+
+* a stale/incompatible measured-profile artifact resolves to the analytic
+  fallback with a warning (``profiler.resolve_profile``), never an
+  exception — a stale measurement is an expected state, not a bug;
+* an all-zero measured sweep row (a silently failed measurement) is
+  rejected by ``Profile.measured`` with an error naming the device and
+  batch, instead of producing a profile that prices that device as free
+  and magnetizes every planner toward it;
+* the gap of a plan against the profile it was just repriced on is
+  *exactly* zero (``gap_ratio == 1.0`` bit-for-bit) — repricing is
+  idempotent, so the drift watchdog's baseline can't self-drift.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import JETSON_NANO, JETSON_NX, Cluster
+from repro.core.planner import plan_hpp
+from repro.core.profiler import (LayerCost, LayerTable, MeasuredProfile,
+                                 Profile, ProfileError, config_fingerprint,
+                                 device_fingerprint, resolve_profile)
+from repro.core.simulator import observed_gap, prediction_gap, reprice_plan
+from repro.models import AttentionConfig, LayerSpec, ModelConfig
+
+TINY = ModelConfig(name="tiny", n_layers=2, d_model=32, vocab_size=64,
+                   d_ff=64,
+                   attn=AttentionConfig(n_heads=2, n_kv_heads=2, head_dim=16),
+                   pattern=(LayerSpec(),))
+
+
+def _table(L=3):
+    return LayerTable("m", tuple(
+        LayerCost(f"l{i}", 1e6 * (i + 1), 1e4, 1e3) for i in range(L)))
+
+
+def _mp(D=2, batches=(1, 2, 4), L=3, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(1e-4, 1e-3, size=(D, 1, L))
+    tf = base * np.asarray(batches, float)[None, :, None]
+    defaults = dict(
+        arch="m", seq_len=16, batch_sizes=tuple(batches),
+        layer_names=tuple(f"l{i}" for i in range(L)), tf=tf, tb=2.0 * tf,
+        device_names=tuple(f"cpu:{d}" for d in range(D)),
+        config_hash="cfg0", device_hash="dev0",
+        mem_bytes=(8e9,) * D, est_flops=(1e9,) * D)
+    defaults.update(kw)
+    return MeasuredProfile(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# stale artifacts fall back analytic with a warning, never a crash
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_profile_stale_fingerprint_warns_not_crashes():
+    mp = _mp()                                 # config_hash "cfg0" != TINY's
+    table = _table()
+    with pytest.warns(UserWarning, match="stale or incompatible"):
+        prof = resolve_profile(mp, TINY, 16, table, max_batch=4)
+    assert prof is None                        # caller falls back analytic
+    # the caller's label and note make it into the warning text
+    with pytest.warns(UserWarning, match=r"profile p\.json.*\(env B\)"):
+        resolve_profile(mp, TINY, 16, table, max_batch=4,
+                        label="profile p.json", fallback_note=" (env B)")
+
+
+def test_resolve_profile_densify_error_also_falls_back():
+    # fingerprints match, but the layer table does not — to_profile's
+    # ProfileError must degrade to the same warning path
+    mp = _mp(config_hash=config_fingerprint(TINY, 16),
+             device_hash=device_fingerprint())
+    wrong = LayerTable("other", tuple(
+        LayerCost(f"x{i}", 1e6, 1e4, 1e3) for i in range(3)))
+    with pytest.warns(UserWarning, match="stale or incompatible"):
+        assert resolve_profile(mp, TINY, 16, wrong, max_batch=4) is None
+
+
+def test_resolve_profile_passthrough():
+    # a compatible artifact resolves (no warning), and None stays None
+    mp = _mp(config_hash=config_fingerprint(TINY, 16),
+             device_hash=device_fingerprint())
+    prof = resolve_profile(mp, TINY, 16, _table(), max_batch=4)
+    assert isinstance(prof, Profile) and prof.source == "measured"
+    assert resolve_profile(None, TINY, 16, _table(), max_batch=4) is None
+
+
+# ---------------------------------------------------------------------------
+# zero measured-time rows are rejected, not planned around
+# ---------------------------------------------------------------------------
+
+
+def test_measured_rejects_all_zero_sweep_row():
+    table = _table(L=2)
+    cluster = Cluster((JETSON_NANO, JETSON_NX))
+    ok = np.full((2, 5, 2), 1e-3)
+    Profile.measured(table, cluster, 4, ok, ok)        # sanity: accepted
+    bad = ok.copy()
+    bad[1, 2, :] = 0.0                                 # device 1, batch 2
+    with pytest.raises(ProfileError, match="zero measured-time row"):
+        Profile.measured(table, cluster, 4, bad, ok)
+    with pytest.raises(ProfileError, match="device 1 at batch 2"):
+        Profile.measured(table, cluster, 4, ok, bad)
+
+
+def test_measured_allows_zero_batch_zero_row():
+    # the batch-0 row means "zero samples" and is zero by construction —
+    # only batches >= 1 are checked
+    table = _table(L=2)
+    s = np.full((1, 5, 2), 1e-3)
+    s[0, 0, :] = 0.0
+    prof = Profile.measured(table, Cluster((JETSON_NANO,)), 4, s, s)
+    assert prof.t_fwd(0, 0, 0, table.L) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# gap of a repriced plan against its own reference is exactly zero
+# ---------------------------------------------------------------------------
+
+
+def test_gap_zero_after_repricing_and_reprice_idempotent():
+    table = _table(L=4)
+    analytic = Profile.analytic(table, Cluster((JETSON_NANO, JETSON_NX)),
+                                max_batch=8)
+    s = np.asarray([[b * 1e-3 * (l + 1) for l in range(4)]
+                    for b in range(9)])
+    measured = Profile.measured(table, Cluster((JETSON_NANO, JETSON_NX)), 8,
+                                np.stack([s, 0.7 * s]),
+                                np.stack([2.0 * s, 1.5 * s]))
+    plan = plan_hpp(analytic, 8, 2, arch="m")
+
+    once = reprice_plan(plan, measured)
+    twice = reprice_plan(once, measured)
+    assert twice.latency == once.latency               # exactly, not approx
+    gap = prediction_gap(once, measured)
+    assert gap["gap_ratio"] == 1.0                     # bit-exact
+    assert gap["predicted_s"] == gap["reference_s"]
+    # the analytically-priced plan genuinely mispredicts on this reference
+    # (so the == 1.0 above is not vacuous)
+    assert prediction_gap(plan, measured)["gap_ratio"] != 1.0
+
+    # the watchdog's quantity: observing exactly the repriced latency is
+    # exactly ratio 1
+    obs = observed_gap(plan, measured, once.latency)
+    assert obs["predicted_s"] == once.latency
+    assert obs["gap_ratio"] == 1.0

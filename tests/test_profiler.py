@@ -61,14 +61,17 @@ def test_measured_profile_path():
                                  batch_sizes=(1, 4), repeats=2)
     assert tf.shape == (2, 2) and tb.shape == (2, 2)
     assert (tf > 0).all() and (tb > 0).all()
-    # feed the measured samples into a Profile
+    # feed the measured samples into a Profile — the sweep covered batches
+    # {1, 4}, so interpolate the intermediate rows first: Profile.measured
+    # rejects all-zero rows (a zero row means a failed measurement, and
+    # would price that batch size as free)
     layers = tuple(LayerCost(f"l{i}", 1e6, 1e4, 1e3) for i in range(2))
     samples_f = np.zeros((1, 5, 2))
     samples_b = np.zeros((1, 5, 2))
-    samples_f[0, 1] = tf[0]
-    samples_f[0, 4] = tf[1]
-    samples_b[0, 1] = tb[0]
-    samples_b[0, 4] = tb[1]
+    for b in (1, 2, 3, 4):
+        w = (b - 1) / 3.0
+        samples_f[0, b] = (1 - w) * tf[0] + w * tf[1]
+        samples_b[0, b] = (1 - w) * tb[0] + w * tb[1]
     prof = Profile.measured(LayerTable("m", layers), Cluster((JETSON_NANO,)),
                             4, samples_f, samples_b)
     assert prof.t_fwd(0, 1, 0, 2) == pytest.approx(tf[0].sum(), rel=1e-6)

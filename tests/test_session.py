@@ -458,6 +458,36 @@ def test_membership_transition_flushes_stale_gradients():
     assert np.isfinite(loss)
 
 
+def test_install_itself_flushes_inflight_gradients():
+    """The membership paths flush at their own barrier, but rapid
+    back-to-back re-lowerings (the portfolio probation loop) reach
+    ``_install`` directly — the buffer computed under the OLD step's
+    sharding/bucketing must be applied by ``_install`` itself, never
+    carried across into the new step (the stale-buffer regression).  The
+    resulting state must match a twin that flushed explicitly first."""
+    cfg, session, ds = _membership_session(staleness=1)
+    _, twin, ds2 = _membership_session(staleness=1)
+    for s in range(2):
+        session.step(ds.batch(s, 8))
+        twin.step(ds2.batch(s, 8))
+    assert session._grad_buf is not None
+
+    twin.flush_gradients()
+    twin._install(twin.plan, twin.lowered)
+    session._install(session.plan, session.lowered)   # no explicit flush
+    assert session._grad_buf is None                  # _install flushed it
+
+    for ours, theirs in (
+            (session.params, twin.params),
+            (session.opt_state.m, twin.opt_state.m),
+            (session.opt_state.v, twin.opt_state.v)):
+        for a, b in zip(jax.tree.leaves(ours), jax.tree.leaves(theirs)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert int(session.opt_state.step) == int(twin.opt_state.step)
+    loss, _ = session.step(ds.batch(2, 8))
+    assert np.isfinite(loss)
+
+
 def test_elastic_membership_example():
     """The 4-host-device walkthrough (mid-training join with on-arrival
     profiling, graceful drain with direct streams, hysteresis rejection,

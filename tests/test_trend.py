@@ -58,6 +58,33 @@ def test_extract_metrics_groups_throughput_records():
     assert m["fig15a_runtime.tok_s"] == 4242.0
 
 
+def test_extract_metrics_per_model_series():
+    """Records carrying a ``model`` key get their own per-model series in
+    addition to the suite aggregate, so one architecture's regression
+    can't hide in the mean of the others."""
+    doc = {"suite": "throughput", "quick": True, "records": [
+        {"suite": "async_overlap", "kind": "measured", "model": "phi3_mini",
+         "tok_s_sync": 100.0, "measured_gain": 1.0},
+        {"suite": "async_overlap", "kind": "measured", "model": "rwkv6",
+         "tok_s_sync": 300.0, "measured_gain": 0.9},
+        {"suite": "profile_gap", "model": "phi3_mini_4k",
+         "planned_on": "measured", "predicted_s": 0.5},
+        {"suite": "profile_gap", "predicted_s": 0.7},   # legacy, no model
+    ]}
+    m = extract_metrics(doc)
+    # plain aggregates survive (legacy series keeps its history)
+    assert m["async_overlap.tok_s_sync"] == pytest.approx(200.0)
+    assert m["profile_gap.predicted_s"] == pytest.approx(0.6)
+    # per-model series picked up automatically from the model key
+    assert m["async_overlap.phi3_mini.tok_s_sync"] == 100.0
+    assert m["async_overlap.rwkv6.tok_s_sync"] == 300.0
+    assert m["async_overlap.rwkv6.measured_gain"] == 0.9
+    assert m["profile_gap.phi3_mini_4k.predicted_s"] == 0.5
+    # the model-less legacy record contributes only to the aggregate —
+    # no empty-model group appears
+    assert "profile_gap..predicted_s" not in m
+
+
 def test_check_passes_within_threshold_and_fails_beyond():
     base = extract_metrics(_fault_doc())
     ok = extract_metrics(_fault_doc(churn_tput=128.0 * 0.95))
